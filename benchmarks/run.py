@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark and a final
+PASS/FAIL summary line per module.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table2     # one
+"""
+import importlib
+import sys
+
+MODULES = [
+    "figure1_schedule",     # paper Fig. 1: AUC gaps 5.28 / 1.91
+    "table1_hparams",       # paper Table 1: stage hyper-parameters
+    "table2_convergence",   # paper Table 2: LANS vs LAMB at hostile LR
+    "sharding_variance",    # paper §3.4: sampling variance bounds
+    "ablation_lans",        # beyond-paper: eq(4)/eq(7) component ablation
+    "kernel_throughput",    # apex fused_lans analogue (Pallas pipeline)
+    "roofline_report",      # assignment §Roofline aggregation
+]
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or MODULES
+    failures = []
+    print("name,us_per_call,derived")
+    for name in wanted:
+        name = name.replace("benchmarks.", "")
+        mod = importlib.import_module(f"benchmarks.{name}")
+        try:
+            rows, ok = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/EXCEPTION,0,{type(e).__name__}: {e}")
+            failures.append(name)
+            continue
+        for rname, us, derived in rows:
+            print(f'{rname},{us:.1f},"{derived}"')
+        status = "PASS" if ok else "FAIL"
+        print(f"{name}/STATUS,0,{status}")
+        if not ok:
+            failures.append(name)
+    if failures:
+        print(f"SUMMARY,0,FAILED: {failures}")
+        raise SystemExit(1)
+    print("SUMMARY,0,ALL PASS")
+
+
+if __name__ == "__main__":
+    main()

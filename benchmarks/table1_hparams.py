@@ -1,0 +1,33 @@
+"""Table 1 reproduction: the stage hyper-parameters and derived step counts.
+
+Verifies ratio_warmup + ratio_const = 70% / 30% and that the generated
+schedules integrate to the same totals the paper trains with.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedules import paper_stage_schedules, schedule_auc
+
+
+def run():
+    t0 = time.perf_counter()
+    s1, s2 = paper_stage_schedules()
+    rows = []
+    for st in (s1, s2):
+        sched = st.schedule()
+        vals = np.asarray(jax.vmap(sched)(jnp.arange(st.total_steps)))
+        rows.append((
+            f"table1/{st.name}", (time.perf_counter() - t0) * 1e6,
+            f"eta={st.eta} warmup={st.warmup_steps} const={st.hold_steps} "
+            f"T={st.total_steps} max={vals.max():.5f} auc={vals.sum():.2f}",
+        ))
+    total = s1.total_steps + s2.total_steps
+    rows.append(("table1/total_steps", 0.0,
+                 f"{total} (paper Table 2: 4301)"))
+    ok = (total == 4301
+          and abs(s1.ratio_warmup + s1.ratio_const - 0.70) < 1e-9
+          and abs(s2.ratio_warmup + s2.ratio_const - 0.30) < 1e-9)
+    return rows, ok

@@ -1,0 +1,82 @@
+"""Table 2 reproduction (CPU scale): LANS converges at a large-batch
+learning rate where LAMB degrades/diverges.
+
+The paper's Table 2: at batch 96K/33K (4301 steps), LAMB diverges while
+LANS reaches F1 90.60. The scale-faithful analogue here: a reduced BERT
+on the synthetic MLM corpus with an aggressive eta — we report final
+losses for LANS vs LAMB under the identical schedule and data stream.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_arch
+from repro.core.optim import apply_updates, lamb, lans
+from repro.core.schedules import warmup_hold_decay
+from repro.data.corpus import SyntheticCorpus, mlm_batch_iterator
+from repro.data.sharding import ShardSpec
+
+STEPS = 25
+ETA = 0.2  # hostile: far above the stable LR for this toy setup
+
+
+def _run(tx, seed=0):
+    arch = reduced_arch("bert-large")
+    corpus = SyntheticCorpus(vocab=arch.cfg.vocab, num_docs=512, doc_len=256,
+                             seed=seed)
+    spec = ShardSpec(num_samples=512, num_workers=1, worker=0, seed=seed)
+    data = mlm_batch_iterator(corpus, spec, per_worker_batch=8, seq_len=64,
+                              seed=seed)
+    params = arch.init(jax.random.PRNGKey(seed))
+    st = tx.init(params)
+
+    @jax.jit
+    def step(params, st, batch):
+        (l, _), g = jax.value_and_grad(arch.loss_fn, has_aux=True)(params, batch)
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+        upd, st = tx.update(g, st, params)
+        return apply_updates(params, upd), st, l
+
+    losses = []
+    for _ in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, st, l = step(params, st, batch)
+        losses.append(float(l))
+    return losses
+
+
+def run():
+    """Directional claim, seed-averaged: at a hostile eta LANS stays finite
+    and accumulates no more loss than LAMB (10% tolerance). A 2-layer CPU
+    BERT cannot reproduce the paper's outright LAMB divergence, and single
+    seeds are noisy at this scale — hence 2 seeds + summed-loss ordering."""
+    sched = warmup_hold_decay(ETA, STEPS + 1, max(1, STEPS // 4),
+                              STEPS // 3)
+    t0 = time.perf_counter()
+    sums = {"lans": [], "lamb": []}
+    finite = {"lans": True, "lamb": True}
+    for seed in (0, 1):
+        for name, txf in (("lans", lans), ("lamb", lamb)):
+            losses = _run(txf(sched), seed=seed)
+            finite[name] &= bool(np.isfinite(losses).all())
+            sums[name].append(float(np.sum(np.minimum(losses, 1e4))))
+    dt = (time.perf_counter() - t0) * 1e6
+    lans_total = float(np.mean(sums["lans"]))
+    lamb_total = float(np.mean(sums["lamb"]))
+
+    rows = [
+        ("table2/lans_loss_sum", dt / 4,
+         f"{lans_total:.1f} over {STEPS} steps x 2 seeds @ eta={ETA} "
+         f"(finite={finite['lans']})"),
+        ("table2/lamb_loss_sum", dt / 4,
+         f"{lamb_total:.1f} over {STEPS} steps x 2 seeds @ eta={ETA} "
+         f"(finite={finite['lamb']})"),
+        ("table2/verdict", 0.0,
+         "LANS finite and no worse than LAMB under hostile LR"
+         if finite["lans"] and lans_total <= lamb_total * 1.10
+         else "UNEXPECTED"),
+    ]
+    ok = finite["lans"] and lans_total <= lamb_total * 1.10
+    return rows, ok

@@ -1,0 +1,71 @@
+"""Pytree checkpointing (npz-based; orbax is not available offline).
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json holding the treedef and
+dtypes. Arrays are gathered to host before writing (works under pjit: the
+caller is expected to pass addressable arrays or fully-replicated ones).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten_with_paths(tree: PyTree):
+    from repro.core.optim.base import tree_paths
+
+    paths = tree_paths(tree)
+    flat_paths = jax.tree_util.tree_leaves(paths)
+    flat_vals = jax.tree_util.tree_leaves(tree)
+    return flat_paths, flat_vals
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, *, metadata: Optional[dict] = None):
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    paths, vals = _flatten_with_paths(tree)
+    assert len(set(paths)) == len(paths), "duplicate param paths"
+    arrays = {p: np.asarray(v) for p, v in zip(paths, vals)}
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "paths": paths,
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (names must match)."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(src, "arrays.npz"))
+    paths, vals = _flatten_with_paths(like)
+    loaded = []
+    for p, v in zip(paths, vals):
+        if p not in data:
+            raise KeyError(f"checkpoint missing {p}")
+        arr = data[p]
+        if arr.shape != tuple(v.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != {tuple(v.shape)}")
+        loaded.append(jax.numpy.asarray(arr, dtype=v.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, loaded)

@@ -1,0 +1,36 @@
+"""grok-1-314b [moe] — 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2.  [hf:xai-org/grok-1]"""
+import jax.numpy as jnp
+
+from repro.configs.base import Arch
+from repro.models.decoder import DecoderConfig
+
+CONFIG = DecoderConfig(
+    name="grok-1-314b",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab=131072,
+    n_experts=8,
+    top_k=2,
+    activation="gelu",
+    gated_mlp=True,
+    superblock=(("attn", "moe"),),
+    max_seq=8192,
+    param_dtype=jnp.bfloat16,  # 314B: no fp32 master on 16GB chips (DESIGN.md)
+)
+
+ARCH = Arch(
+    name="grok-1-314b",
+    kind="decoder",
+    cfg=CONFIG,
+    source="hf:xai-org/grok-1",
+    zero3=True,
+    train_microbatches=8,  # traffic-vs-activation-memory balance (EXPERIMENTS.md iter 3)           # 314B params: FSDP over the data axis required
+    long_context_ok=False,  # full attention, no windowed variant
+    notes="MoE 8e top-2; experts < model axis (8 < 16) so the ff dim is "
+          "expert-sharded instead (see distributed/sharding.py).",
+)

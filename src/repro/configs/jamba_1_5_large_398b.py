@@ -1,0 +1,57 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16 experts top-2; Mamba:attention 7:1
+interleave with MoE every other layer.  [arXiv:2403.19887]
+
+Superblock of 8 (72 = 9 periods): attention at slot 0, Mamba at slots 1-7;
+MoE FFN on odd slots, dense FFN on even — the 1:7 ratio and every-other-
+layer MoE of the Jamba paper. Hardware adaptation note (DESIGN.md): Jamba
+uses Mamba-1 selective-scan blocks; this framework implements the Mamba-2
+SSD chunked form, which is the TPU/MXU-native formulation of the same
+selective-state-space computation.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import Arch
+from repro.models.decoder import DecoderConfig
+
+_PERIOD = (
+    ("attn", "mlp"),
+    ("mamba", "moe"),
+    ("mamba", "mlp"),
+    ("mamba", "moe"),
+    ("mamba", "mlp"),
+    ("mamba", "moe"),
+    ("mamba", "mlp"),
+    ("mamba", "moe"),
+)
+
+CONFIG = DecoderConfig(
+    name="jamba-1.5-large-398b",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab=65536,
+    n_experts=16,
+    top_k=2,
+    activation="silu",
+    mamba_d_inner=16384,
+    mamba_headdim=128,
+    mamba_dstate=128,
+    mamba_chunk=64,
+    superblock=_PERIOD,
+    max_seq=262144,
+    param_dtype=jnp.bfloat16,  # 398B: no fp32 master on 16GB chips (DESIGN.md)
+)
+
+ARCH = Arch(
+    name="jamba-1.5-large-398b",
+    kind="decoder",
+    cfg=CONFIG,
+    source="arXiv:2403.19887",
+    zero3=True,
+    train_microbatches=8,  # traffic-vs-activation-memory balance (EXPERIMENTS.md iter 3)
+    long_context_ok=True,   # mamba slots O(1)/token; 1-in-8 attn linear/token
+)

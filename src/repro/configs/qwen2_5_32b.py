@@ -1,0 +1,32 @@
+"""qwen2.5-32b [dense] — 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064; GQA with QKV bias.  [hf:Qwen/Qwen2.5-0.5B]"""
+import jax.numpy as jnp
+
+from repro.configs.base import Arch
+from repro.models.decoder import DecoderConfig
+
+CONFIG = DecoderConfig(
+    name="qwen2.5-32b",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    activation="silu",
+    superblock=(("attn", "mlp"),),
+    max_seq=32768,
+    param_dtype=jnp.bfloat16,  # no fp32 master at 32B on 16GB chips
+)
+
+ARCH = Arch(
+    name="qwen2.5-32b",
+    kind="decoder",
+    cfg=CONFIG,
+    source="hf:Qwen/Qwen2.5-0.5B",
+    zero1=True,  # ZeRO-1 (moments sharded) beats zero3 here: EXPERIMENTS.md iter 2
+    train_microbatches=16,
+)

@@ -1,0 +1,31 @@
+"""whisper-large-v3 [audio] — enc-dec, 32L (per stack) d_model=1280 20H
+(MHA: kv=20) d_ff=5120 vocab=51866; conv/mel frontend stubbed.
+[arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is the allowed STUB:
+input_specs() yields precomputed frame embeddings (B, 1500, 1280). The
+decode shapes stress the decoder backbone with KV caches far past the
+model card's 448-token form factor (documented in DESIGN.md).
+"""
+from repro.configs.base import Arch
+from repro.models.encdec import EncDecConfig
+
+CONFIG = EncDecConfig(
+    name="whisper-large-v3",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    n_frames=1500,
+    max_target=32768,   # stress config for the assigned decode shapes
+)
+
+ARCH = Arch(
+    name="whisper-large-v3",
+    kind="encdec",
+    cfg=CONFIG,
+    source="arXiv:2212.04356",
+    notes="encoder bidirectional over 1500 stub frame embeddings; "
+          "decode shapes exercise the decoder backbone only.",
+)

@@ -1,0 +1,2 @@
+"""Core contribution of the paper: LANS optimizer + large-batch LR schedules."""
+from repro.core import optim, schedules  # noqa: F401

@@ -1,0 +1,21 @@
+from repro.core.optim.base import (
+    GradientTransformation,
+    WeightDecayMask,
+    apply_updates,
+    chain,
+    identity,
+    scale,
+    scale_by_schedule,
+    tree_paths,
+)
+from repro.core.optim.adamw import adamw, bn_adamw, scale_by_adamw, sgd
+from repro.core.optim.lamb import LambState, lamb, scale_by_lamb
+from repro.core.optim.lans import LansState, lans, scale_by_lans
+
+__all__ = [
+    "GradientTransformation", "WeightDecayMask", "apply_updates", "chain",
+    "identity", "scale", "scale_by_schedule", "tree_paths",
+    "adamw", "bn_adamw", "scale_by_adamw", "sgd",
+    "LambState", "lamb", "scale_by_lamb",
+    "LansState", "lans", "scale_by_lans",
+]

@@ -1,0 +1,136 @@
+"""AdamW (Loshchilov & Hutter) and the paper's finetuning variant:
+AdamW + per-block gradient normalization (eq. 4) — "BN-AdamW".
+
+The paper uses plain AdamW with eq. (4) applied first for SQuAD finetuning.
+Also provides SGD with classic / Nesterov momentum (paper §2.2 eqs. 2-3),
+used in tests to verify the NAG identity that motivates LANS' momentum form.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.base import (
+    GradientTransformation,
+    WeightDecayMask,
+    bias_correction,
+    chain,
+    safe_div,
+    safe_norm,
+    scale_by_schedule,
+    tree_paths,
+)
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: jnp.ndarray
+    nu: jnp.ndarray
+
+
+def scale_by_adamw(
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    decay_mask: Optional[Callable[[str], bool]] = None,
+    block_normalize: bool = False,
+) -> GradientTransformation:
+    """AdamW direction; block_normalize=True applies paper eq. (4) first."""
+    mask_fn = decay_mask or WeightDecayMask()
+
+    def init_fn(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            count=jnp.zeros([], jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update_fn(updates, state, params):
+        if params is None:
+            raise ValueError("AdamW (decoupled decay) requires params.")
+        paths = tree_paths(params)
+        masks = jax.tree.map(lambda pth: bool(mask_fn(pth)), paths)
+        t = state.count + 1
+
+        def block(g, m, v, x, dm):
+            g = g.astype(jnp.float32)
+            if block_normalize:
+                g = safe_div(g, safe_norm(g))
+            m_new = beta1 * m + (1.0 - beta1) * g
+            v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+            m_hat = m_new / bias_correction(beta1, t)
+            v_hat = v_new / bias_correction(beta2, t)
+            d = m_hat / (jnp.sqrt(v_hat) + eps)
+            if dm:
+                d = d + weight_decay * x.astype(jnp.float32)
+            return d.astype(x.dtype), m_new, v_new
+
+        flat_g, treedef = jax.tree_util.tree_flatten(updates)
+        outs = [
+            block(g, m, v, x, dm)
+            for g, m, v, x, dm in zip(
+                flat_g,
+                treedef.flatten_up_to(state.mu),
+                treedef.flatten_up_to(state.nu),
+                treedef.flatten_up_to(params),
+                treedef.flatten_up_to(masks),
+            )
+        ]
+        new_d = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        return new_d, AdamWState(count=t, mu=new_m, nu=new_v)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def adamw(learning_rate, **kw) -> GradientTransformation:
+    sched = learning_rate if callable(learning_rate) else (
+        lambda _: jnp.asarray(learning_rate, jnp.float32))
+    return chain(scale_by_adamw(**kw), scale_by_schedule(sched))
+
+
+def bn_adamw(learning_rate, **kw) -> GradientTransformation:
+    """The paper's finetuning optimizer: AdamW + blockwise grad normalization."""
+    kw.setdefault("block_normalize", True)
+    return adamw(learning_rate, **kw)
+
+
+# ---------------------------------------------------------------------------
+# SGD with classic momentum (eqs. 2-3) and Nesterov momentum (paper §2.2).
+# ---------------------------------------------------------------------------
+
+class MomentumState(NamedTuple):
+    momentum: jnp.ndarray
+
+
+def scale_by_momentum(mu: float = 0.9, nesterov: bool = False) -> GradientTransformation:
+    def init_fn(params):
+        return MomentumState(jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        m_new = jax.tree.map(
+            lambda m, g: mu * m + g.astype(jnp.float32), state.momentum, updates)
+        if nesterov:
+            # x_{t+1} = x_t - eta (mu * m_t + g_t): the "future momentum" form.
+            d = jax.tree.map(lambda m, g: mu * m + g.astype(jnp.float32), m_new, updates)
+        else:
+            d = m_new
+        d = jax.tree.map(lambda dd, g: dd.astype(g.dtype), d, updates)
+        return d, MomentumState(m_new)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def sgd(learning_rate, mu: float = 0.0, nesterov: bool = False) -> GradientTransformation:
+    sched = learning_rate if callable(learning_rate) else (
+        lambda _: jnp.asarray(learning_rate, jnp.float32))
+    if mu == 0.0:
+        from repro.core.optim.base import identity
+        return chain(identity(), scale_by_schedule(sched))
+    return chain(scale_by_momentum(mu, nesterov), scale_by_schedule(sched))

@@ -1,0 +1,164 @@
+"""Minimal optax-style gradient-transformation API.
+
+optax is not available in this environment, so the framework ships its own
+composable transform layer with the same shape:
+
+    tx = chain(scale_by_lans(...), scale_by_schedule(sched))
+    state = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Transforms are pure pytree->pytree functions so they compose with jit/pjit
+and shard_map without special casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class GradientTransformation(NamedTuple):
+    """A pair of pure functions (init, update)."""
+
+    init: Callable[[PyTree], PyTree]
+    # update(grads, state, params) -> (updates, new_state)
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+class ScaleState(NamedTuple):
+    pass
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray  # int32 scalar
+
+
+def identity() -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def scale(step_size: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        updates = jax.tree.map(lambda u: step_size * u, updates)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransformation:
+    """Multiply updates by -schedule(count); increments count each step."""
+
+    def init_fn(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update_fn(updates, state, params=None):
+        del params
+        step = state.count
+        lr = schedule(step)
+        updates = jax.tree.map(lambda u: -lr * u, updates)
+        return updates, ScaleByScheduleState(count=step + 1)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init_fn(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update_fn(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params + updates, preserving param dtype (master-weight safe)."""
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared numeric helpers used by the concrete optimizers.
+# ---------------------------------------------------------------------------
+
+def tree_zeros_like(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def safe_norm(x: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
+    """l2 norm in fp32; returns max(norm, eps)."""
+    n = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    return jnp.maximum(n, eps)
+
+
+def safe_div(num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
+    """num/den with den==0 -> 0 (blockwise normalization of a zero block)."""
+    return jnp.where(den > 0.0, num / jnp.maximum(den, 1e-38), jnp.zeros_like(num))
+
+
+def bias_correction(decay: float, count: jnp.ndarray) -> jnp.ndarray:
+    """1 - decay**t computed in fp32 for a (1-indexed) step count."""
+    return 1.0 - jnp.power(jnp.asarray(decay, jnp.float32), count.astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightDecayMask:
+    """Predicate over pytree paths selecting params that receive weight decay.
+
+    The paper (following BERT/LAMB practice) excludes LayerNorm scales and
+    biases from decay and from the trust-ratio rescaling (phi == 1 for them).
+    """
+
+    exclude_substrings: Sequence[str] = ("bias", "layernorm", "ln_", "norm", "scale_param")
+
+    def __call__(self, path: str) -> bool:
+        lowered = path.lower()
+        return not any(s in lowered for s in self.exclude_substrings)
+
+
+def tree_paths(params: PyTree) -> PyTree:
+    """Pytree of '/'-joined key paths, same structure as params."""
+
+    def _name(entry) -> str:
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+        if isinstance(entry, jax.tree_util.SequenceKey):
+            return str(entry.idx)
+        return str(entry)
+
+    paths_and_vals, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = ["/".join(_name(k) for k in path) for path, _ in paths_and_vals]
+    return jax.tree_util.tree_unflatten(treedef, paths)

@@ -1,0 +1,143 @@
+"""LAMB — Algorithm 1 (You et al., ICLR 2020), the paper's primary baseline.
+
+Kept faithful to the listing reproduced in the LANS paper:
+
+    m_t = b1*m + (1-b1)*g          v_t = b2*v + (1-b2)*g^2
+    r_t = m~_t / (sqrt(v~_t) + eps)
+    x  <- x - eta_t * phi(||x||) / ||r_t + lam*x|| * (r_t + lam*x)
+
+Shares the block conventions of lans.py (block == parameter tensor; bias /
+norm blocks get phi == 1, no decay, no trust normalization).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.base import (
+    GradientTransformation,
+    WeightDecayMask,
+    bias_correction,
+    safe_norm,
+    tree_paths,
+)
+
+
+class LambState(NamedTuple):
+    count: jnp.ndarray
+    mu: jnp.ndarray
+    nu: jnp.ndarray
+
+
+def _lamb_block_update(
+    g, m, v, x, *, count, beta1, beta2, eps, weight_decay, decay_this_block,
+    phi_clip=None, grad_clip_norm=None, global_grad_norm=None,
+):
+    g = g.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    lam = weight_decay if decay_this_block else 0.0
+
+    # LAMB (unlike LANS) needs global gradient clipping for stability.
+    if grad_clip_norm is not None and global_grad_norm is not None:
+        clip = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(global_grad_norm, 1e-12))
+        g = g * clip
+
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+
+    t = count + 1
+    m_hat = m_new / bias_correction(beta1, t)
+    v_hat = v_new / bias_correction(beta2, t)
+
+    r = m_hat / (jnp.sqrt(v_hat) + eps)
+    u = r + lam * x32
+
+    x_norm = safe_norm(x32)
+    phi = x_norm if phi_clip is None else jnp.clip(x_norm, phi_clip[0], phi_clip[1])
+    u_norm = safe_norm(u)
+    trust = jnp.where(u_norm > 0, phi / jnp.maximum(u_norm, 1e-38), 1.0)
+    if not decay_this_block:
+        trust = jnp.ones_like(trust)
+
+    d = trust * u
+    return d.astype(x.dtype), m_new, v_new
+
+
+def scale_by_lamb(
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    decay_mask: Optional[Callable[[str], bool]] = None,
+    phi_clip: Optional[tuple] = None,
+    grad_clip_norm: Optional[float] = 1.0,
+) -> GradientTransformation:
+    mask_fn = decay_mask or WeightDecayMask()
+
+    def init_fn(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return LambState(
+            count=jnp.zeros([], jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update_fn(updates, state, params):
+        if params is None:
+            raise ValueError("LAMB requires params.")
+        paths = tree_paths(params)
+        masks = jax.tree.map(lambda pth: bool(mask_fn(pth)), paths)
+
+        global_norm = None
+        if grad_clip_norm is not None:
+            sq = sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(updates)
+            )
+            global_norm = jnp.sqrt(sq)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(updates)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_x = treedef.flatten_up_to(params)
+        flat_mask = treedef.flatten_up_to(masks)
+
+        outs = [
+            _lamb_block_update(
+                g, m, v, x,
+                count=state.count, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=weight_decay, decay_this_block=dm,
+                phi_clip=phi_clip, grad_clip_norm=grad_clip_norm,
+                global_grad_norm=global_norm,
+            )
+            for g, m, v, x, dm in zip(flat_g, flat_m, flat_v, flat_x, flat_mask)
+        ]
+        new_d = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        return new_d, LambState(count=state.count + 1, mu=new_m, nu=new_v)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def lamb(
+    learning_rate,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    decay_mask: Optional[Callable[[str], bool]] = None,
+    phi_clip: Optional[tuple] = None,
+    grad_clip_norm: Optional[float] = 1.0,
+) -> GradientTransformation:
+    from repro.core.optim.base import chain, scale_by_schedule
+
+    sched = learning_rate if callable(learning_rate) else (
+        lambda _: jnp.asarray(learning_rate, jnp.float32))
+    return chain(
+        scale_by_lamb(beta1, beta2, eps, weight_decay, decay_mask, phi_clip,
+                      grad_clip_norm),
+        scale_by_schedule(sched),
+    )

@@ -1,0 +1,210 @@
+"""LANS — the paper's Algorithm 2.
+
+Differences from LAMB (Algorithm 1), per paper §3:
+
+  1. Per-block gradient normalization (eq. 4):
+         g~_b = g_b / ||g_b||_2
+     applied BEFORE the Adam moment updates. Gradient clipping becomes
+     unnecessary (the update direction is invariant to the gradient scale of
+     each block).
+
+  2. Nesterov-style update (eq. 7): convex combination of two separately
+     normalized directions,
+         d_b = phi(||x_b||) * [ beta1   * (r_b + lam*x_b)/||r_b + lam*x_b||
+                              + (1-b1)  * (c_b + lam*x_b)/||c_b + lam*x_b|| ]
+     with r_b = m~_b / (sqrt(v~_b) + eps) the bias-corrected trust direction
+     and  c_b = g~_b / (sqrt(v~_b) + eps) the momentum-free direction.
+     The 1/(1-beta1^t) bias-correction is deliberately NOT applied to c_b
+     (paper drops it to avoid a bias toward g when lam > 0).
+
+A "block" follows the paper's definition: one parameter tensor (leaf of the
+pytree). Under pjit/SPMD, the per-block sums-of-squares lower to partial
+reductions + all-reduce automatically, so this implementation is correct for
+sharded parameters (ZeRO/FSDP) with no special casing.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.base import (
+    GradientTransformation,
+    Schedule,
+    WeightDecayMask,
+    bias_correction,
+    safe_div,
+    safe_norm,
+    tree_paths,
+)
+
+
+class LansState(NamedTuple):
+    count: jnp.ndarray  # int32, number of completed steps
+    mu: jnp.ndarray  # first moment pytree (fp32)
+    nu: jnp.ndarray  # second moment pytree (fp32)
+
+
+def _lans_block_update(
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    count: jnp.ndarray,
+    beta1: float,
+    beta2: float,
+    eps: float,
+    weight_decay: float,
+    decay_this_block: bool,
+    phi_clip: Optional[tuple] = None,
+    normalize_grads: bool = True,
+    nesterov: bool = True,
+):
+    """One LANS step for a single block. Returns (direction, new_m, new_v).
+
+    ``direction`` is the positive step d_t; caller applies x <- x - eta*d.
+    All math in fp32 regardless of input dtypes.
+    """
+    g = g.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    mu_dtype = m.dtype
+    m = m.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lam = weight_decay if decay_this_block else 0.0
+
+    # eq. (4): blockwise gradient normalization.
+    if normalize_grads:
+        g_norm = safe_norm(g)
+        g_tilde = safe_div(g, g_norm)
+    else:
+        g_tilde = g
+
+    # Adam moments on the normalized gradient.
+    m_new = beta1 * m + (1.0 - beta1) * g_tilde
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g_tilde)
+
+    # Bias corrections (count is the completed-steps counter; this step is t=count+1).
+    t = count + 1
+    m_hat = m_new / bias_correction(beta1, t)
+    v_hat = v_new / bias_correction(beta2, t)
+
+    denom = jnp.sqrt(v_hat) + eps
+    r = m_hat / denom                     # trust direction (with momentum)
+    c = g_tilde / denom                   # momentum-free direction (no 1/(1-b1^t))
+
+    r_full = r + lam * x32
+    c_full = c + lam * x32
+
+    # phi(||x||): identity, optionally clipped (LAMB practice allows clamping).
+    x_norm = safe_norm(x32)
+    phi = x_norm
+    if phi_clip is not None:
+        phi = jnp.clip(phi, phi_clip[0], phi_clip[1])
+    # For blocks excluded from trust scaling (biases / norms), phi -> 1 and the
+    # normalization is skipped: fall back to the inner Adam-style direction.
+    r_n = safe_norm(r_full)
+    c_n = safe_norm(c_full)
+    scale_r = jnp.where(r_n > 0, phi / jnp.maximum(r_n, 1e-38), 1.0)
+    scale_c = jnp.where(c_n > 0, phi / jnp.maximum(c_n, 1e-38), 1.0)
+    if not decay_this_block:
+        # paper/LAMB practice: phi==1 and no trust normalization for bias/LN blocks.
+        scale_r = jnp.ones_like(scale_r)
+        scale_c = jnp.ones_like(scale_c)
+
+    if nesterov:
+        d = beta1 * scale_r * r_full + (1.0 - beta1) * scale_c * c_full
+    else:
+        d = scale_r * r_full   # classic-momentum LAMB-style update
+    return d.astype(x.dtype), m_new.astype(mu_dtype), v_new.astype(mu_dtype)
+
+
+def scale_by_lans(
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    decay_mask: Optional[Callable[[str], bool]] = None,
+    phi_clip: Optional[tuple] = None,
+    mu_dtype=jnp.float32,
+    normalize_grads: bool = True,
+    nesterov: bool = True,
+) -> GradientTransformation:
+    """LANS direction transform (Algorithm 2, without the -eta_t factor).
+
+    mu_dtype: storage dtype of the moments (bf16 halves optimizer memory for
+    the 314B/398B archs; math is always fp32 — documented deviation).
+    normalize_grads / nesterov: ablation switches for the paper's two
+    components (eq. 4 blockwise normalization; eq. 7 Nesterov-style
+    convex-combination update). Both True == Algorithm 2; both False is
+    LAMB-without-clipping (benchmarks/ablation_lans.py).
+    """
+    mask_fn = decay_mask or WeightDecayMask()
+
+    def init_fn(params):
+        zeros = lambda p: jnp.zeros(p.shape, mu_dtype)
+        return LansState(
+            count=jnp.zeros([], jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update_fn(updates, state, params):
+        if params is None:
+            raise ValueError("LANS requires params (trust-ratio + weight decay).")
+        paths = tree_paths(params)
+        masks = jax.tree.map(lambda pth: bool(mask_fn(pth)), paths)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(updates)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_x = treedef.flatten_up_to(params)
+        flat_mask = treedef.flatten_up_to(masks)
+
+        outs = [
+            _lans_block_update(
+                g, m, v, x,
+                count=state.count,
+                beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=weight_decay,
+                decay_this_block=dm,
+                phi_clip=phi_clip,
+                normalize_grads=normalize_grads,
+                nesterov=nesterov,
+            )
+            for g, m, v, x, dm in zip(flat_g, flat_m, flat_v, flat_x, flat_mask)
+        ]
+        new_d = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        return new_d, LansState(count=state.count + 1, mu=new_m, nu=new_v)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def lans(
+    learning_rate,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    decay_mask: Optional[Callable[[str], bool]] = None,
+    phi_clip: Optional[tuple] = None,
+    mu_dtype=jnp.float32,
+    normalize_grads: bool = True,
+    nesterov: bool = True,
+) -> GradientTransformation:
+    """Full LANS optimizer: direction transform x (-eta_t)."""
+    from repro.core.optim.base import chain, scale, scale_by_schedule
+
+    sched: Schedule
+    if callable(learning_rate):
+        sched = learning_rate
+    else:
+        sched = lambda _: jnp.asarray(learning_rate, jnp.float32)
+    return chain(
+        scale_by_lans(beta1, beta2, eps, weight_decay, decay_mask, phi_clip,
+                      mu_dtype, normalize_grads, nesterov),
+        scale_by_schedule(sched),
+    )

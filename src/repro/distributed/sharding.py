@@ -1,0 +1,208 @@
+"""Partition-spec rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+"pod" is an outer pure-data-parallel axis (the paper's scale-out pattern);
+batch dims shard over ("pod", "data") jointly.
+
+Parameter rules (path-keyword driven, rank-aware, with stacked-layer leading
+dims skipped automatically):
+
+  embeddings   (V, d)          -> vocab over model
+  wq/wk/wv     (d, heads*hd)   -> columns over model
+  wo           (heads*hd, d)   -> rows over model
+  mlp up/gate  (d, f)          -> columns over model;  down: rows over model
+  moe experts  (E, din, dout)  -> experts over model (fallback: ff dim when
+                                  E % model_size != 0 — granite's 40, grok's 8)
+  mamba in/out projections     -> inner dim over model
+  1-D params (biases, norms, A_log, ...) -> replicated
+
+FSDP (zero3=True): additionally shard the largest remaining eligible dim
+over "data" — required for grok-1 (314B) and jamba (398B) to fit 16 GB HBM.
+
+KV caches: (layers, B, L, kv, hd) -> batch over data, head_dim over model
+(contracting-dim sharding; SPMD inserts the psum). SSM states: dstate over
+model.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.optim.base import tree_paths
+
+PyTree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, *, zero3: bool = False,
+               n_stack_dims: int = 0) -> P:
+    """PartitionSpec for one parameter tensor.
+
+    n_stack_dims: leading stacked-layer dims (scan over periods) left unsharded.
+    """
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    low = path.lower()
+    core_shape = shape[n_stack_dims:]
+    rank = len(core_shape)
+    spec = [None] * rank
+
+    def put(axis_idx: int, name: str) -> bool:
+        if spec[axis_idx] is None and _divisible(core_shape[axis_idx],
+                                                 _axis_size(mesh, name)):
+            spec[axis_idx] = name
+            return True
+        return False
+
+    if rank >= 2:
+        is_expert_stack = rank == 3 and ("up" in low or "down" in low or
+                                         "gate" in low)
+        if is_expert_stack:
+            # (E, din, dout): experts over model, else the ff dim.
+            if not put(0, "model"):
+                ff_axis = 2 if "up" in low or "gate" in low else 1
+                put(ff_axis, "model")
+        elif "embed" in low or "lm_head" in low or "mlm" in low:
+            # (V, d) embedding tables / (d, V) heads: shard the vocab dim.
+            v_axis = int(np.argmax(core_shape))
+            put(v_axis, "model")
+        elif any(k in low for k in ("wq", "wk", "wv", "up", "gate", "in_proj",
+                                    "router", "pooler", "nsp", "transform")):
+            put(rank - 1, "model")            # column parallel
+        elif any(k in low for k in ("wo", "down", "out_proj")):
+            put(rank - 2, "model")            # row parallel
+        else:
+            put(int(np.argmax(core_shape)), "model")
+
+        if zero3:
+            # FSDP/ZeRO: shard the largest remaining dim over the FULL
+            # data-parallel extent (pod x data when a pod axis exists) —
+            # data-only sharding replicated optimizer state across pods and
+            # regressed qwen32 pod2 collectives 11x (EXPERIMENTS iter 5).
+            psize = _axis_size(mesh, "pod")
+            candidates = ([("pod", "data"), "data"] if psize > 1
+                          else ["data"])
+            order = list(np.argsort(core_shape))[::-1]
+            done = False
+            for axes in candidates:
+                if done:
+                    break
+                size = (psize * dsize if isinstance(axes, tuple) else dsize)
+                for ax in order:
+                    if spec[ax] is None and _divisible(core_shape[ax], size):
+                        spec[ax] = axes
+                        done = True
+                        break
+    # rank 0/1: replicated.
+    return P(*([None] * n_stack_dims + spec))
+
+
+def _stack_dims_for(path: str) -> int:
+    low = path.lower()
+    if low.startswith(("slot", "enc_layers", "dec_layers", "layers")):
+        return 1
+    return 0
+
+
+def params_pspec(params: PyTree, mesh: Mesh, *, zero3: bool = False) -> PyTree:
+    paths = tree_paths(params)
+    return jax.tree.map(
+        lambda pth, v: param_spec(pth, tuple(v.shape), mesh, zero3=zero3,
+                                  n_stack_dims=_stack_dims_for(pth)),
+        paths, params)
+
+
+def params_sharding(params: PyTree, mesh: Mesh, *, zero3: bool = False) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspec(params, mesh, zero3=zero3))
+
+
+def opt_state_pspec(opt_state: PyTree, params_spec: PyTree,
+                    moments_spec: PyTree = None) -> PyTree:
+    """Optimizer moments inherit their parameter's spec; counters replicate.
+
+    moments_spec overrides the moment sharding — pass a zero3-style spec
+    for ZeRO-1 (optimizer-state sharding over "data" while weights stay
+    only model-sharded; see EXPERIMENTS.md §Perf iteration 2).
+
+    Works for the (LansState | LambState | AdamWState | FusedState, sched)
+    chain states used across this repo: any leaf whose subtree path starts
+    with mu/nu mirrors params.
+    """
+    mspec = moments_spec if moments_spec is not None else params_spec
+    out = []
+    for comp in opt_state:
+        if hasattr(comp, "_fields") and set(comp._fields) >= {"mu", "nu"}:
+            replaced = comp._replace(
+                count=P(),
+                mu=jax.tree.map(lambda s: s, mspec),
+                nu=jax.tree.map(lambda s: s, mspec))
+            out.append(replaced)
+        elif hasattr(comp, "_fields") and "momentum" in comp._fields:
+            out.append(comp._replace(momentum=jax.tree.map(lambda s: s, mspec)))
+        else:
+            out.append(jax.tree.map(lambda _: P(), comp))
+    return tuple(out)
+
+
+def batch_pspec(batch: PyTree, mesh: Mesh) -> PyTree:
+    """Shard the leading (batch) dim of every input over (pod, data)."""
+    baxes = batch_axes(mesh)
+
+    def spec(v):
+        if v.ndim == 0:
+            return P()
+        bsize = int(np.prod([_axis_size(mesh, a) for a in baxes]))
+        if v.shape[0] % bsize == 0:
+            return P(baxes, *([None] * (v.ndim - 1)))
+        return P(*([None] * v.ndim))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspec(cache: PyTree, mesh: Mesh) -> PyTree:
+    """KV / SSM cache sharding for serving.
+
+    kv caches (layers, B, L, kv, hd): B over data (if divisible), hd over
+    model (contracting-dim sharding; exact under SPMD).
+    ssm states  (layers, B, H, N, P): B over data, N over model.
+    conv states (layers, B, W-1, C):  B over data, C over model.
+    """
+    dsize = _axis_size(mesh, "data")
+    msize = _axis_size(mesh, "model")
+    paths = tree_paths(cache)
+
+    def spec(pth, v):
+        low = pth.lower()
+        if v.ndim <= 1:
+            return P(*([None] * v.ndim))
+        s = [None] * v.ndim
+        # batch dim is axis 1 for stacked caches (axis 0 = layers)
+        b_ax = 1 if v.ndim >= 3 else 0
+        if _divisible(v.shape[b_ax], dsize):
+            s[b_ax] = "data"
+        if _divisible(v.shape[-1], msize):
+            s[-1] = "model"
+        return P(*s)
+
+    return jax.tree.map(spec, paths, cache)
+
+
+def constrain(tree: PyTree, mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        tree, spec_tree)

@@ -1,0 +1,131 @@
+"""Distributed train / prefill / serve step builders.
+
+Each builder returns a pure function suitable for `jax.jit(...,
+in_shardings=..., out_shardings=...)` under the production mesh, plus the
+sharding pytrees for its inputs/outputs. The same builders drive the real
+training loop (launch/train.py), the serving loop (launch/serve.py) and the
+multi-pod dry-run (launch/dryrun.py).
+
+Gradient accumulation: `microbatches > 1` runs a `lax.scan` over microbatch
+slices, averaging gradients in fp32 — how the 96K global batch is fed
+through a fixed device footprint, matching the paper's setup (96K sequences
+over 1536 workers = 62.5/worker, accumulated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.optim.base import apply_updates
+from repro.distributed import sharding as shd
+
+PyTree = Any
+
+
+class TrainStepBundle(NamedTuple):
+    init_fn: Callable            # rng -> (params, opt_state)
+    step_fn: Callable            # (params, opt_state, batch) -> (params, opt_state, metrics)
+    params_spec: PyTree
+    opt_spec: PyTree
+    batch_spec_fn: Callable      # batch pytree -> spec pytree
+
+
+def build_train_step(
+    loss_fn: Callable,           # (params, batch) -> (loss, aux_dict)
+    tx,                          # GradientTransformation
+    mesh: Mesh,
+    *,
+    microbatches: int = 1,
+    zero3: bool = False,
+    param_init_fn: Optional[Callable] = None,
+):
+    """Returns a TrainStepBundle. loss_fn must be pure and jit-able."""
+
+    def step_fn(params, opt_state, batch):
+        def grads_of(mb):
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return loss, aux, grads
+
+        if microbatches == 1:
+            loss, aux, grads = grads_of(batch)
+        else:
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda x: x.reshape((microbatches, -1) + x.shape[1:])[i]
+                    if x.ndim >= 1 else x, batch)
+
+            def body(carry, i):
+                acc, loss_acc = carry
+                loss, aux, grads = grads_of(slice_mb(i))
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), aux
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), auxs = jax.lax.scan(
+                body, (zero, 0.0), jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+            aux = jax.tree.map(lambda a: a[-1], auxs)
+
+        updates, new_opt = tx.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return new_params, new_opt, metrics
+
+    def init_fn(rng):
+        assert param_init_fn is not None
+        params = param_init_fn(rng)
+        return params, tx.init(params)
+
+    # sharding specs require a concrete/abstract params tree; caller supplies
+    # them lazily via specs_for.
+    def specs_for(params_like, opt_like):
+        pspec = shd.params_pspec(params_like, mesh, zero3=zero3)
+        ospec = shd.opt_state_pspec(opt_like, pspec)
+        return pspec, ospec
+
+    return step_fn, init_fn, specs_for
+
+
+def jit_train_step(step_fn, mesh: Mesh, pspec, ospec, batch_like):
+    bspec = shd.batch_pspec(batch_like, mesh)
+    metr = P()  # metrics replicated
+
+    def shardings(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return jax.jit(
+        step_fn,
+        in_shardings=(shardings(pspec), shardings(ospec), shardings(bspec)),
+        out_shardings=(shardings(pspec), shardings(ospec), None),
+    )
+
+
+def build_prefill_step(forward_with_cache: Callable, mesh: Mesh):
+    """forward_with_cache(params, batch) -> (logits_last, cache)."""
+    return forward_with_cache
+
+
+def build_serve_step(decode_fn: Callable, mesh: Mesh):
+    """decode_fn(params, tokens, cache) -> (next_tokens, new_cache).
+
+    One token per request with a KV/SSM cache — the decode_32k / long_500k
+    shapes lower exactly this function.
+    """
+    return decode_fn
+
+
+def greedy_next(logits):
+    """(B, 1, V) -> (B,) int32 greedy sample."""
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

@@ -1,0 +1,205 @@
+"""Pallas TPU kernels for the fused LANS optimizer step.
+
+TPU adaptation of the paper's apex `fused_lans` CUDA kernel. A CUDA fused
+optimizer interleaves block-wide reductions with elementwise math via
+grid-wide synchronization; Pallas/TPU has no grid-wide barrier, so the step
+is restructured into a 3-phase pipeline, each phase a `pl.pallas_call` tiled
+for VMEM with (8,128)-aligned blocks:
+
+  phase 0  sq_norm      : tiled sum-of-squares reduction  -> ||g||^2
+  phase 1  lans_phase1  : g~ = g/||g||, update m,v; emit partial
+                          sums-of-squares of (r+lam*x), (c+lam*x), x
+  phase 2  lans_phase2  : given the three norms, form the convex-combination
+                          direction d (paper eq. 7) and apply x <- x - eta*d
+
+Reductions use the sequential-grid accumulation idiom (output block mapped to
+(0,0) for every grid step, initialised at i==0). All arithmetic is fp32 in
+VREGs regardless of storage dtype; traced scalars (bias corrections, eta,
+flags) ride in a (1, 8) fp32 operand so the kernel needs no retracing across
+steps.
+
+Tile size: (256, 128) fp32 = 128 KiB; phase 1 holds 4 input + 2 output tiles
+(~0.75 MiB), far under the ~16 MiB v5e VMEM budget, leaving room for
+double-buffering by the pipeline emitter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 256
+LANES = 128
+
+
+def _guarded_inv(sq: jnp.ndarray, eps_floor: float = 1e-38) -> jnp.ndarray:
+    """1/sqrt(sq) with sq==0 -> 0 (normalizing an all-zero block)."""
+    return jnp.where(sq > 0.0, jax.lax.rsqrt(jnp.maximum(sq, eps_floor)), 0.0)
+
+
+def _guarded_scale(x: jnp.ndarray, sq: jnp.ndarray) -> jnp.ndarray:
+    """x / sqrt(sq), selecting 0 when sq is 0 or non-finite.
+
+    Select (not multiply): x * 0 would propagate NaN from a NaN gradient
+    block, whereas the reference optimizer (safe_div) zeroes it — the two
+    paths must agree bit-for-bit on NaN handling (tests/test_fused_integration).
+    """
+    inv = jax.lax.rsqrt(jnp.maximum(sq, 1e-38))
+    return jnp.where(sq > 0.0, x * inv, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------------------
+# phase 0: sum-of-squares reduction
+# ---------------------------------------------------------------------------
+
+def _sq_norm_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0, 0] += jnp.sum(x * x)
+
+
+def sq_norm(x2d: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Sum of squares of a (rows, 128) array, rows % TILE_ROWS == 0."""
+    rows, lanes = x2d.shape
+    assert lanes == LANES and rows % TILE_ROWS == 0, x2d.shape
+    grid = (rows // TILE_ROWS,)
+    out = pl.pallas_call(
+        _sq_norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+    return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# phase 1: moment update + partial norms
+# scalars layout: [bc1, bc2, eta, lam, trust_flag, g_sq, 0, 0]
+# ---------------------------------------------------------------------------
+
+def _lans_phase1_kernel(scal_ref, g_ref, m_ref, v_ref, x_ref,
+                        m_out, v_out, part_out, *, beta1, beta2, eps):
+    i = pl.program_id(0)
+
+    bc1 = scal_ref[0, 0]
+    bc2 = scal_ref[0, 1]
+    lam = scal_ref[0, 3]
+    g_sq = scal_ref[0, 5]
+
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+
+    g_t = _guarded_scale(g, g_sq)
+    m_new = beta1 * m + (1.0 - beta1) * g_t
+    v_new = beta2 * v + (1.0 - beta2) * (g_t * g_t)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+    denom = jnp.sqrt(v_new / bc2) + eps
+    r_full = (m_new / bc1) / denom + lam * x
+    c_full = g_t / denom + lam * x
+
+    @pl.when(i == 0)
+    def _init():
+        part_out[...] = jnp.zeros_like(part_out)
+
+    part_out[0, 0] += jnp.sum(r_full * r_full)
+    part_out[0, 1] += jnp.sum(c_full * c_full)
+    part_out[0, 2] += jnp.sum(x * x)
+
+
+def lans_phase1(scalars, g2d, m2d, v2d, x2d, *, beta1, beta2, eps,
+                interpret: bool = True):
+    rows, lanes = g2d.shape
+    assert lanes == LANES and rows % TILE_ROWS == 0
+    grid = (rows // TILE_ROWS,)
+    tile = pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0))
+    kern = functools.partial(_lans_phase1_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    m_new, v_new, partials = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),  # traced scalars
+            tile, tile, tile, tile,
+        ],
+        out_specs=[tile, tile, pl.BlockSpec((1, 8), lambda i: (0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((1, 8), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, g2d, m2d, v2d, x2d)
+    return m_new, v_new, partials
+
+
+# ---------------------------------------------------------------------------
+# phase 2: apply the update
+# scalars layout: [bc1, bc2, eta, lam, trust_flag, g_sq, r_sq+c_sq+x_sq via norms]
+# norms layout:   [r_sq, c_sq, x_sq, 0, 0, 0, 0, 0]
+# ---------------------------------------------------------------------------
+
+def _lans_phase2_kernel(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
+                        x_out, *, beta1, beta2, eps):
+    del beta2
+    bc1 = scal_ref[0, 0]
+    bc2 = scal_ref[0, 1]
+    eta = scal_ref[0, 2]
+    lam = scal_ref[0, 3]
+    trust_flag = scal_ref[0, 4]
+    g_sq = scal_ref[0, 5]
+
+    r_sq = norm_ref[0, 0]
+    c_sq = norm_ref[0, 1]
+    x_sq = norm_ref[0, 2]
+
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+
+    g_t = _guarded_scale(g, g_sq)
+    denom = jnp.sqrt(v / bc2) + eps
+    r_full = (m / bc1) / denom + lam * x
+    c_full = g_t / denom + lam * x
+
+    x_norm = jnp.sqrt(x_sq)
+    sr = jnp.where(r_sq > 0.0, x_norm * _guarded_inv(r_sq), 1.0)
+    sc = jnp.where(c_sq > 0.0, x_norm * _guarded_inv(c_sq), 1.0)
+    sr = jnp.where(trust_flag > 0.0, sr, 1.0)
+    sc = jnp.where(trust_flag > 0.0, sc, 1.0)
+
+    d = beta1 * sr * r_full + (1.0 - beta1) * sc * c_full
+    x_out[...] = (x - eta * d).astype(x_out.dtype)
+
+
+def lans_phase2(scalars, norms, g2d, m2d, v2d, x2d, *, beta1, beta2, eps,
+                interpret: bool = True):
+    rows, lanes = g2d.shape
+    assert lanes == LANES and rows % TILE_ROWS == 0
+    grid = (rows // TILE_ROWS,)
+    tile = pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0))
+    kern = functools.partial(_lans_phase2_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            tile, tile, tile, tile,
+        ],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), x2d.dtype),
+        interpret=interpret,
+    )(scalars, norms, g2d, m2d, v2d, x2d)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the fused optimizer kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(tests/test_kernels.py sweeps shapes & dtypes with assert_allclose).
+Single-tensor, fp32-internal, mirrors repro.core.optim exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class StepOut(NamedTuple):
+    x: jnp.ndarray
+    m: jnp.ndarray
+    v: jnp.ndarray
+
+
+def _norm(x):
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def lans_step_ref(
+    g, m, v, x, *, eta, beta1=0.9, beta2=0.999, eps=1e-6, lam=0.01,
+    step=1, apply_trust=True,
+) -> StepOut:
+    """One LANS block update (paper Algorithm 2), t = ``step`` (1-indexed)."""
+    g = g.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+
+    g_norm = _norm(g)
+    g_t = jnp.where(g_norm > 0, g / jnp.maximum(g_norm, 1e-38), jnp.zeros_like(g))
+
+    m_new = beta1 * m + (1 - beta1) * g_t
+    v_new = beta2 * v + (1 - beta2) * jnp.square(g_t)
+
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    denom = jnp.sqrt(v_new / bc2) + eps
+    r = (m_new / bc1) / denom
+    c = g_t / denom
+
+    r_full = r + lam * x32
+    c_full = c + lam * x32
+
+    if apply_trust:
+        x_norm = _norm(x32)
+        rn, cn = _norm(r_full), _norm(c_full)
+        sr = jnp.where(rn > 0, x_norm / jnp.maximum(rn, 1e-38), 1.0)
+        sc = jnp.where(cn > 0, x_norm / jnp.maximum(cn, 1e-38), 1.0)
+    else:
+        sr = sc = jnp.float32(1.0)
+
+    d = beta1 * sr * r_full + (1 - beta1) * sc * c_full
+    x_new = (x32 - eta * d).astype(x.dtype)
+    return StepOut(x_new, m_new, v_new)
+
+
+def lamb_step_ref(
+    g, m, v, x, *, eta, beta1=0.9, beta2=0.999, eps=1e-6, lam=0.01,
+    step=1, apply_trust=True,
+) -> StepOut:
+    """One LAMB block update (Algorithm 1); global clip handled by caller."""
+    g = g.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+
+    m_new = beta1 * m + (1 - beta1) * g
+    v_new = beta2 * v + (1 - beta2) * jnp.square(g)
+
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    r = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    u = r + lam * x32
+
+    if apply_trust:
+        x_norm = _norm(x32)
+        un = _norm(u)
+        trust = jnp.where(un > 0, x_norm / jnp.maximum(un, 1e-38), 1.0)
+    else:
+        trust = jnp.float32(1.0)
+
+    x_new = (x32 - eta * trust * u).astype(x.dtype)
+    return StepOut(x_new, m_new, v_new)
+
+
+def sq_norm_ref(x) -> jnp.ndarray:
+    """Sum of squares (fp32) — oracle for the reduction kernel."""
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))

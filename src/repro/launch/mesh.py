@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+Single pod:  (data=16, model=16)           = 256 chips  (TPU v5e pod slice)
+Multi-pod:   (pod=2, data=16, model=16)    = 512 chips; "pod" is a pure
+data-parallel axis whose gradient all-reduce crosses DCN — the paper's
+scale-out pattern (192 instances x 8 GPUs ~ outer DP axis over EFA).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked at first jax init, and only
+dryrun.py forces 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(*, data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist locally (tests / CPU examples)."""
+    return _mk((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link (~ per-chip usable)
+HBM_BYTES = 16 * 1024**3       # 16 GiB

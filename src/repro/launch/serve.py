@@ -1,0 +1,43 @@
+"""Serving launcher: batched greedy decoding against a reduced arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced_arch
+from repro.serving.engine import Request, ServeEngine, throughput_probe
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = reduced_arch(args.arch) if args.reduced else get_arch(args.arch)
+    if arch.kind == "bert":
+        raise SystemExit("bert-large is encoder-only: no decode step")
+    params = arch.init(jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(arch, params,
+                         max_len=args.prompt_len + args.new_tokens)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(prompt=rng.integers(
+                5, arch.cfg.vocab, size=args.prompt_len).astype(np.int32),
+                max_new_tokens=args.new_tokens)
+            for _ in range(args.batch)]
+    stats = throughput_probe(engine, reqs)
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Training launcher — runs real steps on local devices.
+
+On this CPU container it trains the REDUCED configs (or bert-large at a
+small size) end-to-end with the paper's full recipe: LANS + warmup-hold-
+decay schedule + sharded-without-replacement data. On TPU the same entry
+point scales to the production mesh (--mesh production).
+
+  PYTHONPATH=src python -m repro.launch.train --arch bert-large --steps 50 \
+      --batch 32 --seq 128 --optimizer lans
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save as ckpt_save
+from repro.configs import get_arch, reduced_arch
+from repro.core.optim import adamw, apply_updates, lamb, lans
+from repro.core.schedules import warmup_hold_decay, warmup_linear_decay
+from repro.data.corpus import SyntheticCorpus, lm_batch_iterator, mlm_batch_iterator
+from repro.data.sharding import ShardSpec
+
+
+def make_optimizer(name: str, schedule, **kw):
+    return {"lans": lans, "lamb": lamb, "adamw": adamw}[name](schedule, **kw)
+
+
+def make_data(arch, *, batch: int, seq: int, num_workers: int = 1, seed: int = 0):
+    """Sharded-without-replacement stream (paper §3.4), worker 0 view."""
+    corpus = SyntheticCorpus(vocab=arch.cfg.vocab, num_docs=4096,
+                             doc_len=max(2 * seq + 2, 256), seed=seed)
+    spec = ShardSpec(num_samples=corpus.num_docs, num_workers=num_workers,
+                     worker=0, seed=seed)
+    if arch.kind == "bert":
+        return mlm_batch_iterator(corpus, spec, per_worker_batch=batch,
+                                  seq_len=seq, seed=seed)
+    if arch.kind == "encdec":
+        rng = np.random.default_rng(seed)
+        def gen():
+            it = lm_batch_iterator(corpus, spec, per_worker_batch=batch,
+                                   seq_len=seq)
+            for b in it:
+                yield {"frames": rng.normal(
+                           size=(batch, arch.cfg.n_frames, arch.cfg.d_model)
+                       ).astype(np.float32),
+                       "tokens": b["tokens"], "labels": b["labels"]}
+        return gen()
+    if arch.embeds_input:
+        rng = np.random.default_rng(seed)
+        def gen():
+            it = lm_batch_iterator(corpus, spec, per_worker_batch=batch,
+                                   seq_len=seq)
+            for b in it:
+                yield {"embeds": rng.normal(
+                           size=(batch, seq, arch.cfg.d_model)
+                       ).astype(np.float32) * 0.02,
+                       "labels": b["labels"]}
+        return gen()
+    return lm_batch_iterator(corpus, spec, per_worker_batch=batch, seq_len=seq)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--optimizer", default="lans",
+                    choices=["lans", "lamb", "adamw"])
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--schedule", default="hold",
+                    choices=["hold", "linear", "const"])
+    ap.add_argument("--warmup-frac", type=float, default=0.2)
+    ap.add_argument("--hold-frac", type=float, default=0.3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--metrics", default="", help="JSONL metrics path")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = reduced_arch(args.arch) if args.reduced else get_arch(args.arch)
+    if args.reduced:
+        args.seq = min(args.seq, arch.cfg.max_pos if arch.kind == "bert"
+                       else getattr(arch.cfg, "max_seq", args.seq))
+
+    warm = max(1, int(args.steps * args.warmup_frac))
+    hold = int(args.steps * args.hold_frac)
+    if args.schedule == "hold":
+        sched = warmup_hold_decay(args.lr, args.steps + 1, warm, hold)
+    elif args.schedule == "linear":
+        sched = warmup_linear_decay(args.lr, args.steps + 1, warm)
+    else:
+        sched = lambda _: jnp.asarray(args.lr, jnp.float32)
+    tx = make_optimizer(args.optimizer, sched)
+
+    rng = jax.random.PRNGKey(args.seed)
+    params = arch.init(rng)
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            arch.loss_fn, has_aux=True)(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    from repro.metrics import MetricsLogger
+
+    data = make_data(arch, batch=args.batch, seq=args.seq, seed=args.seed)
+    t0 = time.time()
+    losses = []
+    logger = MetricsLogger(args.metrics or None)
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+        logger.log(i + 1, loss=loss, lr=sched(jnp.asarray(i)))
+        if (i + 1) % args.log_every == 0 or i == 0:
+            print(f"step {i+1:5d}  loss {losses[-1]:.4f}  "
+                  f"(ema {logger.smoothed_loss:.4f})  "
+                  f"lr {float(sched(jnp.asarray(i))):.2e}  "
+                  f"{(time.time()-t0)/(i+1):.2f}s/step", flush=True)
+    logger.close()
+
+    if args.ckpt_dir:
+        ckpt_save(args.ckpt_dir, args.steps, params,
+                  metadata={"arch": args.arch, "optimizer": args.optimizer,
+                            "final_loss": losses[-1]})
+        print("checkpoint saved to", args.ckpt_dir)
+    print(json.dumps({"first_loss": losses[0], "final_loss": losses[-1],
+                      "steps": args.steps}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.metrics.logger import MetricsLogger, read_metrics
+
+__all__ = ["MetricsLogger", "read_metrics"]

@@ -1,0 +1,220 @@
+"""Grouped-query attention with the variants the assigned archs need:
+
+  - GQA / MHA / MQA (n_kv_heads),
+  - optional QKV bias (qwen2.5),
+  - optional QK-norm (chameleon),
+  - attention-logit soft-capping (gemma2),
+  - sliding-window masking (gemma2 local layers; mistral long-ctx variant),
+  - RoPE or no positional op (whisper uses learned pos embs upstream),
+  - bidirectional (whisper encoder, BERT) or causal,
+  - cross-attention (whisper decoder),
+  - incremental decoding against a KV cache.
+
+Shapes: x (B, S, d_model); cache k/v (B, max_len, n_kv, head_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_rope, dense_apply, dense_init,
+                                 maybe_constrain, rmsnorm_apply,
+                                 rmsnorm_init, softcap)
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (matches XLA practice)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True
+    sliding_window: Optional[int] = None
+    logit_softcap: Optional[float] = None
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+    # Query-block chunking bound: sequences >= this use the remat-chunked
+    # attention path (bounds the live S x S logits to q_block x S — the
+    # XLA-level flash-attention analogue that makes prefill_32k fit).
+    q_chunk_threshold: int = 4096
+    q_block: int = 1024
+
+
+def attn_init(rng, cfg: AttnConfig, *, cross: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(rng, 6)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, use_bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], d, kv * hd, use_bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], d, kv * hd, use_bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], h * hd, d, use_bias=False, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    del cross
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _mask_logits(logits, q_pos, k_pos, *, causal, window, kv_valid_len=None):
+    """logits: (B, H, Sq, Sk); q_pos (Sq,), k_pos (Sk,) absolute positions."""
+    ok = k_pos[None, :] >= 0  # ring-cache slots not yet written carry pos=-1
+    ok = jnp.broadcast_to(ok, logits.shape[-2:])
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        ok = ok & ((q_pos[:, None] - k_pos[None, :]) < window)
+    mask = ok[None, None]
+    if kv_valid_len is not None:  # (B,) number of valid cache slots
+        valid = k_pos[None, :] < kv_valid_len[:, None]  # (B, Sk)
+        mask = mask & valid[:, None, None, :]
+    return jnp.where(mask, logits, NEG_INF)
+
+
+def attn_apply(
+    p,
+    cfg: AttnConfig,
+    x,
+    *,
+    kv_x=None,                 # cross-attention memory (B, Sm, d)
+    positions=None,            # (B, S) or (S,) absolute positions of x
+    cache=None,                # dict(k, v, index) for incremental decode
+    kv_valid_len=None,         # (B,) valid cache length (incl. new tokens)
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (out, new_cache). new_cache is None unless cache is given."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = cfg.query_scale if cfg.query_scale is not None else 1.0 / math.sqrt(hd)
+
+    q = _split_heads(dense_apply(p["wq"], x, compute_dtype), h, hd)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(dense_apply(p["wk"], src, compute_dtype), kv, hd)
+    v = _split_heads(dense_apply(p["wv"], src, compute_dtype), kv, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+
+    if positions is None:
+        positions = jnp.arange(S)
+    positions = jnp.broadcast_to(positions, (S,) if positions.ndim <= 1 else positions.shape)
+
+    if cfg.rope and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    attend_cached = cache is not None
+    if cache is not None and S > 1 and S >= cache["k"].shape[1]:
+        attend_cached = False  # attend in-flight; cache write is tail-only
+        # Prefill longer than a ring cache (sliding-window layer): attend
+        # the in-flight k/v (standard masking below) and write only the
+        # LAST cache_len rows, rolled so that slot == abs_pos % cache_len —
+        # the invariant later decode steps rely on. Assumes idx == 0
+        # (prefill from scratch), which is the only way the engine uses it.
+        idx = cache["index"]
+        cache_len = cache["k"].shape[1]
+        W = cache_len
+        shift = (S - W) % cache_len
+        k_tail = jnp.roll(k[:, S - W:S].astype(cache["k"].dtype), shift, axis=1)
+        v_tail = jnp.roll(v[:, S - W:S].astype(cache["v"].dtype), shift, axis=1)
+        pos_tail = jnp.roll(S - W + jnp.arange(W, dtype=jnp.int32), shift)
+        new_cache = {"k": k_tail, "v": v_tail, "pos": pos_tail,
+                     "index": idx + S}
+        k_pos = positions
+        q_pos = positions
+    elif cache is not None:
+        # Incremental decode: write the S new k/v rows at cache["index"].
+        # Ring-buffer caches (cache_len < model max_len; sliding-window layers)
+        # wrap the write slot and track absolute positions in cache["pos"].
+        idx = cache["index"]  # scalar int32
+        cache_len = cache["k"].shape[1]
+        slot = jax.lax.rem(idx, cache_len)
+        # Pin the incoming rows to the cache layout (batch over data, head_dim
+        # over model) BEFORE the update: otherwise GSPMD reshards the whole
+        # cache through collectives every decode step (EXPERIMENTS.md iter 4).
+        k_new = maybe_constrain(k.astype(cache["k"].dtype),
+                                "data", None, None, "model")
+        v_new = maybe_constrain(v.astype(cache["v"].dtype),
+                                "data", None, None, "model")
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                               (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                               (0, slot, 0, 0))
+        # Decode attention stays head_dim-sharded end to end: q must match,
+        # else GSPMD all-gathers the whole cached K/V per layer per token
+        # (measured 31 GB/chip/token on gemma2 decode_32k — iter 4).
+        q = maybe_constrain(q, "data", None, None, "model")
+        pos_new = jax.lax.dynamic_update_slice(
+            cache["pos"], (idx + jnp.arange(S, dtype=jnp.int32)), (slot,))
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_new, "index": idx + S}
+        k, v = k_cache.astype(compute_dtype), v_cache.astype(compute_dtype)
+        k_pos = pos_new
+        q_pos = idx + jnp.arange(S)
+        if kv_valid_len is None:
+            kv_valid_len = jnp.full((B,), idx + S, jnp.int32)
+    else:
+        k_pos = jnp.arange(k.shape[1]) if kv_x is not None else positions
+        q_pos = positions
+
+    # GQA: repeat kv heads up to h.
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+
+    causal = cfg.causal and kv_x is None
+
+    def _attend_block(qb, q_pos_b, kv_len):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qb, k) * scale
+        logits = softcap(logits, cfg.logit_softcap)
+        logits = _mask_logits(
+            logits.astype(jnp.float32), q_pos_b, k_pos,
+            causal=causal, window=cfg.sliding_window,
+            kv_valid_len=kv_len)
+        probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        if attend_cached and S == 1:
+            # keep decode attention head_dim-sharded (see cache note above)
+            o = maybe_constrain(o, "data", None, None, "model")
+        return o
+
+    kv_len = kv_valid_len if attend_cached else None
+    qb = cfg.q_block
+    if not attend_cached and S >= cfg.q_chunk_threshold and S % qb == 0:
+        # remat-chunked query blocks: live logits bounded to (B,H,qb,S) and
+        # the backward pass recomputes per-block probs instead of saving them.
+        q_blocks = q.reshape(B, S // qb, qb, h, hd).swapaxes(0, 1)
+        qpos_blocks = q_pos.reshape(S // qb, qb)
+        blk = jax.checkpoint(lambda qq, pp: _attend_block(qq, pp, kv_len))
+        out = jax.lax.map(lambda args: blk(*args), (q_blocks, qpos_blocks))
+        out = out.swapaxes(0, 1).reshape(B, S, h, hd)
+    else:
+        out = _attend_block(q, q_pos, kv_len)
+    out = out.reshape(B, S, h * hd)
+    out = dense_apply(p["wo"], out, compute_dtype)
+    return out, new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    """Contiguous cache; pass max_len = sliding_window for ring-buffer layers."""
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,187 @@
+"""Encoder-decoder transformer backbone (whisper-large-v3 assignment).
+
+Whisper conventions: pre-LN LayerNorm (not RMSNorm), GELU MLP (not gated),
+learned positions (no RoPE), MHA (n_kv == n_heads), QKV bias. The
+mel-spectrogram + conv frontend is the allowed STUB: the model consumes
+precomputed frame embeddings (B, n_frames, d_model) from input_specs().
+
+serve_step decodes one token with (a) a self-attention KV cache and (b)
+cross-attention K/V precomputed once from the encoder output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig, attn_apply, attn_init, init_kv_cache
+from repro.models.common import (
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_attend,
+    embed_init,
+    layernorm_apply,
+    layernorm_init,
+    mlp_apply,
+    mlp_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int           # per stack (encoder and decoder each)
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_frames: int = 1500    # whisper encoder positions
+    max_target: int = 448
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self, causal: bool) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_heads, head_dim=self.head_dim,
+            qkv_bias=True, rope=False, causal=causal)
+
+
+def _enc_layer_init(rng, cfg: EncDecConfig):
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": layernorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": attn_init(ks[0], cfg.attn_cfg(False), dtype=cfg.param_dtype),
+        "ln2": layernorm_init(cfg.d_model, cfg.param_dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=False,
+                        use_bias=True, dtype=cfg.param_dtype),
+    }
+
+
+def _dec_layer_init(rng, cfg: EncDecConfig):
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": layernorm_init(cfg.d_model, cfg.param_dtype),
+        "self_attn": attn_init(ks[0], cfg.attn_cfg(True), dtype=cfg.param_dtype),
+        "ln_x": layernorm_init(cfg.d_model, cfg.param_dtype),
+        "cross_attn": attn_init(ks[1], cfg.attn_cfg(False), cross=True,
+                                dtype=cfg.param_dtype),
+        "ln2": layernorm_init(cfg.d_model, cfg.param_dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, gated=False,
+                        use_bias=True, dtype=cfg.param_dtype),
+    }
+
+
+def encdec_init(rng, cfg: EncDecConfig):
+    ks = jax.random.split(rng, 5)
+    enc_rngs = jax.random.split(ks[0], cfg.n_layers)
+    dec_rngs = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": (jax.random.normal(ks[2], (cfg.n_frames, cfg.d_model))
+                    * 0.02).astype(cfg.param_dtype),
+        "dec_embed": embed_init(ks[3], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "dec_pos": (jax.random.normal(ks[4], (cfg.max_target, cfg.d_model))
+                    * 0.02).astype(cfg.param_dtype),
+        "enc_layers": jax.vmap(lambda r: _enc_layer_init(r, cfg))(enc_rngs),
+        "dec_layers": jax.vmap(lambda r: _dec_layer_init(r, cfg))(dec_rngs),
+        "enc_ln_post": layernorm_init(cfg.d_model, cfg.param_dtype),
+        "dec_ln_post": layernorm_init(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params, cfg: EncDecConfig, frame_embeds):
+    """frame_embeds: (B, n_frames, d_model) from the stub frontend."""
+    x = frame_embeds.astype(cfg.compute_dtype)
+    x = x + params["enc_pos"].astype(cfg.compute_dtype)[None, :x.shape[1]]
+
+    def layer(x, lp):
+        h, _ = attn_apply(lp["attn"], cfg.attn_cfg(False),
+                          layernorm_apply(lp["ln1"], x),
+                          compute_dtype=cfg.compute_dtype)
+        x = x + h
+        h = mlp_apply(lp["mlp"], layernorm_apply(lp["ln2"], x),
+                      activation="gelu", compute_dtype=cfg.compute_dtype)
+        return x + h, None
+
+    layer = jax.checkpoint(layer,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return layernorm_apply(params["enc_ln_post"], x)
+
+
+def decode(params, cfg: EncDecConfig, tokens, memory, *, caches=None,
+           positions=None):
+    """tokens (B, S); memory (B, n_frames, d) encoder output.
+
+    caches: {"self": stacked kv caches (L, ...), "index": scalar} or None.
+    Returns (logits, new_caches).
+    """
+    B, S = tokens.shape
+    base = caches["index"] if caches is not None else 0
+    if positions is None:
+        positions = base + jnp.arange(S)
+    x = embed_apply(params["dec_embed"], tokens, cfg.compute_dtype)
+    pos_table = params["dec_pos"].astype(cfg.compute_dtype)
+    # allow decode positions past max_target by clamping the table lookup
+    pos_ids = jnp.minimum(positions, pos_table.shape[0] - 1)
+    x = x + jnp.take(pos_table, pos_ids, axis=0)[None]
+
+    def layer(carry, xs):
+        x = carry
+        lp, self_cache = xs
+        cache_i = None
+        if self_cache is not None:
+            cache_i = dict(self_cache)
+            cache_i["index"] = caches["index"]
+        h, nc = attn_apply(lp["self_attn"], cfg.attn_cfg(True),
+                           layernorm_apply(lp["ln1"], x),
+                           positions=positions, cache=cache_i,
+                           compute_dtype=cfg.compute_dtype)
+        x = x + h
+        h, _ = attn_apply(lp["cross_attn"], cfg.attn_cfg(False),
+                          layernorm_apply(lp["ln_x"], x), kv_x=memory,
+                          compute_dtype=cfg.compute_dtype)
+        x = x + h
+        h = mlp_apply(lp["mlp"], layernorm_apply(lp["ln2"], x),
+                      activation="gelu", compute_dtype=cfg.compute_dtype)
+        x = x + h
+        if nc is not None:
+            nc.pop("index")
+        return x, nc
+
+    self_caches = caches["self"] if caches is not None else None
+    if caches is None:  # training path: full per-layer remat
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_self = jax.lax.scan(layer, x, (params["dec_layers"], self_caches))
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "index": caches["index"] + S}
+
+    x = layernorm_apply(params["dec_ln_post"], x)
+    logits = embed_attend(params["dec_embed"], x, cfg.compute_dtype)
+    return logits.astype(jnp.float32), new_caches
+
+
+def encdec_apply(params, cfg: EncDecConfig, frame_embeds, tokens):
+    """Training forward: encode + teacher-forced decode."""
+    memory = encode(params, cfg, frame_embeds)
+    logits, _ = decode(params, cfg, tokens, memory)
+    return logits
+
+
+def init_encdec_cache(cfg: EncDecConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    one = init_kv_cache(batch, max_len, cfg.n_heads, cfg.head_dim, dtype)
+    one.pop("index")
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+    return {"self": stacked, "index": jnp.zeros((), jnp.int32)}

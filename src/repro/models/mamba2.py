@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm, the TPU-friendly form: the sequence is split into
+chunks of length ``chunk``; within a chunk the recurrence is computed in its
+dual "attention-like" quadratic form (dense matmuls -> MXU), and a
+`lax.scan` over chunks carries the (heads, dstate, headdim) state — the same
+decomposition the paper uses to get matmul-dominated FLOPs.
+
+Decode (S == 1) takes the pure recurrent path with an explicit SSM + conv
+state cache: O(1) per token, which is what makes long_500k tractable for the
+SSM/hybrid archs.
+
+Layer anatomy (faithful to Mamba-2):
+  in_proj -> [z (gate), x, B, C, dt]; causal depthwise conv over (x, B, C);
+  dt = softplus(dt + dt_bias); a_t = exp(dt * -exp(A_log));
+  h_t = a_t h_{t-1} + dt_t * (B_t ⊗ x_t); y_t = C_t · h_t + D * x_t;
+  out = out_proj(RMSNorm(y * silu(z))).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (dense_apply, dense_init, maybe_constrain,
+                                 rmsnorm_apply, rmsnorm_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int          # typically 2 * d_model
+    headdim: int = 64
+    dstate: int = 128
+    ngroups: int = 1
+    conv_width: int = 4
+    chunk: int = 64
+
+    @property
+    def nheads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.ngroups * self.dstate
+
+
+def mamba_init(rng, cfg: MambaConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.ngroups * cfg.dstate + cfg.nheads
+    p = {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, cfg.conv_channels))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_channels,), dtype),
+        "A_log": jnp.log(jnp.arange(1, cfg.nheads + 1, dtype=jnp.float32)).astype(dtype),
+        "dt_bias": jnp.zeros((cfg.nheads,), dtype),
+        "D": jnp.ones((cfg.nheads,), dtype),
+        "norm": rmsnorm_init(cfg.d_inner, dtype),
+        "out_proj": dense_init(ks[2], cfg.d_inner, cfg.d_model, dtype=dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv, x: (B, S, C), w: (W, C). Returns (y, new_state).
+
+    conv_state: (B, W-1, C) trailing inputs from the previous call (decode).
+    """
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_state = xp[:, -(W - 1):, :]
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, a_log_t, Bm, Cm, cfg: MambaConfig, h0=None):
+    """Chunked SSD.
+
+    xh:    (B, S, H, P)   inputs per head (P = headdim)
+    dt:    (B, S, H)      positive step sizes
+    a_log_t: (B, S, H)    log decay = dt * A  (negative)
+    Bm,Cm: (B, S, G, N)   input/output projections (N = dstate)
+    h0:    (B, H, N, P)   initial state or None
+    Returns (y: (B,S,H,P), h_final).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = cfg.chunk
+    assert S % L == 0, (S, L)
+    nc = S // L
+    rep = H // G
+
+    # reshape to chunks: (B, nc, L, ...)
+    xc = xh.reshape(B, nc, L, H, P)
+    dtc = dt.reshape(B, nc, L, H)
+    alc = a_log_t.reshape(B, nc, L, H)
+    Bc = Bm.reshape(B, nc, L, G, N)
+    Cc = Cm.reshape(B, nc, L, G, N)
+
+    cum = jnp.cumsum(alc, axis=2)                       # (B, nc, L, H) inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L(t),L(s),H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: masked (t < s) entries have seg > 0 and can overflow
+    # to inf; exp-then-where leaks NaN into the BACKWARD pass (0 * inf).
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+
+    Bg = jnp.repeat(Bc, rep, axis=3)  # (B,nc,L,H,N)
+    Cg = jnp.repeat(Cc, rep, axis=3)
+
+    # Intra-chunk (dual quadratic form): scores[t,s] = (C_t.B_s) decay dt_s
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Cg, Bg) * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores, xc)
+
+    # Per-chunk aggregated state contribution and total decay.
+    chunk_decay = jnp.exp(cum[:, :, -1:, :] - cum)       # exp(sum_after_s)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp",
+                        chunk_decay * dtc, Bg, xc)       # (B,nc,H,N,P)
+    total_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    h_init = (jnp.zeros((B, H, N, P), xh.dtype) if h0 is None
+              else h0.astype(xh.dtype))
+
+    def chunk_step(h, inp):
+        st, td = inp  # (B,H,N,P), (B,H)
+        h_new = h * td[..., None, None] + st
+        return h_new, h  # emit PRE-chunk state for inter-chunk output
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total_decay, 1, 0))
+    h_final, h_prevs = jax.lax.scan(chunk_step, h_init, xs)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,N,P)
+
+    # Inter-chunk: y_t += C_t · (exp(cum_t) * h_prev_chunk)
+    in_decay = jnp.exp(cum)                              # (B,nc,L,H)
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", Cg * in_decay[..., None], h_prevs)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_final
+
+
+def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, compute_dtype=jnp.bfloat16):
+    """x: (B, S, d_model). cache: dict(ssm, conv, index) for decode.
+
+    Returns (out, new_cache_or_None).
+    """
+    B, S, _ = x.shape
+    H, P, G, N = cfg.nheads, cfg.headdim, cfg.ngroups, cfg.dstate
+
+    proj = dense_apply(p["in_proj"], x, compute_dtype)
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj,
+        [cfg.d_inner, 2 * cfg.d_inner, 2 * cfg.d_inner + G * N,
+         2 * cfg.d_inner + 2 * G * N],
+        axis=-1)
+
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"].astype(compute_dtype), p["conv_b"].astype(compute_dtype),
+        conv_state)
+    xr, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (H,) negative
+    a_log_t = dt * A[None, None, :]                      # (B,S,H)
+
+    xh = xr.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    new_cache = None
+    if cache is not None and S == 1:
+        # Recurrent single-token update: h = a h + dt (B ⊗ x); y = C·h.
+        h = cache["ssm"].astype(jnp.float32)             # (B,H,N,P)
+        a = jnp.exp(a_log_t[:, 0, :])                    # (B,H)
+        Bg = jnp.repeat(Bm[:, 0], H // G, axis=1)        # (B,H,N)
+        Cg = jnp.repeat(Cm[:, 0], H // G, axis=1)
+        xt = xh[:, 0].astype(jnp.float32)                # (B,H,P)
+        h_new = (h * a[..., None, None]
+                 + dt[:, 0, :, None, None] * Bg.astype(jnp.float32)[..., None]
+                 * xt[:, :, None, :])
+        # pin to the cache layout (batch over data, headdim over model) so
+        # GSPMD doesn't reshard the state every token (EXPERIMENTS.md iter 4)
+        h_new = maybe_constrain(h_new, "data", None, None, "model")
+        y = jnp.einsum("bhn,bhnp->bhp", Cg.astype(jnp.float32), h_new)
+        y = y[:, None].astype(compute_dtype)             # (B,1,H,P)
+        new_cache = {"ssm": h_new, "conv": new_conv,
+                     "index": cache["index"] + 1}
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_final = _ssd_chunked(
+            xh.astype(jnp.float32), dt, a_log_t,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32), cfg, h0)
+        y = y.astype(compute_dtype)
+        if cache is not None:
+            new_cache = {"ssm": h_final, "conv": new_conv,
+                         "index": cache["index"] + S}
+
+    y = y + p["D"].astype(compute_dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(p["norm"], y)
+    out = dense_apply(p["out_proj"], y, compute_dtype)
+    return out.astype(x.dtype), new_cache
+
+
+def init_mamba_cache(batch: int, cfg: MambaConfig, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.nheads, cfg.dstate, cfg.headdim), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_channels), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,67 @@
+"""Batched serving engine: continuous greedy decoding over a request queue.
+
+Serving semantics match the decode dry-run shapes: prefill once per request
+batch, then step one token per iteration against the shared KV/SSM cache.
+The engine is deliberately simple (static batch, greedy) — the point is
+that `serve_step` is the exact function the decode_32k / long_500k shapes
+lower on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new_tokens: int = 16
+    generated: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(self, arch, params, *, max_len: int = 512):
+        self.arch = arch
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, b, c: arch.decode_step(p, b, c))
+
+    def run_batch(self, requests: List[Request]) -> List[Request]:
+        assert requests
+        B = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        prompts = np.full((B, plen), 0, np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, -len(r.prompt):] = r.prompt  # left-pad
+
+        batch = {"tokens": jnp.asarray(prompts)}
+        # decode cache must be long enough for prompt + generation
+        steps = max(r.max_new_tokens for r in requests)
+        logits, cache = self.arch.prefill(self.params, batch,
+                                          cache_len=plen + steps)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(steps - 1):
+            step_batch = {"tokens": tok[:, None]}
+            logits, cache = self._decode(self.params, step_batch, cache)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        gen = np.stack([np.asarray(t) for t in out], axis=1)  # (B, steps)
+        for i, r in enumerate(requests):
+            r.generated = gen[i, :r.max_new_tokens]
+        return requests
+
+
+def throughput_probe(engine: ServeEngine, requests: List[Request]) -> dict:
+    t0 = time.time()
+    done = engine.run_batch(requests)
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    return {"requests": len(done), "tokens": toks,
+            "tokens_per_s": toks / dt, "wall_s": dt}

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real single-device CPU config (the 512-device override
+# is dryrun.py-local). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

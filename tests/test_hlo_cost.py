@@ -1,0 +1,105 @@
+"""Loop-aware HLO cost model: validated against known-FLOP programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import HloModule, analyze_hlo_text
+
+
+def _cost(f, *specs):
+    compiled = jax.jit(f).lower(*specs).compile()
+    return analyze_hlo_text(compiled.as_text())
+
+
+def test_single_matmul_exact():
+    M, K, N = 128, 256, 64
+    c = _cost(lambda a, b: a @ b,
+              jax.ShapeDtypeStruct((M, K), jnp.float32),
+              jax.ShapeDtypeStruct((K, N), jnp.float32))
+    assert c.flops == 2 * M * K * N
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    c = _cost(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    want = 10 * 2 * 128**3
+    assert abs(c.flops - want) / want < 0.01, (c.flops, want)
+
+
+def test_nested_scans_multiply():
+    def f(x):
+        def outer(c, _):
+            def inner(y, _):
+                return y @ y, None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    c = _cost(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    want = 15 * 2 * 64**3
+    assert abs(c.flops - want) / want < 0.01
+
+
+def test_xla_builtin_is_loop_blind():
+    """Regression guard for WHY this module exists."""
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    xla = compiled.cost_analysis()
+    xla = xla[0] if isinstance(xla, list) else xla
+    ours = analyze_hlo_text(compiled.as_text()).flops
+    # XLA reports ~1 body; we report ~10 bodies
+    assert ours > 5 * float(xla.get("flops", 0))
+
+
+def test_collectives_scaled_by_loops():
+    import os
+    text = """
+HloModule test, entry_computation_layout={()->f32[8]{0}}
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8]{0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %ar = f32[8]{0} all-reduce(%x), to_apply=%sum
+  ROOT %t = (s32[], f32[8]{0}) tuple(%i2, %ar)
+}
+
+%cond (p2: (s32[], f32[8])) -> pred[] {
+  %p2 = (s32[], f32[8]{0}) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main () -> f32[8] {
+  %c0 = s32[] constant(0)
+  %x0 = f32[8]{0} constant({1,1,1,1,1,1,1,1})
+  %tup = (s32[], f32[8]{0}) tuple(%c0, %x0)
+  %w = (s32[], f32[8]{0}) while(%tup), condition=%cond, body=%body
+  ROOT %r = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+    c = analyze_hlo_text(text)
+    # 7 iterations x 32 bytes
+    assert c.coll["all-reduce"] == 7 * 32, c.coll
+    assert c.coll_counts["all-reduce"] == 7
+
+
+def test_shape_parser_handles_dtypes():
+    m = HloModule(
+        "ENTRY %e (a: bf16[2,3]) -> bf16[2,3] {\n"
+        "  %a = bf16[2,3]{1,0} parameter(0)\n"
+        "  ROOT %z = bf16[2,3]{1,0} add(%a, %a)\n}")
+    c = m.cost_of(m.entry)
+    assert c.bytes >= 12  # 6 elems x 2 bytes result
+    assert c.flops == 6

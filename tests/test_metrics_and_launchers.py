@@ -1,0 +1,47 @@
+"""Metrics logger + CLI launcher smoke tests (subprocess entry points)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.metrics import MetricsLogger, read_metrics
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_metrics_logger_roundtrip(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    with MetricsLogger(path, window=3) as log:
+        for i in range(5):
+            log.log(i, loss=5.0 - i, lr=1e-3)
+        assert abs(log.smoothed_loss - 2.0) < 1e-6  # mean of (3,2,1)
+    recs = list(read_metrics(path))
+    assert len(recs) == 5
+    assert recs[0]["step"] == 0 and abs(recs[0]["loss"] - 5.0) < 1e-9
+    assert all("wall_s" in r for r in recs)
+
+
+def _run_cli(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-m", *args], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli_smoke(tmp_path):
+    metrics = str(tmp_path / "train.jsonl")
+    r = _run_cli(["repro.launch.train", "--arch", "mamba2-130m",
+                  "--steps", "4", "--batch", "2", "--seq", "32",
+                  "--optimizer", "lans", "--metrics", metrics])
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert np.isfinite(out["final_loss"])
+    assert len(list(read_metrics(metrics))) == 4
+
+
+def test_serve_cli_smoke():
+    r = _run_cli(["repro.launch.serve", "--arch", "gemma2-2b",
+                  "--batch", "2", "--prompt-len", "8", "--new-tokens", "3"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tokens_per_s" in r.stdout

@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.optim import apply_updates, lans
+from repro.core.schedules import (schedule_auc, warmup_hold_decay,
+                                  warmup_linear_decay)
+from repro.data.sharding import ShardSpec, epoch_indices, minibatches, shard_bounds
+from repro.kernels import ref
+
+finite_f = st.floats(min_value=-100.0, max_value=100.0,
+                     allow_nan=False, allow_infinity=False, width=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.floats(min_value=1e-3, max_value=1e3),
+       seed=st.integers(0, 2**31 - 1))
+def test_lans_gradient_scale_invariance(scale, seed):
+    """Paper §3.1: blockwise normalization makes LANS invariant to the
+    per-block gradient SCALE — the property that removes gradient clipping."""
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=(17, 5)), jnp.float32)
+    m = jnp.asarray(r.normal(size=(17, 5)), jnp.float32)
+    v = jnp.asarray(np.abs(r.normal(size=(17, 5))), jnp.float32)
+    x = jnp.asarray(r.normal(size=(17, 5)), jnp.float32)
+    a = ref.lans_step_ref(g, m, v, x, eta=0.01, step=3)
+    b = ref.lans_step_ref(scale * g, m, v, x, eta=0.01, step=3)
+    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lans_update_norm_bounded_by_phi(seed):
+    """||d|| <= phi(||x||): trust-scaled directions cannot blow up."""
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=(64,)) * r.uniform(0.01, 100), jnp.float32)
+    m = jnp.asarray(r.normal(size=(64,)), jnp.float32)
+    v = jnp.asarray(np.abs(r.normal(size=(64,))), jnp.float32)
+    x = jnp.asarray(r.normal(size=(64,)), jnp.float32)
+    out = ref.lans_step_ref(g, m, v, x, eta=1.0, step=2)
+    d = x - out.x
+    xn = float(jnp.linalg.norm(x))
+    assert float(jnp.linalg.norm(d)) <= xn * (1.0 + 1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(total=st.integers(10, 2000),
+       warm_frac=st.floats(0.05, 0.5),
+       hold_frac=st.floats(0.0, 0.4),
+       eta=st.floats(1e-5, 1.0))
+def test_warmup_hold_decay_shape(total, warm_frac, hold_frac, eta):
+    """eq (9): piecewise linear-const-linear, max == eta, ends near 0."""
+    warm = max(1, int(total * warm_frac))
+    hold = int(total * hold_frac)
+    if warm + hold >= total:
+        hold = max(0, total - warm - 1)
+    if warm + hold >= total or warm >= total:
+        return
+    sched = warmup_hold_decay(eta, total, warm, hold)
+    ts = np.arange(total)
+    vals = np.asarray(jax.vmap(sched)(jnp.asarray(ts)))
+    assert vals.max() <= eta * (1 + 1e-5)
+    # hold region is exactly eta
+    hold_region = vals[warm:warm + hold]
+    if len(hold_region):
+        np.testing.assert_allclose(hold_region, eta, rtol=1e-5)
+    # final step ~ 0 within one decay increment
+    decay_steps = max(total - warm - hold, 1)
+    assert vals[-1] <= eta / decay_steps * (1 + 1e-3) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(total=st.integers(20, 500), warm_frac=st.floats(0.1, 0.4),
+       hold_frac=st.floats(0.05, 0.4), eta=st.floats(1e-4, 0.1))
+def test_hold_schedule_auc_dominates_linear(total, warm_frac, hold_frac, eta):
+    """The paper's point: eq (9) has strictly more area than eq (8) at the
+    same eta — the hold phase recovers training progress."""
+    warm = max(1, int(total * warm_frac))
+    hold = max(1, int(total * hold_frac))
+    if warm + hold >= total:
+        return
+    a8 = schedule_auc(warmup_linear_decay(eta, total, warm), total)
+    a9 = schedule_auc(warmup_hold_decay(eta, total, warm, hold), total)
+    assert a9 > a8
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(32, 4096), workers=st.integers(1, 17),
+       epoch=st.integers(0, 3), seed=st.integers(0, 1000))
+def test_sharding_partition_and_no_replacement(n, workers, epoch, seed):
+    """§3.4: shards are disjoint, cover the dataset, and each epoch's
+    in-shard order is a permutation (sampling without replacement)."""
+    all_idx = []
+    for w in range(workers):
+        spec = ShardSpec(num_samples=n, num_workers=workers, worker=w,
+                         seed=seed)
+        lo, hi = shard_bounds(spec)
+        idx = epoch_indices(spec, epoch)
+        assert sorted(idx) == list(range(lo, hi))  # permutation of the shard
+        all_idx.extend(idx)
+    assert sorted(all_idx) == list(range(n))       # disjoint cover
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_minibatches_within_epoch_unique(seed):
+    spec = ShardSpec(num_samples=256, num_workers=4, worker=1, seed=seed)
+    it = minibatches(spec, per_worker_batch=8)
+    seen = set()
+    for _ in range(8):  # one epoch = 64 samples = 8 batches
+        b = next(it)
+        assert len(set(b.tolist()) & seen) == 0
+        seen.update(b.tolist())
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       shape=st.sampled_from([(5,), (33,), (128,), (16, 9)]))
+def test_fused_kernel_matches_reference_property(seed, shape):
+    """Pallas fused LANS == jnp oracle across random shapes/values."""
+    from repro.kernels import ops
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=shape), jnp.float32)
+    m = jnp.asarray(r.normal(size=shape), jnp.float32)
+    v = jnp.asarray(np.abs(r.normal(size=shape)), jnp.float32)
+    x = jnp.asarray(r.normal(size=shape), jnp.float32)
+    a = ops.fused_lans_step(g, m, v, x, eta=0.01, step=2)
+    b = ref.lans_step_ref(g, m, v, x, eta=0.01, step=2)
+    for ka, kb in zip(a, b):
+        np.testing.assert_allclose(np.asarray(ka), np.asarray(kb),
+                                   rtol=3e-5, atol=3e-6)

@@ -1,0 +1,96 @@
+"""Scheduler exactness vs the paper's published numbers + data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedules import (StageSchedule, figure1_settings,
+                                  paper_stage_schedules, schedule_auc,
+                                  sqrt_scaling_rule, warmup_hold_decay,
+                                  warmup_linear_decay)
+from repro.data.corpus import (FIRST_NORMAL_ID, MASK_ID, SyntheticCorpus,
+                               build_mlm_example, lm_batch_iterator,
+                               mlm_batch_iterator)
+from repro.data.sharding import ShardSpec
+
+
+def test_figure1_auc_gaps_match_paper():
+    """Paper Fig. 1: gap(ideal, feasible-linear) = 5.28; eq (9) cuts it to
+    1.91. Reproduced exactly from the published T/warmup/const settings."""
+    s = figure1_settings()
+    a_feas = schedule_auc(warmup_linear_decay(
+        s["eta_feasible"], s["total_steps"], s["warmup_steps"]), s["total_steps"])
+    a_ideal = schedule_auc(warmup_linear_decay(
+        s["eta_ideal"], s["total_steps"], s["warmup_steps"]), s["total_steps"])
+    a_hold = schedule_auc(warmup_hold_decay(
+        s["eta_feasible"], s["total_steps"], s["warmup_steps"],
+        s["hold_steps"]), s["total_steps"])
+    assert abs((a_ideal - a_feas) - 5.28) < 0.02
+    assert abs((a_ideal - a_hold) - 1.91) < 0.02
+
+
+def test_paper_stage_schedules_table1():
+    s1, s2 = paper_stage_schedules()
+    assert (s1.batch_size, s1.total_steps, s1.eta) == (96 * 1024, 3519, 0.00675)
+    assert (s2.batch_size, s2.total_steps, s2.eta) == (33 * 1024, 782, 0.005)
+    assert abs(s1.ratio_warmup + s1.ratio_const - 0.70) < 1e-6
+    assert abs(s2.ratio_warmup + s2.ratio_const - 0.30) < 1e-6
+    # schedules build and are finite over the whole run
+    for st in (s1, s2):
+        sched = st.schedule()
+        vals = np.asarray(jax.vmap(sched)(jnp.arange(st.total_steps)))
+        assert np.isfinite(vals).all() and vals.max() <= st.eta * (1 + 1e-5)
+
+
+def test_sqrt_scaling_rule():
+    assert abs(sqrt_scaling_rule(1e-3, 512, 2048) - 2e-3) < 1e-9
+
+
+def test_total_steps_4301():
+    """Paper: 3519 + 782 = 4301 total iterations (Table 2)."""
+    s1, s2 = paper_stage_schedules()
+    assert s1.total_steps + s2.total_steps == 4301
+
+
+def test_mlm_example_masking_stats(rng):
+    corpus = SyntheticCorpus(vocab=1024, num_docs=32, doc_len=512)
+    ex = build_mlm_example(corpus, 0, rng, seq_len=128)
+    assert ex["tokens"].shape == (128,)
+    lab = ex["mlm_labels"]
+    n_masked = (lab != -100).sum()
+    assert 2 <= n_masked <= 40          # ~15% of ~120 maskable
+    # labels hold the ORIGINAL token at masked positions
+    masked_pos = np.where(lab != -100)[0]
+    assert (lab[masked_pos] >= FIRST_NORMAL_ID).all()
+    # token types: segment B marked 1
+    assert ex["token_types"].max() == 1
+
+
+def test_mlm_batches_deterministic_per_worker():
+    corpus = SyntheticCorpus(vocab=512, num_docs=64, doc_len=256)
+    spec = ShardSpec(num_samples=64, num_workers=2, worker=0, seed=7)
+    a = next(mlm_batch_iterator(corpus, spec, per_worker_batch=4, seq_len=64,
+                                seed=7))
+    b = next(mlm_batch_iterator(corpus, spec, per_worker_batch=4, seq_len=64,
+                                seed=7))
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_lm_batches_shift_by_one():
+    corpus = SyntheticCorpus(vocab=512, num_docs=64, doc_len=256)
+    spec = ShardSpec(num_samples=64, num_workers=1, worker=0)
+    b = next(lm_batch_iterator(corpus, spec, per_worker_batch=4, seq_len=32))
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_workers_see_disjoint_docs():
+    corpus = SyntheticCorpus(vocab=512, num_docs=100, doc_len=64)
+    seen = {}
+    for w in range(4):
+        spec = ShardSpec(num_samples=100, num_workers=4, worker=w)
+        b = next(lm_batch_iterator(corpus, spec, per_worker_batch=8,
+                                   seq_len=16))
+        seen[w] = b
+    # different workers -> different docs -> (overwhelmingly) different data
+    assert not np.array_equal(seen[0]["tokens"], seen[1]["tokens"])

@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, at CPU scale:
+  1. LANS trains BERT (MLM+NSP) and the loss decreases.
+  2. At an aggressive large-batch learning rate, LANS stays at least as
+     stable as LAMB — the paper's Table 2 phenomenon.
+  3. The warmup-hold-decay schedule (eq 9) reaches a loss at least as good
+     as the linear schedule (eq 8) at the same capped eta (Fig. 1).
+  4. The full pipeline (sharded data -> train -> checkpoint -> restore)
+     round-trips; the serving engine generates tokens.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import reduced_arch
+from repro.core.optim import apply_updates, lamb, lans
+from repro.core.schedules import warmup_hold_decay, warmup_linear_decay
+from repro.data.corpus import SyntheticCorpus, mlm_batch_iterator
+from repro.data.sharding import ShardSpec
+
+
+def _bert_setup(seed=0, batch=8, seq=64):
+    arch = reduced_arch("bert-large")
+    corpus = SyntheticCorpus(vocab=arch.cfg.vocab, num_docs=512,
+                             doc_len=256, seed=seed)
+    spec = ShardSpec(num_samples=512, num_workers=1, worker=0, seed=seed)
+    data = mlm_batch_iterator(corpus, spec, per_worker_batch=batch,
+                              seq_len=seq, seed=seed)
+    params = arch.init(jax.random.PRNGKey(seed))
+    return arch, params, data
+
+
+def _train(arch, params, data, tx, steps):
+    st = tx.init(params)
+
+    @jax.jit
+    def step(params, st, batch):
+        (l, _), g = jax.value_and_grad(arch.loss_fn, has_aux=True)(params, batch)
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+        upd, st = tx.update(g, st, params)
+        return apply_updates(params, upd), st, l
+
+    losses = []
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, st, l = step(params, st, batch)
+        losses.append(float(l))
+    return params, losses
+
+
+def test_lans_trains_bert_loss_decreases():
+    arch, params, data = _bert_setup()
+    sched = warmup_hold_decay(5e-3, 41, 8, 12)
+    _, losses = _train(arch, params, data, lans(sched), steps=40)
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-8:]) < np.mean(losses[:5]) - 0.15, losses
+
+
+def test_lans_no_worse_than_lamb_under_hostile_lr():
+    """Table 2 phenomenon, directional at toy scale: under an aggressively
+    large eta, LANS stays finite and accumulates no more loss than LAMB
+    (at paper scale LAMB outright diverges; a 2-layer CPU BERT cannot
+    reproduce the divergence cleanly, so the test asserts the ordering)."""
+    eta = 0.25  # far beyond stable for this toy setup
+    totals = {}
+    for name, txf in (("lans", lans), ("lamb", lamb)):
+        sums = []
+        for seed in (1, 2):
+            arch, params, data = _bert_setup(seed=seed)
+            _, losses = _train(arch, params, data, txf(eta), steps=18)
+            if name == "lans":
+                assert np.isfinite(losses).all()
+            sums.append(np.sum(np.minimum(losses, 1e4)))
+        totals[name] = float(np.mean(sums))
+    assert totals["lans"] <= totals["lamb"] * 1.10, totals
+
+
+def test_hold_schedule_beats_linear_at_capped_eta():
+    steps, eta = 40, 2e-3
+    arch, params, data = _bert_setup(seed=2)
+    lin = warmup_linear_decay(eta, steps + 1, max(1, steps // 5))
+    hold = warmup_hold_decay(eta, steps + 1, max(1, steps // 5),
+                             int(steps * 0.4))
+    _, l_lin = _train(arch, params, data, lans(lin), steps=steps)
+
+    arch2, params2, data2 = _bert_setup(seed=2)
+    _, l_hold = _train(arch2, params2, data2, lans(hold), steps=steps)
+    assert np.mean(l_hold[-5:]) <= np.mean(l_lin[-5:]) + 0.05
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    arch, params, data = _bert_setup(seed=3)
+    params, losses = _train(arch, params, data, lans(1e-3), steps=2)
+    save(str(tmp_path), 2, params, metadata={"loss": losses[-1]})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    restored = restore(str(tmp_path), 2, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_engine_generates():
+    from repro.serving.engine import Request, ServeEngine
+    arch = reduced_arch("gemma2-2b")
+    params = arch.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params)
+    reqs = [Request(prompt=np.arange(5, 13, dtype=np.int32), max_new_tokens=4),
+            Request(prompt=np.arange(3, 9, dtype=np.int32), max_new_tokens=4)]
+    done = eng.run_batch(reqs)
+    for r in done:
+        assert r.generated.shape == (4,)
+        assert (r.generated >= 0).all() and (r.generated < arch.cfg.vocab).all()
+
+
+def test_grad_accumulation_aligns_with_full_batch():
+    """Microbatched mean gradient ~ full-batch gradient (cosine > 0.98):
+    what makes the paper's 96K global batch implementable."""
+    arch, params, data = _bert_setup(seed=4, batch=8)
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+
+    def loss_fn(p, b):
+        return arch.loss_fn(p, b)[0]
+
+    g_full = jax.grad(loss_fn)(params, batch)
+    g_mb = jax.tree.map(jnp.zeros_like, params)
+    for i in range(2):
+        sl = {k: v[i * 4:(i + 1) * 4] for k, v in batch.items()}
+        g = jax.grad(loss_fn)(params, sl)
+        g_mb = jax.tree.map(lambda a, b: a + b / 2, g_mb, g)
+    fa = jnp.concatenate([x.ravel() for x in jax.tree.leaves(g_full)])
+    fb = jnp.concatenate([x.ravel() for x in jax.tree.leaves(g_mb)])
+    cos = float(fa @ fb / (jnp.linalg.norm(fa) * jnp.linalg.norm(fb)))
+    assert cos > 0.98, cos
