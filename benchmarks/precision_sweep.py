@@ -1,0 +1,143 @@
+"""Precision-policy sweep: step time, HBM bytes-moved, state bytes.
+
+For each policy (fp32 / bf16 / fp16_mixed) on the reduced archs, build the
+real train step (LANS + mixed_precision wrapper where the policy needs it),
+then report:
+
+  * measured wall-time per step (median of N), and
+  * bytes-moved per step from the loop-aware HLO cost model
+    (launch/hlo_cost.py) on the compiled step, and
+  * resident state bytes: model params, optimizer state (sparse fp32
+    masters + moments in the policy's moment dtype), and their sum.
+
+The paper's speed claim leans on exactly these levers: fp16 halves the
+GEMM/memory traffic of the train step (Pati et al.) and the sparse-master
+layout keeps optimizer state BELOW the fp32 baseline despite the extra
+master copy. PASS requires bf16/fp16 optimizer state and total state to be
+strictly smaller than fp32's.
+
+  PYTHONPATH=src python -m benchmarks.precision_sweep [--arch bert-large]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import precision as prec
+from repro.configs import reduced_arch
+from repro.core.optim import lans
+from repro.distributed.steps import build_train_step, jit_train_step
+from repro.launch.hlo_cost import analyze_hlo_text
+from repro.launch.mesh import make_local_mesh
+
+POLICIES = ("fp32", "bf16", "fp16_mixed")
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def _mlm_batch(arch, batch: int, seq: int):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, arch.cfg.vocab, size=(batch, seq))
+    labels = np.where(rng.random((batch, seq)) < 0.15, toks, -100)
+    return {"tokens": jnp.asarray(toks, jnp.int32),
+            "mlm_labels": jnp.asarray(labels, jnp.int32),
+            "nsp_labels": jnp.zeros((batch,), jnp.int32)}
+
+
+def sweep_arch(arch_name: str, *, batch: int = 8, seq: int = 64,
+               steps: int = 5):
+    arch = reduced_arch(arch_name)
+    batch_data = _mlm_batch(arch, batch, seq) if arch.kind == "bert" else {
+        "tokens": jnp.zeros((batch, seq), jnp.int32),
+        "labels": jnp.zeros((batch, seq), jnp.int32)}
+    results = {}
+    import dataclasses
+    mesh = make_local_mesh(data=1, model=1)
+    for name in POLICIES:
+        policy = prec.get_policy(name)
+        tx = lans(2e-3, mu_dtype=policy.moment_dtype)
+        p_arch = dataclasses.replace(arch, cfg=policy.apply_to_cfg(arch.cfg))
+
+        # the REAL train step: build_train_step wraps tx with mixed_precision
+        # and wires the loss scaling exactly as launch/train and tests do.
+        step_fn, init_fn, specs_for = build_train_step(
+            p_arch.loss_fn, tx, mesh,
+            param_init_fn=lambda rng: p_arch.init(rng), policy=policy)
+        params, opt_state = init_fn(jax.random.PRNGKey(0))
+        pspec, ospec = specs_for(params, opt_state)
+        jitted = jit_train_step(step_fn, mesh, pspec, ospec, batch_data)
+
+        with mesh:
+            compiled = jitted.lower(params, opt_state, batch_data).compile()
+            cost = analyze_hlo_text(compiled.as_text())
+
+            params, opt_state, _ = jitted(params, opt_state, batch_data)
+            times = []
+            for _ in range(steps):
+                t0 = time.perf_counter()
+                params, opt_state, metrics = jitted(
+                    params, opt_state, batch_data)
+                jax.block_until_ready(metrics["loss"])
+                times.append(time.perf_counter() - t0)
+
+        results[name] = {
+            "step_ms": float(np.median(times) * 1e3),
+            "hlo_bytes": cost.bytes,
+            "hlo_flops": cost.flops,
+            "param_bytes": _tree_bytes(params),
+            "opt_bytes": _tree_bytes(opt_state),
+        }
+        results[name]["state_bytes"] = (results[name]["param_bytes"]
+                                        + results[name]["opt_bytes"])
+    return results
+
+
+def run(archs=("bert-large",)):
+    rows, ok = [], True
+    for arch_name in archs:
+        res = sweep_arch(arch_name)
+        base = res["fp32"]
+        for pname, r in res.items():
+            rows.append((
+                f"precision/{arch_name}/{pname}",
+                r["step_ms"] * 1e3,
+                f"hlo {r['hlo_bytes']/1e6:.1f}MB moved/step, "
+                f"params {r['param_bytes']/1e3:.1f}kB, "
+                f"opt {r['opt_bytes']/1e3:.1f}kB, "
+                f"total state {r['state_bytes']/1e3:.1f}kB",
+            ))
+        for pname in ("bf16", "fp16_mixed"):
+            smaller = (res[pname]["opt_bytes"] < base["opt_bytes"]
+                       and res[pname]["state_bytes"] < base["state_bytes"])
+            rows.append((
+                f"precision/{arch_name}/{pname}_vs_fp32",
+                0.0,
+                f"opt {res[pname]['opt_bytes']}/{base['opt_bytes']}B "
+                f"state {res[pname]['state_bytes']}/{base['state_bytes']}B "
+                f"hlo-bytes x{res[pname]['hlo_bytes']/base['hlo_bytes']:.2f} "
+                f"-> {'smaller OK' if smaller else 'NOT SMALLER'}",
+            ))
+            ok = ok and smaller
+    return rows, ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default bert-large")
+    args = ap.parse_args()
+    rows, ok = run(tuple(args.arch) if args.arch else ("bert-large",))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.1f},"{derived}"')
+    print("STATUS:", "PASS" if ok else "FAIL")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ MODULES = [
     "sharding_variance",    # paper §3.4: sampling variance bounds
     "ablation_lans",        # beyond-paper: eq(4)/eq(7) component ablation
     "kernel_throughput",    # apex fused_lans analogue (Pallas pipeline)
+    "precision_sweep",      # mixed-precision policies: time/bytes/state
     "roofline_report",      # assignment §Roofline aggregation
 ]
 

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the exact command ROADMAP.md pins:
+#   PYTHONPATH=src python -m pytest -x -q
+#
+# Optional test extras (requirements.txt): `hypothesis` enables
+# tests/test_properties.py, which otherwise skips cleanly at collection.
+# The core library itself needs only jax + numpy (baked into the image).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

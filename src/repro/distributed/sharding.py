@@ -131,6 +131,18 @@ def params_sharding(params: PyTree, mesh: Mesh, *, zero3: bool = False) -> PyTre
                         params_pspec(params, mesh, zero3=zero3))
 
 
+def _master_pspec(params_spec: PyTree, master_like: PyTree) -> PyTree:
+    """Master weights mirror their parameter's spec; the zero-size
+    placeholders the mixed-precision wrapper stores for fp32-kept leaves
+    (LN/bias) replicate."""
+    def spec(s, m):
+        size = int(np.prod(getattr(m, "shape", ())))
+        return s if size else P()
+
+    return jax.tree.map(spec, params_spec, master_like,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def opt_state_pspec(opt_state: PyTree, params_spec: PyTree,
                     moments_spec: PyTree = None) -> PyTree:
     """Optimizer moments inherit their parameter's spec; counters replicate.
@@ -140,10 +152,32 @@ def opt_state_pspec(opt_state: PyTree, params_spec: PyTree,
     only model-sharded; see EXPERIMENTS.md §Perf iteration 2).
 
     Works for the (LansState | LambState | AdamWState | FusedState, sched)
-    chain states used across this repo: any leaf whose subtree path starts
-    with mu/nu mirrors params.
+    chain states used across this repo (any leaf whose subtree path starts
+    with mu/nu mirrors params) and for the mixed-precision states
+    (MixedPrecisionState wrapping a chain state; FusedMixedState), whose
+    fp32 master weights mirror params and loss-scale scalars replicate.
     """
     mspec = moments_spec if moments_spec is not None else params_spec
+    from repro.precision.fused import FusedMixedState
+    from repro.precision.mixed import MixedPrecisionState
+
+    # Masters are optimizer state: they follow the (ZeRO-1 aware) moments
+    # spec, not the weights spec, so optimizer-state sharding over "data"
+    # covers the largest fp32 buffer mixed precision adds.
+    if isinstance(opt_state, MixedPrecisionState):
+        return MixedPrecisionState(
+            loss_scale=jax.tree.map(lambda _: P(), opt_state.loss_scale),
+            master=_master_pspec(mspec, opt_state.master),
+            inner=opt_state_pspec(opt_state.inner, params_spec, moments_spec),
+        )
+    if isinstance(opt_state, FusedMixedState):
+        return FusedMixedState(
+            loss_scale=jax.tree.map(lambda _: P(), opt_state.loss_scale),
+            count=P(),
+            master=_master_pspec(mspec, opt_state.master),
+            mu=jax.tree.map(lambda s: s, mspec),
+            nu=jax.tree.map(lambda s: s, mspec),
+        )
     out = []
     for comp in opt_state:
         if hasattr(comp, "_fields") and set(comp._fields) >= {"mu", "nu"}:

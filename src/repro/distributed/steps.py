@@ -10,11 +10,18 @@ Gradient accumulation: `microbatches > 1` runs a `lax.scan` over microbatch
 slices, averaging gradients in fp32 — how the 96K global batch is fed
 through a fixed device footprint, matching the paper's setup (96K sequences
 over 1536 workers = 62.5/worker, accumulated).
+
+Mixed precision: pass `policy=get_policy("fp16_mixed")` (or "bf16") and the
+raw optimizer — the builder wraps it with `mixed_precision` (fp32 master
+weights), scales the loss by the loss scale carried in the optimizer state
+before `value_and_grad`, accumulates microbatch grads in fp32 as before, and
+the wrapper's `lax.cond` skips the step + halves the scale on non-finite
+grads. Metrics gain `loss_scale` / `overflow_count` / `grads_finite`.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,29 +33,48 @@ from repro.distributed import sharding as shd
 PyTree = Any
 
 
-class TrainStepBundle(NamedTuple):
-    init_fn: Callable            # rng -> (params, opt_state)
-    step_fn: Callable            # (params, opt_state, batch) -> (params, opt_state, metrics)
-    params_spec: PyTree
-    opt_spec: PyTree
-    batch_spec_fn: Callable      # batch pytree -> spec pytree
-
-
 def build_train_step(
     loss_fn: Callable,           # (params, batch) -> (loss, aux_dict)
-    tx,                          # GradientTransformation
+    tx,                          # GradientTransformation (raw, unwrapped)
     mesh: Mesh,
     *,
     microbatches: int = 1,
     zero3: bool = False,
     param_init_fn: Optional[Callable] = None,
+    policy=None,                 # repro.precision.Policy or name, optional
+    loss_scale=None,             # override the policy's default scaler
 ):
-    """Returns a TrainStepBundle. loss_fn must be pure and jit-able."""
+    """Returns (step_fn, init_fn, specs_for). loss_fn must be pure/jit-able.
+
+    step_fn:   (params, opt_state, batch) -> (params, opt_state, metrics)
+    init_fn:   rng -> (params, opt_state)
+    specs_for: (params_like, opt_like) -> (params_pspec, opt_pspec)
+    """
+    if policy is not None:
+        from repro import precision
+        policy = precision.get_policy(policy)
+        if policy.wants_wrapper:
+            tx = precision.mixed_precision(tx, policy, loss_scale)
+    mixed = policy is not None and policy.wants_wrapper
 
     def step_fn(params, opt_state, batch):
+        if mixed:
+            from repro.precision import loss_scale_value
+            scale = loss_scale_value(opt_state)
+        else:
+            scale = None
+
         def grads_of(mb):
-            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, mb)
+            def objective(p, b):
+                loss, aux = loss_fn(p, b)
+                if scale is None:
+                    return loss, (loss, aux)
+                # scale AFTER the fp32 loss reduction; grads flow scaled and
+                # the mixed_precision wrapper divides the scale back out.
+                return loss * scale.astype(loss.dtype), (loss, aux)
+
+            (_, (loss, aux)), grads = jax.value_and_grad(
+                objective, has_aux=True)(params, mb)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
             return loss, aux, grads
 
@@ -80,11 +106,19 @@ def build_train_step(
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
                              for g in jax.tree.leaves(grads)))
         metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        if mixed:
+            from repro.precision import all_finite, overflow_count
+            metrics["grad_norm"] = gnorm / scale   # report unscaled
+            metrics["grads_finite"] = all_finite(grads)
+            metrics["loss_scale"] = loss_scale_value(new_opt)
+            metrics["overflow_count"] = overflow_count(new_opt)
         return new_params, new_opt, metrics
 
     def init_fn(rng):
         assert param_init_fn is not None
         params = param_init_fn(rng)
+        if policy is not None:
+            params = policy.cast_params(params)
         return params, tx.init(params)
 
     # sharding specs require a concrete/abstract params tree; caller supplies

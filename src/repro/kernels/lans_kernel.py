@@ -150,9 +150,9 @@ def lans_phase1(scalars, g2d, m2d, v2d, x2d, *, beta1, beta2, eps,
 # norms layout:   [r_sq, c_sq, x_sq, 0, 0, 0, 0, 0]
 # ---------------------------------------------------------------------------
 
-def _lans_phase2_kernel(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
-                        x_out, *, beta1, beta2, eps):
-    del beta2
+def _phase2_x_new(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
+                  *, beta1, eps):
+    """Shared phase-2 body: returns the fp32 updated tile x - eta*d."""
     bc1 = scal_ref[0, 0]
     bc2 = scal_ref[0, 1]
     eta = scal_ref[0, 2]
@@ -181,7 +181,27 @@ def _lans_phase2_kernel(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
     sc = jnp.where(trust_flag > 0.0, sc, 1.0)
 
     d = beta1 * sr * r_full + (1.0 - beta1) * sc * c_full
-    x_out[...] = (x - eta * d).astype(x_out.dtype)
+    return x - eta * d
+
+
+def _lans_phase2_kernel(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
+                        x_out, *, beta1, beta2, eps):
+    del beta2
+    x_new = _phase2_x_new(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
+                          beta1=beta1, eps=eps)
+    x_out[...] = x_new.astype(x_out.dtype)
+
+
+def _lans_phase2_cast_kernel(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
+                             x_out, lp_out, *, beta1, beta2, eps):
+    """Mixed-precision phase 2: one pass writes BOTH the fp32 master update
+    and its low-precision cast. Saves re-reading x_new from HBM for the
+    model-copy cast that fp16/bf16 training needs every step."""
+    del beta2
+    x_new = _phase2_x_new(scal_ref, norm_ref, g_ref, m_ref, v_ref, x_ref,
+                          beta1=beta1, eps=eps)
+    x_out[...] = x_new.astype(x_out.dtype)
+    lp_out[...] = x_new.astype(lp_out.dtype)
 
 
 def lans_phase2(scalars, norms, g2d, m2d, v2d, x2d, *, beta1, beta2, eps,
@@ -201,5 +221,35 @@ def lans_phase2(scalars, norms, g2d, m2d, v2d, x2d, *, beta1, beta2, eps,
         ],
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((rows, LANES), x2d.dtype),
+        interpret=interpret,
+    )(scalars, norms, g2d, m2d, v2d, x2d)
+
+
+def lans_phase2_cast(scalars, norms, g2d, m2d, v2d, x2d, *, lp_dtype,
+                     beta1, beta2, eps, interpret: bool = True):
+    """Phase 2 with fused low-precision cast: returns (x_new_f32, x_new_lp).
+
+    TILE_ROWS=256 respects the (16,128) bf16 / fp16 minimum tile, so the
+    same grid works for every lp_dtype.
+    """
+    rows, lanes = g2d.shape
+    assert lanes == LANES and rows % TILE_ROWS == 0
+    grid = (rows // TILE_ROWS,)
+    tile = pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0))
+    kern = functools.partial(_lans_phase2_cast_kernel,
+                             beta1=beta1, beta2=beta2, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            tile, tile, tile, tile,
+        ],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), lp_dtype),
+        ],
         interpret=interpret,
     )(scalars, norms, g2d, m2d, v2d, x2d)

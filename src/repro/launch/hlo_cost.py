@@ -252,12 +252,21 @@ class HloModule:
         result_elems = 0.0
         for _, dims in result_shapes:
             result_elems += _nelems(dims)
-        # lhs operand: first %name inside dot(...)
-        m = re.search(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", rhs)
         lhs_dims: Optional[List[int]] = None
+        m = re.search(r"dot\(([^)]*)\)", rhs)
         if m:
-            lhs_name = m.group(1)
-            lhs_dims = self._shape_dims.get(lhs_name)
+            inner = m.group(1)
+            # newer jax prints operands with inline shapes:
+            #   dot(f32[128,256]{1,0} %Arg_0.1, f32[256,64]{1,0} %Arg_1.2)
+            inline = _SHAPE_RE.findall(inner)
+            if inline:
+                d = inline[0][1]
+                lhs_dims = [int(x) for x in d.split(",")] if d else []
+            else:
+                # older style: dot(%Arg_0.1, %Arg_1.2) — symbol-table lookup
+                names = re.findall(r"%([\w.\-]+)", inner)
+                if names:
+                    lhs_dims = self._shape_dims.get(names[0])
         cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
         contract = 1.0
         if cm and lhs_dims:

@@ -15,7 +15,13 @@ import jax
 
 
 def _mk(shape, axes):
-    from jax.sharding import AxisType
+    # AxisType (and make_mesh's axis_types kwarg) only exist on newer jax;
+    # older versions treat every axis as Auto already, so plain make_mesh is
+    # semantically identical there.
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 

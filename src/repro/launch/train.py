@@ -7,10 +7,20 @@ point scales to the production mesh (--mesh production).
 
   PYTHONPATH=src python -m repro.launch.train --arch bert-large --steps 50 \
       --batch 32 --seq 128 --optimizer lans
+
+Mixed precision (--precision {fp32,bf16,fp16}): fp16/bf16 hold the model
+copy in half precision with fp32 master weights in the optimizer state;
+fp16 adds apex-style dynamic loss scaling (skip the step + halve the scale
+on overflow, grow it back after clean steps). The live `loss_scale` and
+`overflow_count` appear in the console line and the JSONL metrics:
+
+  PYTHONPATH=src python -m repro.launch.train --arch bert-large --steps 30 \
+      --precision fp16 --metrics /tmp/fp16.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -21,13 +31,17 @@ import numpy as np
 
 from repro.checkpoint import save as ckpt_save
 from repro.configs import get_arch, reduced_arch
-from repro.core.optim import adamw, apply_updates, lamb, lans
+from repro.core.optim import adamw, lamb, lans
 from repro.core.schedules import warmup_hold_decay, warmup_linear_decay
 from repro.data.corpus import SyntheticCorpus, lm_batch_iterator, mlm_batch_iterator
 from repro.data.sharding import ShardSpec
+from repro import precision as prec
 
 
-def make_optimizer(name: str, schedule, **kw):
+def make_optimizer(name: str, schedule, *, policy=None, **kw):
+    if name == "lans" and policy is not None:
+        # moments store in the policy's dtype (math stays fp32 in-kernel).
+        kw.setdefault("mu_dtype", policy.moment_dtype)
     return {"lans": lans, "lamb": lamb, "adamw": adamw}[name](schedule, **kw)
 
 
@@ -75,6 +89,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--optimizer", default="lans",
                     choices=["lans", "lamb", "adamw"])
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "fp16"],
+                    help="fp16/bf16: low-precision model copy + fp32 master "
+                         "weights; fp16 adds dynamic loss scaling")
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--schedule", default="hold",
                     choices=["hold", "linear", "const"])
@@ -99,19 +117,21 @@ def main():
         sched = warmup_linear_decay(args.lr, args.steps + 1, warm)
     else:
         sched = lambda _: jnp.asarray(args.lr, jnp.float32)
-    tx = make_optimizer(args.optimizer, sched)
+    policy = prec.get_policy(args.precision)
+    tx = make_optimizer(args.optimizer, sched, policy=policy)
+    if policy.wants_wrapper:
+        arch = dataclasses.replace(arch, cfg=policy.apply_to_cfg(arch.cfg))
 
-    rng = jax.random.PRNGKey(args.seed)
-    params = arch.init(rng)
-    opt_state = tx.init(params)
+    # One step builder for every entry point: build_train_step owns the
+    # mixed-precision wiring (master-weight wrapper, loss scaling, metrics).
+    from repro.distributed.steps import build_train_step, jit_train_step
+    from repro.launch.mesh import make_local_mesh
 
-    @jax.jit
-    def step(params, opt_state, batch):
-        (loss, aux), grads = jax.value_and_grad(
-            arch.loss_fn, has_aux=True)(params, batch)
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-        updates, opt_state = tx.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
+    mesh = make_local_mesh(data=1, model=1)
+    step_fn, init_fn, specs_for = build_train_step(
+        arch.loss_fn, tx, mesh, param_init_fn=arch.init, policy=policy)
+    params, opt_state = init_fn(jax.random.PRNGKey(args.seed))
+    pspec, ospec = specs_for(params, opt_state)
 
     from repro.metrics import MetricsLogger
 
@@ -119,16 +139,29 @@ def main():
     t0 = time.time()
     losses = []
     logger = MetricsLogger(args.metrics or None)
-    for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
-        params, opt_state, loss = step(params, opt_state, batch)
-        losses.append(float(loss))
-        logger.log(i + 1, loss=loss, lr=sched(jnp.asarray(i)))
-        if (i + 1) % args.log_every == 0 or i == 0:
-            print(f"step {i+1:5d}  loss {losses[-1]:.4f}  "
-                  f"(ema {logger.smoothed_loss:.4f})  "
-                  f"lr {float(sched(jnp.asarray(i))):.2e}  "
-                  f"{(time.time()-t0)/(i+1):.2f}s/step", flush=True)
+    step = None
+    with mesh:
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            if step is None:
+                step = jit_train_step(step_fn, mesh, pspec, ospec, batch)
+            params, opt_state, metrics = step(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            extra = {}
+            if policy.wants_wrapper:
+                extra = {"loss_scale": metrics["loss_scale"],
+                         "overflow_count": metrics["overflow_count"]}
+            logger.log(i + 1, loss=metrics["loss"],
+                       lr=sched(jnp.asarray(i)), **extra)
+            if (i + 1) % args.log_every == 0 or i == 0:
+                ls_txt = (f"  scale {float(extra['loss_scale']):.0f}"
+                          f"  ovf {int(extra['overflow_count'])}"
+                          if extra else "")
+                print(f"step {i+1:5d}  loss {losses[-1]:.4f}  "
+                      f"(ema {logger.smoothed_loss:.4f})  "
+                      f"lr {float(sched(jnp.asarray(i))):.2e}  "
+                      f"{(time.time()-t0)/(i+1):.2f}s/step{ls_txt}",
+                      flush=True)
     logger.close()
 
     if args.ckpt_dir:

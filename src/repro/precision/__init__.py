@@ -1,0 +1,47 @@
+"""Mixed-precision training subsystem.
+
+Precision policies (param/compute/output dtypes with per-block fp32
+overrides), apex-style loss scaling (dynamic skip-and-halve / static), fp32
+master weights as a composable GradientTransformation wrapper, and a fused
+Pallas cast-and-apply LANS path.
+
+    policy = get_policy("fp16_mixed")
+    tx = mixed_precision(lans(sched, mu_dtype=policy.moment_dtype), policy)
+    params = policy.cast_params(arch.init(rng))
+    state = tx.init(params)
+    # each step: scale loss by loss_scale_value(state), grads flow scaled,
+    # tx.update unscales in fp32, skips + halves on overflow.
+"""
+from repro.precision.loss_scale import (
+    DynamicLossScale,
+    LossScaleState,
+    StaticLossScale,
+    all_finite,
+)
+from repro.precision.mixed import (
+    MixedPrecisionState,
+    find_loss_scale,
+    loss_scale_value,
+    mixed_precision,
+    overflow_count,
+)
+from repro.precision.fused import FusedMixedState, fused_mixed_lans
+from repro.precision.policy import KEEP_FP32, Policy, get_policy, tree_cast
+
+__all__ = [
+    "DynamicLossScale",
+    "FusedMixedState",
+    "KEEP_FP32",
+    "LossScaleState",
+    "MixedPrecisionState",
+    "Policy",
+    "StaticLossScale",
+    "all_finite",
+    "find_loss_scale",
+    "fused_mixed_lans",
+    "get_policy",
+    "loss_scale_value",
+    "mixed_precision",
+    "overflow_count",
+    "tree_cast",
+]

@@ -1,0 +1,132 @@
+"""fused_mixed_lans: the Pallas cast-and-apply path as a transform.
+
+The generic `mixed_precision(fused_lans(...), policy)` composition works, but
+it re-casts the whole master tree to low precision OUTSIDE the kernel — an
+extra full read+write of the parameters per step. This transform instead
+routes every block through `ops.fused_lans_mixed_step`, whose phase-2 kernel
+writes the fp32 master update AND its low-precision cast in one pass: per
+step that saves 4+P bytes/param of HBM traffic (4 re-read of x_new, P write
+merged into the pass that already owns the tile).
+
+State layout matches mixed_precision's sparse-master convention so the
+sharding rules (distributed/sharding.py) and byte accounting agree; moments
+are fp32 because the kernels accumulate into them directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.base import (
+    GradientTransformation,
+    WeightDecayMask,
+    tree_paths,
+)
+from repro.kernels import ops
+from repro.precision.loss_scale import LossScaleState, all_finite
+from repro.precision.mixed import _merge_master, _stash_master
+from repro.precision.policy import Policy, _is_float
+
+PyTree = Any
+
+
+class FusedMixedState(NamedTuple):
+    loss_scale: LossScaleState
+    count: jnp.ndarray  # int32 completed steps
+    master: PyTree      # sparse fp32 masters (placeholder where params fp32)
+    mu: PyTree          # fp32 (kernel contract)
+    nu: PyTree          # fp32
+
+
+def fused_mixed_lans(
+    learning_rate,
+    policy: Policy,
+    loss_scale=None,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    decay_mask: Optional[Callable[[str], bool]] = None,
+    interpret: bool = True,
+) -> GradientTransformation:
+    """Kernel-fused LANS + master weights + loss scaling in one transform."""
+    ls = loss_scale if loss_scale is not None else policy.make_loss_scale()
+    mask_fn = decay_mask or WeightDecayMask()
+    sched = learning_rate if callable(learning_rate) else (
+        lambda _: jnp.asarray(learning_rate, jnp.float32))
+
+    def init_fn(params):
+        master = jax.tree.map(
+            lambda p: p.astype(jnp.float32) if _is_float(p) else p, params)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return FusedMixedState(
+            loss_scale=ls.init(),
+            count=jnp.zeros([], jnp.int32),
+            master=_stash_master(master, params),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update_fn(updates, state, params):
+        if params is None:
+            raise ValueError("fused_mixed_lans requires params.")
+        master = _merge_master(state.master, params)
+        grads32 = ls.unscale(updates, state.loss_scale)
+        finite = all_finite(grads32)
+
+        paths = tree_paths(params)
+        masks = jax.tree.map(lambda pth: bool(mask_fn(pth)), paths)
+        lp_dtypes = jax.tree.map(policy.leaf_dtype, paths)
+        t = state.count + 1
+        eta = sched(state.count)
+
+        treedef = jax.tree_util.tree_structure(params)
+        flat = lambda tree: treedef.flatten_up_to(tree)
+
+        def _one(g, m, v, x, ld, dm):
+            if not _is_float(x):  # non-float leaves pass through untouched
+                return ops.MixedStepOut(x, m, v, x)
+            return ops.fused_lans_mixed_step(
+                g, m, v, x, eta=eta, step=t, lp_dtype=ld,
+                beta1=beta1, beta2=beta2, eps=eps,
+                lam=weight_decay if dm else 0.0,
+                apply_trust=bool(dm), interpret=interpret)
+
+        def _step(operand):
+            mst, mu, nu = operand
+            outs = [
+                _one(g, m, v, x, ld, dm)
+                for g, m, v, x, ld, dm in zip(
+                    flat(grads32), flat(mu), flat(nu), flat(mst),
+                    flat(lp_dtypes), flat(masks))
+            ]
+            unflat = jax.tree_util.tree_unflatten
+            return (unflat(treedef, [o.x for o in outs]),
+                    unflat(treedef, [o.m for o in outs]),
+                    unflat(treedef, [o.v for o in outs]),
+                    unflat(treedef, [o.x_lp for o in outs]))
+
+        def _skip(operand):
+            mst, mu, nu = operand
+            # lp params already equal cast(master): re-emit them unchanged.
+            return mst, mu, nu, params
+
+        new_master, new_mu, new_nu, new_lp = jax.lax.cond(
+            finite, _step, _skip, (master, state.mu, state.nu))
+
+        updates_out = jax.tree.map(lambda n_, p: n_ - p, new_lp, params)
+        new_state = FusedMixedState(
+            loss_scale=ls.adjust(state.loss_scale, finite),
+            # count only advances on applied steps, matching the generic
+            # wrapper: bias correction must track the number of moment
+            # updates, and a skipped step must not consume a schedule tick.
+            count=state.count + finite.astype(jnp.int32),
+            master=_stash_master(new_master, params),
+            mu=new_mu,
+            nu=new_nu,
+        )
+        return updates_out, new_state
+
+    return GradientTransformation(init_fn, update_fn)

@@ -1,0 +1,112 @@
+"""Loss scaling — the paper-era apex state machine, jit-native.
+
+fp16 gradients underflow (min normal 6e-5); scaling the loss by S shifts the
+gradient distribution into representable range, and the optimizer divides it
+back out in fp32. Overflow is the failure mode: any inf/nan gradient means S
+was too large, so the step is SKIPPED (params/moments untouched) and S is
+halved. After `growth_interval` consecutive good steps S doubles back.
+
+State is a flat NamedTuple of scalars so it rides inside the optimizer state
+through jit/pjit/lax.cond without special casing. Both scalers are frozen
+dataclasses (static under jit); all decisions are jnp.where on traced
+scalars — no host sync anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class LossScaleState(NamedTuple):
+    scale: jnp.ndarray           # fp32 scalar, current multiplier S
+    good_steps: jnp.ndarray      # int32, consecutive finite steps since last change
+    overflow_count: jnp.ndarray  # int32, total skipped steps (monotonic)
+
+
+def all_finite(tree: PyTree) -> jnp.ndarray:
+    """Scalar bool: every element of every floating leaf is finite."""
+    leaves = [l for l in jax.tree.leaves(tree)
+              if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    if not leaves:
+        return jnp.bool_(True)
+    finite = jnp.bool_(True)
+    for l in leaves:
+        finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(l)))
+    return finite
+
+
+def unscale_grads(grads: PyTree, state: LossScaleState) -> PyTree:
+    """grads / S in fp32 (float leaves only) — shared by both scalers."""
+    inv = 1.0 / state.scale
+    return jax.tree.map(
+        lambda g: g.astype(jnp.float32) * inv
+        if jnp.issubdtype(jnp.asarray(g).dtype, jnp.floating) else g,
+        grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicLossScale:
+    """apex.amp dynamic scaling: start high, halve on overflow, double after
+    `growth_interval` clean steps. Defaults match apex's DynamicLossScaler
+    (init 2^16, window 2000, x2 growth / x0.5 backoff)."""
+
+    init_scale: float = 2.0 ** 16
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    growth_interval: int = 2000
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+
+    def init(self) -> LossScaleState:
+        return LossScaleState(
+            scale=jnp.asarray(self.init_scale, jnp.float32),
+            good_steps=jnp.zeros([], jnp.int32),
+            overflow_count=jnp.zeros([], jnp.int32),
+        )
+
+    unscale = staticmethod(unscale_grads)
+
+    def adjust(self, state: LossScaleState, grads_finite) -> LossScaleState:
+        good = state.good_steps + 1
+        grow = good >= self.growth_interval
+        grown = jnp.minimum(state.scale * self.growth_factor, self.max_scale)
+        scale_ok = jnp.where(grow, grown, state.scale)
+        good_ok = jnp.where(grow, 0, good).astype(jnp.int32)
+        scale_bad = jnp.maximum(state.scale * self.backoff_factor,
+                                self.min_scale)
+        return LossScaleState(
+            scale=jnp.where(grads_finite, scale_ok, scale_bad),
+            good_steps=jnp.where(grads_finite, good_ok, 0).astype(jnp.int32),
+            overflow_count=state.overflow_count
+            + (1 - grads_finite.astype(jnp.int32)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticLossScale:
+    """Fixed multiplier (1.0 == no scaling, the bf16 case). Overflow still
+    skips the step and is counted, but the scale never moves."""
+
+    scale_value: float = 1.0
+
+    def init(self) -> LossScaleState:
+        return LossScaleState(
+            scale=jnp.asarray(self.scale_value, jnp.float32),
+            good_steps=jnp.zeros([], jnp.int32),
+            overflow_count=jnp.zeros([], jnp.int32),
+        )
+
+    unscale = staticmethod(unscale_grads)
+
+    def adjust(self, state: LossScaleState, grads_finite) -> LossScaleState:
+        return LossScaleState(
+            scale=state.scale,
+            good_steps=state.good_steps + grads_finite.astype(jnp.int32),
+            overflow_count=state.overflow_count
+            + (1 - grads_finite.astype(jnp.int32)),
+        )

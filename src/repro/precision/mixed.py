@@ -1,0 +1,146 @@
+"""mixed_precision(): fp32 master weights around any GradientTransformation.
+
+The model holds low-precision params (policy.cast_params of the master); the
+wrapper owns the fp32 master copy and runs the inner optimizer on it, so
+`lans`/`lamb`/`adamw`/`fused_lans` compose unchanged:
+
+    tx = mixed_precision(lans(sched, mu_dtype=policy.moment_dtype), policy)
+    state = tx.init(lp_params)                  # builds master + inner state
+    updates, state = tx.update(scaled_grads, state, lp_params)
+    lp_params = apply_updates(lp_params, updates)
+
+Semantics per update (apex O2):
+  1. unscale grads to fp32 (divide by the carried loss scale),
+  2. check finiteness; on overflow lax.cond skips the inner optimizer
+     entirely — master, moments and (exactly) the low-precision params are
+     unchanged, the scale is halved,
+  3. otherwise the inner tx steps the MASTER weights in fp32 and the new
+     low-precision copy is re-cast from the master.
+
+Master storage is sparse: leaves the policy keeps fp32 (LayerNorm/bias) ARE
+their own master, so the wrapper stores a zero-size placeholder for them —
+optimizer state for a low-precision policy is strictly smaller than fp32
+training despite the extra master copy (see benchmarks/precision_sweep.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.base import GradientTransformation, apply_updates
+from repro.precision.loss_scale import LossScaleState, all_finite
+from repro.precision.policy import Policy, _is_float
+
+PyTree = Any
+
+
+class MixedPrecisionState(NamedTuple):
+    loss_scale: LossScaleState
+    master: PyTree  # fp32 masters; zero-size placeholder where params are fp32
+    inner: Any      # inner optimizer state, built over the fp32 master tree
+
+
+def _placeholder():
+    return jnp.zeros((0,), jnp.float32)
+
+
+def _needs_master(p) -> bool:
+    return _is_float(p) and jnp.dtype(p.dtype) != jnp.dtype(jnp.float32)
+
+
+def _stash_master(master: PyTree, params: PyTree) -> PyTree:
+    """Keep master only where the model copy is low precision."""
+    return jax.tree.map(
+        lambda m, p: m if _needs_master(p) else _placeholder(), master, params)
+
+
+def _merge_master(stored: PyTree, params: PyTree) -> PyTree:
+    """Rebuild the full master from sparse storage + the fp32 leaves of
+    params (which are bit-identical to their master by construction)."""
+    def merge(s, p):
+        if s.size != 0:
+            return s
+        return p.astype(jnp.float32) if _is_float(p) else p
+
+    return jax.tree.map(merge, stored, params)
+
+
+def mixed_precision(
+    tx: GradientTransformation,
+    policy: Policy,
+    loss_scale=None,
+) -> GradientTransformation:
+    """Wrap `tx` with master weights + loss scaling per `policy`.
+
+    `loss_scale` defaults to the policy's scaler (dynamic for fp16_mixed,
+    static 1.0 for bf16). Incoming grads are expected SCALED (the train step
+    multiplies the loss by the carried scale); the wrapper unscales in fp32.
+    """
+    ls = loss_scale if loss_scale is not None else policy.make_loss_scale()
+
+    def init_fn(params):
+        master = jax.tree.map(
+            lambda p: p.astype(jnp.float32) if _is_float(p) else p, params)
+        return MixedPrecisionState(
+            loss_scale=ls.init(),
+            master=_stash_master(master, params),
+            inner=tx.init(master),
+        )
+
+    def update_fn(updates, state, params=None):
+        if params is None:
+            raise ValueError("mixed_precision requires params "
+                             "(the low-precision model copy).")
+        master = _merge_master(state.master, params)
+        grads32 = ls.unscale(updates, state.loss_scale)
+        finite = all_finite(grads32)
+
+        def _step(operand):
+            mst, inner = operand
+            u32, inner2 = tx.update(grads32, inner, mst)
+            return apply_updates(mst, u32), inner2
+
+        # Overflow => skip: master/moments pass through untouched, so the
+        # re-cast lp params are exactly unchanged and updates are exact zeros.
+        new_master, new_inner = jax.lax.cond(
+            finite, _step, lambda operand: operand, (master, state.inner))
+
+        new_lp = policy.cast_params(new_master)
+        updates_out = jax.tree.map(lambda n, p: n - p, new_lp, params)
+
+        new_state = MixedPrecisionState(
+            loss_scale=ls.adjust(state.loss_scale, finite),
+            master=_stash_master(new_master, params),
+            inner=new_inner,
+        )
+        return updates_out, new_state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ---------------------------------------------------------------------------
+# State introspection — the train step reads the carried scale from inside
+# the (possibly nested) optimizer state to scale the loss BEFORE the grads
+# exist, and logs overflow_count from the post-update state.
+# ---------------------------------------------------------------------------
+
+def find_loss_scale(opt_state) -> Optional[LossScaleState]:
+    """First LossScaleState anywhere in an optimizer-state pytree, else None."""
+    hits = [
+        l for l in jax.tree.leaves(
+            opt_state, is_leaf=lambda x: isinstance(x, LossScaleState))
+        if isinstance(l, LossScaleState)
+    ]
+    return hits[0] if hits else None
+
+
+def loss_scale_value(opt_state) -> jnp.ndarray:
+    s = find_loss_scale(opt_state)
+    return s.scale if s is not None else jnp.asarray(1.0, jnp.float32)
+
+
+def overflow_count(opt_state) -> jnp.ndarray:
+    s = find_loss_scale(opt_state)
+    return s.overflow_count if s is not None else jnp.zeros([], jnp.int32)

@@ -1,0 +1,145 @@
+"""Precision policies: which dtype each part of the training state lives in.
+
+A `Policy` names four dtypes plus the per-block override list:
+
+  param_dtype    dtype of the model's parameter copy (what loss_fn sees)
+  compute_dtype  dtype matmuls/attention run in (models cast at use)
+  output_dtype   dtype step outputs (logits/loss) are returned in
+  moment_dtype   storage dtype of optimizer first/second moments (math is
+                 always fp32 inside the optimizers; see lans mu_dtype)
+
+Per-block overrides (`keep_fp32`): parameter leaves whose path matches any
+substring stay fp32 regardless of param_dtype — LayerNorm scales/biases and
+other 1-D stabilizer params, matching apex O2 practice (the paper trained
+with fp16 compute + fp32 LN/master weights on V100s).
+
+The named policies:
+
+  fp32        everything fp32 (the seed behaviour; no wrapper needed)
+  bf16        bf16 params/compute, fp32 master weights, static scale 1
+              (bf16's fp32-sized exponent needs no loss scaling)
+  fp16_mixed  fp16 params/compute, fp32 master weights, dynamic loss
+              scaling with skip-and-halve on overflow (apex semantics)
+
+Casting utilities only touch floating leaves; integer leaves (token ids,
+counters) pass through untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.base import tree_paths
+
+PyTree = Any
+
+# LayerNorm/RMSNorm scales, every bias, and SSM stabilizers stay fp32.
+KEEP_FP32 = ("bias", "scale", "layernorm", "ln_", "norm", "a_log")
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    """Cast every floating leaf to `dtype`; non-float leaves untouched."""
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if _is_float(x) else x, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    output_dtype: Any = jnp.float32
+    moment_dtype: Any = jnp.float32
+    keep_fp32: Tuple[str, ...] = KEEP_FP32
+    loss_scaling: str = "none"  # "none" | "static" | "dynamic"
+
+    # ---------------- per-leaf dtype resolution ----------------
+
+    def leaf_dtype(self, path: str):
+        low = path.lower()
+        if any(s in low for s in self.keep_fp32):
+            return jnp.float32
+        return self.param_dtype
+
+    @property
+    def needs_master(self) -> bool:
+        """True when the model copy loses bits vs fp32 master weights."""
+        return jnp.dtype(self.param_dtype) != jnp.dtype(jnp.float32)
+
+    @property
+    def wants_wrapper(self) -> bool:
+        """True when training needs mixed_precision() around the optimizer."""
+        return self.needs_master or self.loss_scaling != "none"
+
+    # ---------------- tree casting ----------------
+
+    def cast_params(self, params: PyTree) -> PyTree:
+        """Model-copy cast with per-block overrides (LN/bias stay fp32)."""
+        paths = tree_paths(params)
+        return jax.tree.map(
+            lambda x, pth: x.astype(self.leaf_dtype(pth)) if _is_float(x)
+            else x, params, paths)
+
+    def cast_to_compute(self, tree: PyTree) -> PyTree:
+        return tree_cast(tree, self.compute_dtype)
+
+    def cast_output(self, x):
+        return jax.tree.map(
+            lambda v: v.astype(self.output_dtype) if _is_float(v) else v, x)
+
+    def make_loss_scale(self):
+        from repro.precision.loss_scale import DynamicLossScale, StaticLossScale
+        if self.loss_scaling == "dynamic":
+            return DynamicLossScale()
+        return StaticLossScale()
+
+    def apply_to_cfg(self, cfg):
+        """dataclasses.replace a model config's dtype fields, if it has them."""
+        kw = {}
+        if hasattr(cfg, "compute_dtype"):
+            kw["compute_dtype"] = self.compute_dtype
+        if hasattr(cfg, "param_dtype"):
+            kw["param_dtype"] = self.param_dtype
+        return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+_POLICIES = {
+    "fp32": Policy("fp32"),
+    "bf16": Policy(
+        "bf16",
+        param_dtype=jnp.bfloat16,
+        compute_dtype=jnp.bfloat16,
+        output_dtype=jnp.float32,
+        moment_dtype=jnp.bfloat16,
+        loss_scaling="static",
+    ),
+    "fp16_mixed": Policy(
+        "fp16_mixed",
+        param_dtype=jnp.float16,
+        compute_dtype=jnp.float16,
+        output_dtype=jnp.float32,
+        moment_dtype=jnp.bfloat16,
+        loss_scaling="dynamic",
+    ),
+    # compute-only cast: fp32 params, bf16 matmuls — no wrapper needed.
+    "bf16_compute": Policy(
+        "bf16_compute",
+        compute_dtype=jnp.bfloat16,
+    ),
+}
+_POLICIES["fp16"] = _POLICIES["fp16_mixed"]
+
+
+def get_policy(name) -> Policy:
+    if isinstance(name, Policy):
+        return name
+    if name not in _POLICIES:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(_POLICIES)}")
+    return _POLICIES[name]

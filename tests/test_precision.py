@@ -1,0 +1,349 @@
+"""Mixed-precision subsystem: policies, loss scaling, master weights, kernels."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import precision as prec
+from repro.configs import reduced_arch
+from repro.core.optim import apply_updates, lans
+from repro.kernels import ops
+from repro.precision import (
+    DynamicLossScale,
+    StaticLossScale,
+    fused_mixed_lans,
+    get_policy,
+    loss_scale_value,
+    mixed_precision,
+    overflow_count,
+)
+
+
+def _tiny_params():
+    return {
+        "layer": {"kernel": jnp.ones((8, 4), jnp.float32) * 0.5,
+                  "bias": jnp.zeros((4,), jnp.float32)},
+        "ln": {"scale": jnp.ones((4,), jnp.float32),
+               "bias": jnp.zeros((4,), jnp.float32)},
+        "ids": jnp.arange(3, dtype=jnp.int32),  # non-float leaf passes through
+    }
+
+
+# ---------------------------------------------------------------------------
+# Policy casting
+# ---------------------------------------------------------------------------
+
+def test_policy_casts_mixed_pytree_with_overrides():
+    policy = get_policy("fp16_mixed")
+    lp = policy.cast_params(_tiny_params())
+    assert lp["layer"]["kernel"].dtype == jnp.float16
+    # per-block overrides: LN scale + every bias stay fp32
+    assert lp["layer"]["bias"].dtype == jnp.float32
+    assert lp["ln"]["scale"].dtype == jnp.float32
+    assert lp["ln"]["bias"].dtype == jnp.float32
+    # integer leaves untouched
+    assert lp["ids"].dtype == jnp.int32
+
+    bf = get_policy("bf16").cast_params(_tiny_params())
+    assert bf["layer"]["kernel"].dtype == jnp.bfloat16
+    assert bf["ln"]["scale"].dtype == jnp.float32
+
+    f32 = get_policy("fp32").cast_params(_tiny_params())
+    assert all(l.dtype in (jnp.float32, jnp.int32)
+               for l in jax.tree.leaves(f32))
+
+
+def test_policy_registry_aliases():
+    assert get_policy("fp16") is get_policy("fp16_mixed")
+    with pytest.raises(KeyError):
+        get_policy("fp8_e4m3")  # not (yet) a policy
+    p = get_policy("fp32")
+    assert get_policy(p) is p  # idempotent on Policy instances
+
+
+# ---------------------------------------------------------------------------
+# Loss-scale state machine
+# ---------------------------------------------------------------------------
+
+def test_dynamic_scale_overflow_halves_and_recovery_doubles():
+    ls = DynamicLossScale(init_scale=1024.0, growth_interval=2)
+    st = ls.init()
+    bad = jnp.bool_(False)
+    good = jnp.bool_(True)
+
+    st = ls.adjust(st, bad)
+    assert float(st.scale) == 512.0 and int(st.overflow_count) == 1
+    st = ls.adjust(st, bad)
+    assert float(st.scale) == 256.0 and int(st.overflow_count) == 2
+    st = ls.adjust(st, good)
+    assert float(st.scale) == 256.0 and int(st.good_steps) == 1
+    st = ls.adjust(st, good)  # second clean step -> grow
+    assert float(st.scale) == 512.0 and int(st.good_steps) == 0
+
+
+def test_dynamic_scale_respects_bounds():
+    ls = DynamicLossScale(init_scale=2.0, growth_interval=1,
+                          min_scale=1.0, max_scale=4.0)
+    st = ls.init()
+    st = ls.adjust(st, jnp.bool_(True))
+    st = ls.adjust(st, jnp.bool_(True))
+    st = ls.adjust(st, jnp.bool_(True))
+    assert float(st.scale) == 4.0  # clamped at max
+    for _ in range(5):
+        st = ls.adjust(st, jnp.bool_(False))
+    assert float(st.scale) == 1.0  # clamped at min
+
+
+def test_static_scale_never_moves():
+    ls = StaticLossScale(1.0)
+    st = ls.init()
+    st = ls.adjust(st, jnp.bool_(False))
+    assert float(st.scale) == 1.0 and int(st.overflow_count) == 1
+
+
+# ---------------------------------------------------------------------------
+# mixed_precision wrapper: overflow/recovery under jit
+# ---------------------------------------------------------------------------
+
+def test_overflow_skips_step_halves_scale_params_unchanged_under_jit():
+    policy = get_policy("fp16_mixed")
+    lp = policy.cast_params(_tiny_params())
+    tx = mixed_precision(lans(1e-2), policy)
+    state = tx.init(lp)
+    scale0 = float(loss_scale_value(state))
+
+    @jax.jit
+    def step(p, s, g):
+        u, s2 = tx.update(g, s, p)
+        return apply_updates(p, u), s2
+
+    def grads_like(p, fill):
+        return jax.tree.map(
+            lambda x: jnp.full(x.shape, fill, x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else jnp.zeros_like(x), p)
+
+    # seeded overflow: one inf leaf => whole step must be skipped
+    bad = grads_like(lp, 1.0)
+    bad["layer"]["kernel"] = bad["layer"]["kernel"].at[0, 0].set(jnp.inf)
+    p2, s2 = step(lp, state, bad)
+
+    assert float(loss_scale_value(s2)) == scale0 / 2       # halved
+    assert int(overflow_count(s2)) == 1                     # counted
+    for a, b in zip(jax.tree.leaves(lp), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # clean step afterwards trains normally at the reduced scale
+    good = grads_like(lp, float(loss_scale_value(s2)))
+    p3, s3 = step(p2, s2, good)
+    assert int(overflow_count(s3)) == 1
+    assert bool(jnp.any(p3["layer"]["kernel"] != p2["layer"]["kernel"]))
+
+
+def test_dynamic_scale_grows_inside_jit_after_interval():
+    policy = get_policy("fp16_mixed")
+    lp = policy.cast_params(_tiny_params())
+    ls = DynamicLossScale(init_scale=8.0, growth_interval=3)
+    tx = mixed_precision(lans(1e-3), policy, loss_scale=ls)
+    state = tx.init(lp)
+
+    @jax.jit
+    def step(p, s, g):
+        u, s2 = tx.update(g, s, p)
+        return apply_updates(p, u), s2
+
+    g = jax.tree.map(
+        lambda x: jnp.ones(x.shape, x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else jnp.zeros_like(x), lp)
+    p, s = lp, state
+    for _ in range(3):
+        p, s = step(p, s, g)
+    assert float(loss_scale_value(s)) == 16.0
+
+
+# ---------------------------------------------------------------------------
+# Master-weight round trip: fp16_mixed tracks fp32 LANS
+# ---------------------------------------------------------------------------
+
+def test_master_weight_parity_reduced_bert_large():
+    """Identical gradient sequences through fp32 LANS vs fp16_mixed LANS:
+    the fp32 master must evolve IDENTICALLY (the lp copy only affects the
+    forward pass, which is pinned here), so the low-precision params equal
+    the fp16 cast of the fp32 result to 1 ulp. This isolates the master
+    round trip: stash/merge, power-of-two unscaling, cast-back."""
+    arch = reduced_arch("bert-large")
+    params0 = arch.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S = 2, 32
+    toks = rng.integers(0, arch.cfg.vocab, size=(B, S))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "mlm_labels": jnp.asarray(
+                 np.where(rng.random((B, S)) < 0.15, toks, -100), jnp.int32),
+             "nsp_labels": jnp.zeros((B,), jnp.int32)}
+    # one real backward pass supplies the (fixed) gradient direction
+    (_, _), g0 = jax.value_and_grad(arch.loss_fn, has_aux=True)(params0, batch)
+    g0 = jax.tree.map(lambda x: x.astype(jnp.float32), g0)
+    SCALE = 128.0  # power of two: scale/unscale round trip is exact in fp32
+
+    def train_fp32(steps=3):
+        tx = lans(5e-3)
+        p, st = params0, tx.init(params0)
+        for i in range(steps):
+            g = jax.tree.map(lambda x: x * (1.0 + 0.1 * i), g0)
+            u, st = tx.update(g, st, p)
+            p = apply_updates(p, u)
+        return p
+
+    def train_fp16(steps=3):
+        # fp32 moments so the only deltas are master-weight machinery
+        policy = dataclasses.replace(get_policy("fp16_mixed"),
+                                     moment_dtype=jnp.float32)
+        tx = mixed_precision(lans(5e-3), policy,
+                             loss_scale=StaticLossScale(SCALE))
+        p = policy.cast_params(params0)
+        st = tx.init(p)
+        for i in range(steps):
+            g = jax.tree.map(lambda x: x * (1.0 + 0.1 * i) * SCALE, g0)
+            u, st = tx.update(g, st, p)
+            p = apply_updates(p, u)
+        return p
+
+    p_ref = train_fp32()
+    p_lp = train_fp16()
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(p_ref)[0],
+            jax.tree_util.tree_flatten_with_path(p_lp)[0]):
+        a_cast = np.asarray(a.astype(b.dtype), np.float32)  # 1-ulp headroom
+        np.testing.assert_allclose(
+            a_cast, np.asarray(b, np.float32), rtol=1e-3, atol=1e-6,
+            err_msg=f"{jax.tree_util.keystr(path)}")
+
+
+# ---------------------------------------------------------------------------
+# Fused cast-and-apply path
+# ---------------------------------------------------------------------------
+
+def test_fused_mixed_kernel_lp_output_is_cast_of_master():
+    rng = np.random.default_rng(0)
+    n = 1 << 12
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    m = jnp.zeros((n,), jnp.float32)
+    v = jnp.zeros((n,), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    out = ops.fused_lans_mixed_step(g, m, v, x, eta=0.01, step=1,
+                                    lp_dtype=jnp.float16)
+    ref = ops.fused_lans_step(g, m, v, x, eta=0.01, step=1)
+    np.testing.assert_allclose(np.asarray(out.x), np.asarray(ref.x),
+                               rtol=1e-6, atol=1e-7)
+    assert out.x_lp.dtype == jnp.float16
+    np.testing.assert_array_equal(
+        np.asarray(out.x_lp), np.asarray(out.x.astype(jnp.float16)))
+
+
+def test_fused_mixed_lans_matches_generic_wrapper():
+    policy = dataclasses.replace(get_policy("fp16_mixed"),
+                                 moment_dtype=jnp.float32)
+    lp = policy.cast_params(_tiny_params())
+    ls = StaticLossScale(64.0)
+
+    def run(tx, steps=4):
+        p, st = lp, tx.init(lp)
+        for i in range(steps):
+            fill = jnp.inf if i == 1 else 64.0 * (i + 1) * 0.01
+            # step 1 overflows: both paths must skip identically (no moment
+            # update, no schedule tick) or they diverge afterwards.
+            g = jax.tree.map(
+                lambda x: jnp.full(x.shape, fill, x.dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating)
+                else jnp.zeros_like(x), p)
+            u, st = tx.update(g, st, p)
+            p = apply_updates(p, u)
+        return p
+
+    p_gen = run(mixed_precision(lans(1e-2, weight_decay=0.01), policy,
+                                loss_scale=ls))
+    p_fus = run(fused_mixed_lans(1e-2, policy, loss_scale=ls,
+                                 weight_decay=0.01))
+    for a, b in zip(jax.tree.leaves(p_gen), jax.tree.leaves(p_fus)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# build_train_step integration (mesh + sharding specs + seeded overflow)
+# ---------------------------------------------------------------------------
+
+def test_build_train_step_policy_end_to_end_with_seeded_overflow():
+    from repro.distributed.steps import build_train_step, jit_train_step
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(data=1, model=1)
+    policy = get_policy("fp16_mixed")
+
+    def float_params(rng):
+        p = dict(_tiny_params())
+        del p["ids"]  # value_and_grad wants inexact inputs only
+        return p
+
+    # a loss whose grad explodes under the 2^15 scale on demand: the "boom"
+    # feature multiplies params by a huge constant, so the scaled gradient
+    # overflows fp32 -> the skip-and-halve path must execute under jax.jit.
+    def loss_fn(params, batch):
+        # 1e-2 keeps the scaled first-step grads inside fp16 range at the
+        # apex default init scale (2^16)
+        base = 1e-2 * sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                          for l in jax.tree.leaves(params))
+        boom = batch["boom"] * 1e38 * jnp.sum(
+            params["layer"]["kernel"].astype(jnp.float32))
+        return base + boom, {}
+
+    step_fn, init_fn, specs_for = build_train_step(
+        loss_fn, lans(1e-2), mesh,
+        param_init_fn=float_params,
+        policy=policy)
+
+    params, opt_state = init_fn(jax.random.PRNGKey(0))
+    assert params["layer"]["kernel"].dtype == jnp.float16
+    pspec, ospec = specs_for(params, opt_state)
+
+    batch = {"boom": jnp.zeros((), jnp.float32)}
+    jitted = jit_train_step(step_fn, mesh, pspec, ospec, batch)
+
+    with mesh:
+        p1, o1, m1 = jitted(params, opt_state, batch)
+    init_scale = DynamicLossScale().init_scale
+    assert bool(m1["grads_finite"])
+    assert float(m1["loss_scale"]) == init_scale
+    assert int(m1["overflow_count"]) == 0
+
+    with mesh:
+        p2, o2, m2 = jitted(p1, o1, {"boom": jnp.ones((), jnp.float32)})
+    assert not bool(m2["grads_finite"])
+    assert float(m2["loss_scale"]) == init_scale / 2  # halved
+    assert int(m2["overflow_count"]) == 1
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    with mesh:
+        p3, o3, m3 = jitted(p2, o2, batch)
+    assert bool(m3["grads_finite"])
+    assert bool(jnp.any(p3["layer"]["kernel"] != p2["layer"]["kernel"]))
+
+
+def test_opt_state_bytes_smaller_than_fp32():
+    """The sparse-master layout keeps lp optimizer state under fp32's."""
+    def nbytes(tree):
+        return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree))
+
+    params = _tiny_params()
+    st32 = lans(1e-3).init(params)
+
+    policy = get_policy("fp16_mixed")
+    lp = policy.cast_params(params)
+    st16 = mixed_precision(lans(1e-3, mu_dtype=policy.moment_dtype),
+                           policy).init(lp)
+    assert nbytes(st16) < nbytes(st32)
+    assert nbytes(st16) + nbytes(lp) < nbytes(st32) + nbytes(params)
