@@ -1,11 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the exact command ROADMAP.md pins:
 #   PYTHONPATH=src python -m pytest -x -q
+# (pytest.ini deselects tests marked `slow` by default.)
+#
+#   scripts/run_tests.sh --all    # include the slow serving matrices
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
-# tests/test_properties.py, which otherwise skips cleanly at collection.
-# The core library itself needs only jax + numpy (baked into the image).
+# tests/test_properties.py and tests/test_serving_properties.py, which
+# otherwise skip cleanly at collection. The core library itself needs only
+# jax + numpy (baked into the image).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--all" ]]; then
+  shift
+  exec python -m pytest -x -q -m "" "$@"
+fi
 exec python -m pytest -x -q "$@"

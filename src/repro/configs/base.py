@@ -97,24 +97,33 @@ class Arch:
 
     # ---------------- serving ----------------
 
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int, *, per_slot: bool = False):
         if self.kind == "decoder":
-            return dec_lib.init_decoder_cache(self.cfg, batch, max_len)
+            return dec_lib.init_decoder_cache(self.cfg, batch, max_len,
+                                              per_slot=per_slot)
         if self.kind == "encdec":
+            if per_slot:
+                raise NotImplementedError("pooled serving is decoder-only")
             return ed_lib.init_encdec_cache(self.cfg, batch, max_len)
         raise ValueError(f"{self.kind} has no decode cache")
 
-    def prefill(self, params, batch, *, cache_len: Optional[int] = None):
+    def prefill(self, params, batch, *, cache_len: Optional[int] = None,
+                per_slot: bool = False, positions=None):
         """Full-sequence forward with cache writes -> (last_logits, cache).
 
         cache_len > prompt length leaves room for subsequent decode steps.
+        per_slot=True uses the pooled cache layout (per-batch cursors);
+        positions (B, S) overrides the default 0..S-1 timeline — left-padded
+        batches pass local positions with pads < 0 so padding is masked out
+        of attention/SSM/MoE state (left-pad invariant prefill).
         """
         if self.kind == "decoder":
             toks = batch["tokens"]
             cache = dec_lib.init_decoder_cache(
-                self.cfg, toks.shape[0], cache_len or toks.shape[1])
-            logits, cache, _ = dec_lib.decoder_apply(params, self.cfg, toks,
-                                                     caches=cache)
+                self.cfg, toks.shape[0], cache_len or toks.shape[1],
+                per_slot=per_slot)
+            logits, cache, _ = dec_lib.decoder_apply(
+                params, self.cfg, toks, caches=cache, positions=positions)
             return logits[:, -1:], cache
         if self.kind == "encdec":
             memory = ed_lib.encode(params, self.cfg, batch["frames"])
@@ -127,10 +136,15 @@ class Arch:
         raise ValueError(f"{self.kind} does not serve")
 
     def decode_step(self, params, batch, cache):
-        """One new token against the cache -> (logits, new_cache)."""
+        """One new token against the cache -> (logits, new_cache).
+
+        batch may carry "positions" (B, S) — per-slot local timelines for
+        the pooled serving cache (defaults to the cache write cursor).
+        """
         if self.kind == "decoder":
             logits, cache, _ = dec_lib.decoder_apply(
-                params, self.cfg, batch["tokens"], caches=cache)
+                params, self.cfg, batch["tokens"], caches=cache,
+                positions=batch.get("positions"))
             return logits, cache
         if self.kind == "encdec":
             return ed_lib.decode(params, self.cfg, batch["tokens"],

@@ -98,7 +98,13 @@ def build_train_step(
                 body, (zero, 0.0), jnp.arange(microbatches))
             grads = jax.tree.map(lambda g: g / microbatches, gsum)
             loss = loss_sum / microbatches
-            aux = jax.tree.map(lambda a: a[-1], auxs)
+            # auxs leaves are stacked (microbatches, ...): average numeric
+            # aux over the whole global batch (reporting only the last
+            # microbatch biased metrics like router_entropy); non-float aux
+            # (counters, ids) keeps the final microbatch's value.
+            aux = jax.tree.map(
+                lambda a: jnp.mean(a, axis=0)
+                if jnp.issubdtype(a.dtype, jnp.inexact) else a[-1], auxs)
 
         updates, new_opt = tx.update(grads, opt_state, params)
         new_params = apply_updates(params, updates)
@@ -151,13 +157,52 @@ def build_prefill_step(forward_with_cache: Callable, mesh: Mesh):
     return forward_with_cache
 
 
-def build_serve_step(decode_fn: Callable, mesh: Mesh):
-    """decode_fn(params, tokens, cache) -> (next_tokens, new_cache).
-
-    One token per request with a KV/SSM cache — the decode_32k / long_500k
+def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
+                     params_like=None, cache_like=None, donate_cache=True):
+    """Build the jitted serving decode step — the decode_32k / long_500k
     shapes lower exactly this function.
+
+    decode_fn(params, batch, cache) -> (logits, new_cache), e.g.
+    Arch.decode_step. Returns a jitted
+
+        step(params, tokens (B, 1), positions (B, 1), cache)
+            -> (next_tokens (B,), new_cache)
+
+    that greedy-samples in fp32 regardless of the serving precision policy
+    (bf16/fp16 models still pick tokens from fp32 logits) and threads the
+    per-slot `positions` through to the pooled cache. Compiled exactly once
+    per (B, cache shape): the continuous-batching engine reuses it for its
+    whole lifetime.
+
+    With a multi-device mesh plus params_like/cache_like abstract trees, the
+    step is pjit'ed with the production shardings (params per the param
+    rules, cache batch over data / head_dim over model, metrics
+    replicated); on a single device it is a plain jit. donate_cache hands
+    the old cache's buffers to the new one — the KV pool is updated in
+    place instead of being double-buffered.
     """
-    return decode_fn
+    def step(params, tokens, positions, cache):
+        logits, new_cache = decode_fn(
+            params, {"tokens": tokens, "positions": positions}, cache)
+        return greedy_next(logits.astype(jnp.float32)), new_cache
+
+    donate = (3,) if donate_cache else ()
+    if mesh is None or mesh.devices.size <= 1 or params_like is None:
+        return jax.jit(step, donate_argnums=donate)
+
+    def shardings(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    pspec = shardings(shd.params_pspec(params_like, mesh))
+    cspec = shardings(shd.cache_pspec(cache_like, mesh))
+    tok_sh = NamedSharding(mesh, P(shd.batch_axes(mesh)))
+    return jax.jit(
+        step,
+        in_shardings=(pspec, tok_sh, tok_sh, cspec),
+        out_shardings=(tok_sh, cspec),
+        donate_argnums=donate,
+    )
 
 
 def greedy_next(logits):

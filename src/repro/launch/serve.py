@@ -1,16 +1,27 @@
-"""Serving launcher: batched greedy decoding against a reduced arch.
+"""Serving launcher: continuous-batching greedy decode against an arch.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --batch 4
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \\
+      --requests 16 --max-batch 4 --precision bf16 --metrics serve.jsonl
+
+Generates a synthetic request stream (randomized prompt lengths and
+generation budgets around --prompt-len / --new-tokens), drives the
+requested engine and prints a JSON report: tokens/s, time-to-first-token
+and inter-token latency percentiles, slot utilization. --engine static
+runs the padded lockstep baseline instead. --metrics writes one JSONL
+record per decode step (active slots, queue depth, step latency) plus a
+final summary record — the serving analogue of train.py's loss curve.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch, reduced_arch
-from repro.serving.engine import Request, ServeEngine, throughput_probe
+from repro.metrics import MetricsLogger
+from repro.serving import ContinuousEngine, ServeEngine, synthetic_requests
 
 
 def main():
@@ -18,25 +29,72 @@ def main():
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["continuous", "static"],
+                    default="continuous")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "bf16_compute", "fp16"],
+                    help="inference precision policy (greedy always fp32)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", "--max-batch", dest="max_batch", type=int,
+                    default=4, help="decode slot-pool size")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="KV pool length (0: prompt-len + new-tokens)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--prefill-bucket", type=int, default=8,
+                    help="round prompt lengths up to this multiple "
+                         "(fewer prefill compiles; token-exact)")
+    ap.add_argument("--metrics", default=None,
+                    help="JSONL path for per-step latency/throughput")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     arch = reduced_arch(args.arch) if args.reduced else get_arch(args.arch)
-    if arch.kind == "bert":
-        raise SystemExit("bert-large is encoder-only: no decode step")
+    if arch.kind != "decoder":
+        raise SystemExit(f"{args.arch} is {arch.kind}: no decode step")
     params = arch.init(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(arch, params,
-                         max_len=args.prompt_len + args.new_tokens)
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(prompt=rng.integers(
-                5, arch.cfg.vocab, size=args.prompt_len).astype(np.int32),
-                max_new_tokens=args.new_tokens)
-            for _ in range(args.batch)]
-    stats = throughput_probe(engine, reqs)
-    print(stats)
+    max_len = args.max_len or (args.prompt_len + args.new_tokens)
+
+    reqs = synthetic_requests(args.requests, arch.cfg.vocab,
+                              prompt_len=args.prompt_len,
+                              new_tokens=args.new_tokens, seed=args.seed)
+    log = MetricsLogger(args.metrics)
+
+    t0 = time.perf_counter()
+    if args.engine == "continuous":
+        last = {"t": t0}
+
+        def on_step(rec):
+            now = time.perf_counter()
+            log.log(rec["step"], active=rec["active"], queued=rec["queued"],
+                    step_latency_ms=(now - last["t"]) * 1e3)
+            last["t"] = now
+
+        engine = ContinuousEngine(
+            arch, params, max_batch=args.max_batch, max_len=max_len,
+            policy=args.precision, prefill_bucket=args.prefill_bucket,
+            on_step=on_step)
+        engine.run(reqs)
+        stats = engine.report(time.perf_counter() - t0)
+    else:
+        engine = ServeEngine(arch, params, max_len=max_len,
+                             policy=args.precision)
+        from repro.serving.metrics import aggregate
+        for r in reqs:              # TTFT includes the inter-wave queue wait
+            r.trace.mark_submit()
+        for i in range(0, len(reqs), args.max_batch):
+            engine.run_batch(reqs[i:i + args.max_batch])
+        dt = time.perf_counter() - t0
+        stats = aggregate([r.trace for r in reqs], dt,
+                          sum(len(r.generated) for r in reqs))
+
+    stats["engine"] = args.engine
+    stats["precision"] = args.precision
+    log.log(-1, **{k: v for k, v in stats.items()
+                   if isinstance(v, (int, float))})
+    log.close()
+    print(json.dumps({k: round(v, 3) if isinstance(v, float) else v
+                      for k, v in stats.items()}))
 
 
 if __name__ == "__main__":

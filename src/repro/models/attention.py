@@ -70,17 +70,21 @@ def _split_heads(x, n, hd):
 
 
 def _mask_logits(logits, q_pos, k_pos, *, causal, window, kv_valid_len=None):
-    """logits: (B, H, Sq, Sk); q_pos (Sq,), k_pos (Sk,) absolute positions."""
-    ok = k_pos[None, :] >= 0  # ring-cache slots not yet written carry pos=-1
-    ok = jnp.broadcast_to(ok, logits.shape[-2:])
+    """logits: (B, H, Sq, Sk); q_pos (Sq,) or (B, Sq), k_pos (Sk,) or (B, Sk)
+    absolute positions. Negative k_pos marks invalid rows (unwritten ring
+    slots, left-padding, evicted serving slots) and is always masked."""
+    kp = k_pos[None, None, :] if k_pos.ndim == 1 else k_pos[:, None, :]
+    qp = q_pos[None, :, None] if q_pos.ndim == 1 else q_pos[:, :, None]
+    ok = kp >= 0
     if causal:
-        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+        ok = ok & (kp <= qp)
     if window is not None:
-        ok = ok & ((q_pos[:, None] - k_pos[None, :]) < window)
-    mask = ok[None, None]
+        ok = ok & ((qp - kp) < window)
+    ok = jnp.broadcast_to(ok, (ok.shape[0],) + logits.shape[-2:])
+    mask = ok[:, None]  # (B or 1, 1, Sq, Sk)
     if kv_valid_len is not None:  # (B,) number of valid cache slots
-        valid = k_pos[None, :] < kv_valid_len[:, None]  # (B, Sk)
-        mask = mask & valid[:, None, None, :]
+        valid = kp < kv_valid_len[:, None, None]  # (B, 1|Sq, Sk)
+        mask = mask & valid[:, None]
     return jnp.where(mask, logits, NEG_INF)
 
 
@@ -119,31 +123,42 @@ def attn_apply(
 
     new_cache = None
     attend_cached = cache is not None
+    # Pooled (continuous-batching) caches carry a per-slot write cursor
+    # index: (B,) and per-slot positions pos: (B, cache_len); the classic
+    # single-stream cache keeps the scalar index / shared (cache_len,) pos.
+    pooled = cache is not None and jnp.ndim(cache["index"]) == 1
     if cache is not None and S > 1 and S >= cache["k"].shape[1]:
         attend_cached = False  # attend in-flight; cache write is tail-only
         # Prefill longer than a ring cache (sliding-window layer): attend
         # the in-flight k/v (standard masking below) and write only the
-        # LAST cache_len rows, rolled so that slot == abs_pos % cache_len —
-        # the invariant later decode steps rely on. Assumes idx == 0
-        # (prefill from scratch), which is the only way the engine uses it.
+        # LAST cache_len rows, rolled so that slot == write_cursor %
+        # cache_len — the invariant later decode steps rely on. Assumes
+        # idx == 0 (prefill from scratch), which is the only way the
+        # engine uses it.
         idx = cache["index"]
         cache_len = cache["k"].shape[1]
         W = cache_len
         shift = (S - W) % cache_len
         k_tail = jnp.roll(k[:, S - W:S].astype(cache["k"].dtype), shift, axis=1)
         v_tail = jnp.roll(v[:, S - W:S].astype(cache["v"].dtype), shift, axis=1)
-        pos_tail = jnp.roll(S - W + jnp.arange(W, dtype=jnp.int32), shift)
+        # positions may be per-batch (left-padded prefill: pads carry pos<0
+        # and stay masked for the lifetime of the cache entry)
+        pos_src = (positions if positions.ndim == 2
+                   else jnp.broadcast_to(positions, (B, S))).astype(jnp.int32)
+        pos_tail = jnp.roll(pos_src[:, S - W:S], shift, axis=1)
+        if not pooled:
+            pos_tail = pos_tail[0]
         new_cache = {"k": k_tail, "v": v_tail, "pos": pos_tail,
                      "index": idx + S}
         k_pos = positions
         q_pos = positions
     elif cache is not None:
-        # Incremental decode: write the S new k/v rows at cache["index"].
-        # Ring-buffer caches (cache_len < model max_len; sliding-window layers)
-        # wrap the write slot and track absolute positions in cache["pos"].
-        idx = cache["index"]  # scalar int32
+        # Incremental decode / prefill-into-cache: write the S new k/v rows
+        # at the write cursor. Ring-buffer caches (cache_len < model max_len;
+        # sliding-window layers) wrap the write slot and track absolute
+        # positions in cache["pos"].
+        idx = cache["index"]  # scalar int32, or (B,) per-slot cursors
         cache_len = cache["k"].shape[1]
-        slot = jax.lax.rem(idx, cache_len)
         # Pin the incoming rows to the cache layout (batch over data, head_dim
         # over model) BEFORE the update: otherwise GSPMD reshards the whole
         # cache through collectives every decode step (EXPERIMENTS.md iter 4).
@@ -151,22 +166,38 @@ def attn_apply(
                                 "data", None, None, "model")
         v_new = maybe_constrain(v.astype(cache["v"].dtype),
                                 "data", None, None, "model")
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
-                                               (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
-                                               (0, slot, 0, 0))
+        if pooled:
+            # Per-slot scatter: slot b writes rows idx[b]..idx[b]+S-1 (mod
+            # cache_len). RoPE/mask positions come from `positions`, which
+            # the serving engine sets to each slot's LOCAL time — rows of
+            # evicted/previous occupants are wiped by cache-pool insertion,
+            # so `pos >= 0 and causal` is the complete validity rule.
+            rows = jax.lax.rem(idx[:, None]
+                               + jnp.arange(S, dtype=jnp.int32), cache_len)
+            brow = jnp.arange(B)[:, None]
+            k_cache = cache["k"].at[brow, rows].set(k_new)
+            v_cache = cache["v"].at[brow, rows].set(v_new)
+            q_pos = (positions if positions.ndim == 2
+                     else jnp.broadcast_to(positions, (B, S))).astype(jnp.int32)
+            pos_new = cache["pos"].at[brow, rows].set(q_pos)
+        else:
+            slot = jax.lax.rem(idx, cache_len)
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                                   (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                                   (0, slot, 0, 0))
+            pos_new = jax.lax.dynamic_update_slice(
+                cache["pos"], (idx + jnp.arange(S, dtype=jnp.int32)), (slot,))
+            q_pos = idx + jnp.arange(S)
+            if kv_valid_len is None:
+                kv_valid_len = jnp.full((B,), idx + S, jnp.int32)
         # Decode attention stays head_dim-sharded end to end: q must match,
         # else GSPMD all-gathers the whole cached K/V per layer per token
         # (measured 31 GB/chip/token on gemma2 decode_32k — iter 4).
         q = maybe_constrain(q, "data", None, None, "model")
-        pos_new = jax.lax.dynamic_update_slice(
-            cache["pos"], (idx + jnp.arange(S, dtype=jnp.int32)), (slot,))
         new_cache = {"k": k_cache, "v": v_cache, "pos": pos_new, "index": idx + S}
         k, v = k_cache.astype(compute_dtype), v_cache.astype(compute_dtype)
         k_pos = pos_new
-        q_pos = idx + jnp.arange(S)
-        if kv_valid_len is None:
-            kv_valid_len = jnp.full((B,), idx + S, jnp.int32)
     else:
         k_pos = jnp.arange(k.shape[1]) if kv_x is not None else positions
         q_pos = positions
@@ -198,7 +229,10 @@ def attn_apply(
         # remat-chunked query blocks: live logits bounded to (B,H,qb,S) and
         # the backward pass recomputes per-block probs instead of saving them.
         q_blocks = q.reshape(B, S // qb, qb, h, hd).swapaxes(0, 1)
-        qpos_blocks = q_pos.reshape(S // qb, qb)
+        if q_pos.ndim == 2:   # per-batch positions (left-padded serving prefill)
+            qpos_blocks = q_pos.reshape(B, S // qb, qb).swapaxes(0, 1)
+        else:
+            qpos_blocks = q_pos.reshape(S // qb, qb)
         blk = jax.checkpoint(lambda qq, pp: _attend_block(qq, pp, kv_len))
         out = jax.lax.map(lambda args: blk(*args), (q_blocks, qpos_blocks))
         out = out.swapaxes(0, 1).reshape(B, S, h, hd)
@@ -210,11 +244,18 @@ def attn_apply(
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
-                  dtype=jnp.bfloat16):
-    """Contiguous cache; pass max_len = sliding_window for ring-buffer layers."""
+                  dtype=jnp.bfloat16, *, per_slot: bool = False):
+    """Contiguous cache; pass max_len = sliding_window for ring-buffer layers.
+
+    per_slot=True builds the pooled (continuous-batching) layout: one write
+    cursor and one position row per batch slot, so slots admitted at
+    different times decode through a single fixed-shape jitted step.
+    """
+    pos_shape = (batch, max_len) if per_slot else (max_len,)
+    idx_shape = (batch,) if per_slot else ()
     return {
         "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
         "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
-        "pos": jnp.full((max_len,), -1, jnp.int32),
-        "index": jnp.zeros((), jnp.int32),
+        "pos": jnp.full(pos_shape, -1, jnp.int32),
+        "index": jnp.zeros(idx_shape, jnp.int32),
     }

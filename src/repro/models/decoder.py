@@ -173,8 +173,12 @@ def decoder_init(rng, cfg: DecoderConfig):
 # --------------------------------------------------------------------------
 
 def _run_slot(slot_params, cfg: DecoderConfig, mixer: str, ffn: str, x,
-              positions, cache, kv_valid_len):
-    """One (mixer, ffn) slot. cache may be None. Returns (x, new_cache, aux)."""
+              positions, cache, kv_valid_len, valid=None):
+    """One (mixer, ffn) slot. cache may be None. Returns (x, new_cache, aux).
+
+    valid: optional (B, S) bool — False marks left-padding whose state
+    contributions must be suppressed (attention masks pads by their
+    negative positions; mamba/moe need the explicit mask)."""
     aux = {}
     h = rmsnorm_apply(slot_params["pre_mixer_norm"], x)
     if mixer in ("attn", "attn_local"):
@@ -185,7 +189,7 @@ def _run_slot(slot_params, cfg: DecoderConfig, mixer: str, ffn: str, x,
     else:
         out, new_cache = mamba_lib.mamba_apply(
             slot_params["mixer"], cfg.mamba_cfg(), h, cache=cache,
-            compute_dtype=cfg.compute_dtype)
+            valid=valid, compute_dtype=cfg.compute_dtype)
     if cfg.post_block_norm:
         out = rmsnorm_apply(slot_params["post_mixer_norm"], out)
     x = x + out
@@ -199,6 +203,7 @@ def _run_slot(slot_params, cfg: DecoderConfig, mixer: str, ffn: str, x,
                         compute_dtype=cfg.compute_dtype)
     else:
         out, moe_aux = moe_lib.moe_apply(slot_params["ffn"], cfg.moe_cfg(), h,
+                                         valid=valid,
                                          compute_dtype=cfg.compute_dtype)
         aux.update(moe_aux)
     if cfg.post_block_norm:
@@ -228,7 +233,13 @@ def decoder_apply(params, cfg: DecoderConfig, tokens=None, *, embeds=None,
     B, S = x.shape[:2]
     if positions is None:
         base = caches["index"] if caches is not None else 0
-        positions = base + jnp.arange(S)
+        if caches is not None and jnp.ndim(caches["index"]) == 1:
+            positions = base[:, None] + jnp.arange(S)  # per-slot cursors (B, S)
+        else:
+            positions = base + jnp.arange(S)
+    # Per-batch positions mark left-padding with negative values: attention
+    # masks those keys structurally (k_pos >= 0); mamba/moe need the mask.
+    valid = (positions >= 0) if jnp.ndim(positions) == 2 else None
 
     aux_acc = {"moe_aux_loss": jnp.zeros((), jnp.float32),
                "router_entropy": jnp.zeros((), jnp.float32)}
@@ -245,7 +256,7 @@ def decoder_apply(params, cfg: DecoderConfig, tokens=None, *, embeds=None,
                 cache_i["index"] = caches["index"]
             x, nc, aux = _run_slot(
                 slot_params[si], cfg, mixer, ffn, x, positions,
-                cache_i, kv_valid_len)
+                cache_i, kv_valid_len, valid)
             if nc is not None:
                 nc.pop("index")
                 new_caches.append(nc)
@@ -293,9 +304,13 @@ def _head_logits(params, cfg: DecoderConfig, x):
 
 
 def init_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
-                       dtype=jnp.bfloat16):
+                       dtype=jnp.bfloat16, *, per_slot: bool = False):
     """Stacked per-slot caches. attn_local slots get ring buffers of the
-    window size — the memory win that makes long_500k viable for gemma2."""
+    window size — the memory win that makes long_500k viable for gemma2.
+
+    per_slot=True builds the pooled continuous-batching layout: the write
+    cursor becomes (batch,) and KV positions (batch, L), so each batch slot
+    carries its own local timeline (see serving/cache_pool.py)."""
     slots = []
     for mixer, _ in cfg.superblock:
         if mixer == "mamba":
@@ -305,12 +320,15 @@ def init_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
             if mixer == "attn_local" and cfg.sliding_window:
                 L = min(max_len, cfg.sliding_window)
             one = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads,
-                                         cfg.resolved_head_dim, dtype)
+                                         cfg.resolved_head_dim, dtype,
+                                         per_slot=per_slot)
         one.pop("index")
         stacked = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(), one)
         slots.append(stacked)
-    return {"slots": tuple(slots), "index": jnp.zeros((), jnp.int32)}
+    index = (jnp.zeros((batch,), jnp.int32) if per_slot
+             else jnp.zeros((), jnp.int32))
+    return {"slots": tuple(slots), "index": index}
 
 
 # --------------------------------------------------------------------------

@@ -146,8 +146,16 @@ def _ssd_chunked(xh, dt, a_log_t, Bm, Cm, cfg: MambaConfig, h0=None):
     return y, h_final
 
 
-def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, compute_dtype=jnp.bfloat16):
+def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, valid=None,
+                compute_dtype=jnp.bfloat16):
     """x: (B, S, d_model). cache: dict(ssm, conv, index) for decode.
+
+    valid: optional (B, S) bool — False positions (left-padding in a batched
+    prefill) are neutralized so they cannot leak into the recurrent state:
+    their conv inputs are zeroed (matching the zero history a pad-free run
+    sees) and their dt is forced to 0, which makes the SSM update an exact
+    identity (decay exp(0)=1, input contribution dt*B*x = 0). Outputs at
+    invalid positions are garbage and must be masked downstream.
 
     Returns (out, new_cache_or_None).
     """
@@ -162,6 +170,8 @@ def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, compute_dtype=jnp.bfloat1
         axis=-1)
 
     conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    if valid is not None:
+        conv_in = conv_in * valid[..., None].astype(conv_in.dtype)
     conv_state = cache["conv"] if cache is not None else None
     conv_out, new_conv = _causal_conv(
         conv_in, p["conv_w"].astype(compute_dtype), p["conv_b"].astype(compute_dtype),
@@ -169,6 +179,8 @@ def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, compute_dtype=jnp.bfloat1
     xr, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid is not None:
+        dt = dt * valid[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (H,) negative
     a_log_t = dt * A[None, None, :]                      # (B,S,H)
 
@@ -192,7 +204,11 @@ def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, compute_dtype=jnp.bfloat1
         h_new = maybe_constrain(h_new, "data", None, None, "model")
         y = jnp.einsum("bhn,bhnp->bhp", Cg.astype(jnp.float32), h_new)
         y = y[:, None].astype(compute_dtype)             # (B,1,H,P)
-        new_cache = {"ssm": h_new, "conv": new_conv,
+        # keep cache dtypes stable across steps (exact upcast): a bf16
+        # conv tail stored into an fp32 cache would flip the cache pytree
+        # dtype and force the serving decode step to recompile.
+        new_cache = {"ssm": h_new,
+                     "conv": new_conv.astype(cache["conv"].dtype),
                      "index": cache["index"] + 1}
     else:
         h0 = cache["ssm"] if cache is not None else None
@@ -201,7 +217,8 @@ def mamba_apply(p, cfg: MambaConfig, x, *, cache=None, compute_dtype=jnp.bfloat1
             Bm.astype(jnp.float32), Cm.astype(jnp.float32), cfg, h0)
         y = y.astype(compute_dtype)
         if cache is not None:
-            new_cache = {"ssm": h_final, "conv": new_conv,
+            new_cache = {"ssm": h_final,
+                         "conv": new_conv.astype(cache["conv"].dtype),
                          "index": cache["index"] + S}
 
     y = y + p["D"].astype(compute_dtype)[None, None, :, None] * xh

@@ -59,8 +59,14 @@ def _top_k_mask(probs: jnp.ndarray, k: int):
     return jax.nn.one_hot(idx, probs.shape[-1], dtype=bool).any(axis=-2)
 
 
-def moe_apply(p, cfg: MoeConfig, x, *, compute_dtype=jnp.bfloat16):
+def moe_apply(p, cfg: MoeConfig, x, *, valid=None, compute_dtype=jnp.bfloat16):
     """x: (B, S, d). Returns (out, aux) with aux = load-balance loss terms.
+
+    valid: optional (B, S) bool — False tokens (left-padding in a batched
+    serving prefill) are excluded from routing: they consume no expert
+    capacity (their dispatch one-hots are zeroed before the position
+    cumsum), produce zero output, and drop out of the load-balance stats,
+    so real tokens route identically to a pad-free run.
 
     GROUP-LOCAL SCATTER DISPATCH. The classic GShard one-hot dispatch
     materializes a (T, E, C) tensor — O(T^2 K / E) memory/FLOPs, which blew
@@ -101,11 +107,18 @@ def moe_apply(p, cfg: MoeConfig, x, *, compute_dtype=jnp.bfloat16):
 
     # Position of each (token, k) within its expert's buffer, per group.
     sel = jax.nn.one_hot(idx_k, E, dtype=jnp.int32)          # (G, Tl, K, E)
+    vflat = None
+    if valid is not None:
+        vg = valid.reshape(G, Tl)
+        sel = sel * vg[..., None, None].astype(sel.dtype)    # pads route nowhere
+        vflat = jnp.repeat(vg, K, axis=1)                    # (G, TlK)
     sel_flat = sel.reshape(G, Tl * K, E)
     position = jnp.cumsum(sel_flat, axis=1) - 1              # (G, TlK, E)
     pos_k = jnp.take_along_axis(
         position, idx_k.reshape(G, Tl * K)[..., None], axis=-1)[..., 0]
     keep = pos_k < cap                                       # (G, TlK)
+    if vflat is not None:
+        keep = keep & vflat
     pos_clipped = jnp.where(keep, pos_k, cap)                # overflow bucket
 
     # Scatter dispatch: (G, E, cap+1, d), drop the overflow bucket after.

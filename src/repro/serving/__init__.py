@@ -1,0 +1,26 @@
+"""Serving subsystem: continuous-batching decode over a fixed slot pool.
+
+See serving/engine.py for the architecture overview. Public surface:
+
+  ContinuousEngine   slot-pool continuous batching (production shape)
+  ServeEngine        static-batch baseline (padded lockstep decode)
+  Request            one prompt + generation budget (+ latency trace)
+  throughput_probe   warmup-aware timed run -> tokens/s + percentiles
+  Scheduler          FIFO slot admission (host-side, property-tested)
+  CachePool          preallocated pooled KV/SSM cache + insert/evict
+"""
+from repro.serving.cache_pool import CachePool
+from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
+                                  apply_serving_policy, build_prefill_fn,
+                                  pad_prompts, prompt_granularity,
+                                  synthetic_requests, throughput_probe)
+from repro.serving.metrics import RequestTrace, aggregate, percentile
+from repro.serving.scheduler import Scheduler, SchedulerError
+
+__all__ = [
+    "CachePool", "ContinuousEngine", "Request", "RequestTrace",
+    "Scheduler", "SchedulerError", "ServeEngine", "aggregate",
+    "apply_serving_policy", "build_prefill_fn", "pad_prompts",
+    "percentile", "prompt_granularity", "synthetic_requests",
+    "throughput_probe",
+]

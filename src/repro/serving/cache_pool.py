@@ -1,0 +1,69 @@
+"""Preallocated KV/SSM cache pool for continuous batching.
+
+The pool is one pytree in the pooled (`per_slot=True`) layout: every
+stacked cache leaf is (n_periods, max_batch, ...), the write cursor is
+(max_batch,), and attention positions are (max_batch, cache_len) with -1
+marking invalid rows. Slot admission *inserts* a freshly prefilled
+single-request cache (same layout, batch 1) into one batch row; eviction
+re-blanks the row. Both are O(row) scatters jitted once — the decode step
+itself never changes shape, so the engine never recompiles after warmup.
+
+The insert is layout-generic: attention k/v/pos rows, mamba ssm/conv
+state and the cursor all have the slot on the same axis (axis 1 inside
+the stacked "slots" subtree, axis 0 for the top-level cursor), so one
+tree_map covers every arch family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _insert_row(pool: PyTree, req: PyTree, slot) -> PyTree:
+    """Write single-request cache `req` (batch 1) into pool batch row `slot`.
+
+    The explicit astype matches prefill-produced state dtypes (e.g. bf16
+    mamba conv tails) to the pool's storage dtype — an exact upcast, and
+    required for the donated pool buffer to be reused in place."""
+    slots = jax.tree.map(
+        lambda P, r: P.at[:, slot].set(r[:, 0].astype(P.dtype)),
+        pool["slots"], req["slots"])
+    index = pool["index"].at[slot].set(req["index"][0])
+    return {"slots": slots, "index": index}
+
+
+class CachePool:
+    """Owns the pooled decode cache and its per-slot insert/evict ops."""
+
+    def __init__(self, arch, max_batch: int, max_len: int):
+        self.arch = arch
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = arch.init_cache(max_batch, max_len, per_slot=True)
+        # blank single-request cache used for eviction (pos rows back to -1)
+        self._blank = arch.init_cache(1, max_len, per_slot=True)
+        # donate the old pool: the row update happens in place instead of
+        # double-buffering max_batch * max_len of KV per admission.
+        self._insert = jax.jit(_insert_row, donate_argnums=0)
+
+    def insert(self, request_cache: PyTree, slot: int):
+        """Admit a prefilled request's cache into `slot`."""
+        if not (0 <= slot < self.max_batch):
+            raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        self.cache = self._insert(self.cache, request_cache, slot)
+
+    def evict(self, slot: int):
+        """Blank `slot`: positions return to -1 so every row of the old
+        occupant is masked; the next insert overwrites the row anyway."""
+        if not (0 <= slot < self.max_batch):
+            raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        self.cache = self._insert(self.cache, self._blank, slot)
+
+    def lengths(self):
+        """Per-slot write cursors (host array) — diagnostic only."""
+        import numpy as np
+        return np.asarray(self.cache["index"])

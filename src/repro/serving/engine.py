@@ -1,10 +1,34 @@
-"""Batched serving engine: continuous greedy decoding over a request queue.
+"""Serving engines: continuous batching (slot pool) + the static baseline.
 
-Serving semantics match the decode dry-run shapes: prefill once per request
-batch, then step one token per iteration against the shared KV/SSM cache.
-The engine is deliberately simple (static batch, greedy) — the point is
-that `serve_step` is the exact function the decode_32k / long_500k shapes
-lower on the production mesh.
+Two engines share one decode step (`build_serve_step` over
+`Arch.decode_step`), one precision path and one prompt handling scheme:
+
+`ContinuousEngine` — the production shape. A fixed pool of `max_batch`
+decode slots backed by a preallocated pooled KV/SSM cache
+(serving/cache_pool.py). Each request is prefilled alone (batch 1, prompt
+left-padded to the arch's granularity with pad positions < 0, so padding
+is exactly masked out of attention/SSM/MoE state), its cache row is
+inserted into a free slot between decode steps, and one fixed-shape
+jitted decode step then advances every active slot per iteration — no
+recompiles for the lifetime of the engine, and freed slots are refilled
+from the admission queue while other requests keep decoding.
+
+`ServeEngine` — the static baseline (kept for comparison + older
+callers): pads the whole request batch to a common length, prefills once,
+decodes lockstep for max(max_new_tokens) steps. Requests admitted
+together must finish together; the padded prefill is still exact (local
+positions, pads masked) so both engines emit token-identical greedy
+output for the same request set — asserted in tests/test_serving_engine.py
+under fp32 and bf16 policies.
+
+Precision: pass `policy` (name or `repro.precision.Policy`) — parameters
+are cast once at engine construction (bf16/fp16 model copy with fp32
+LN/bias overrides, matching training's inference-side policy) and matmuls
+run in the policy compute dtype, while greedy sampling always reads fp32
+logits (see `build_serve_step`). MoE archs serve with dropless dispatch
+(capacity = tokens * top_k) so a token's output never depends on its
+batch-mates — the property that makes continuous batching and the static
+path byte-comparable.
 """
 from __future__ import annotations
 
@@ -16,52 +40,305 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.steps import build_serve_step, greedy_next
+from repro.serving.cache_pool import CachePool
+from repro.serving.metrics import RequestTrace, aggregate
+from repro.serving.scheduler import Scheduler
+
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int = 16
     generated: Optional[np.ndarray] = None
+    rid: Optional[int] = None
+    trace: RequestTrace = dataclasses.field(default_factory=RequestTrace)
+
+
+def apply_serving_policy(arch, params, policy=None):
+    """Inference-side precision + MoE policy for an (arch, params) pair.
+
+    * policy (optional name/Policy): cast the parameter copy per the policy
+      (keep_fp32 overrides intact) and run compute in its compute_dtype.
+    * MoE archs: serve dropless — capacity_factor = n_experts makes
+      cap = tokens * top_k, so no token is ever dropped and routing is
+      independent of batch composition (continuous == static, padded ==
+      unpadded). Serving never trains, so the load-balance aux is unused.
+    """
+    cfg = arch.cfg
+    if policy is not None:
+        from repro.precision import get_policy
+        policy = get_policy(policy)
+        cfg = policy.apply_to_cfg(cfg)
+        params = policy.cast_params(params)
+    if getattr(cfg, "n_experts", 0):
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    if cfg is not arch.cfg:
+        arch = dataclasses.replace(arch, cfg=cfg)
+    return arch, params
+
+
+def prompt_granularity(cfg) -> int:
+    """Smallest prefill length multiple the arch supports: mamba's chunked
+    SSD scan needs S % chunk == 0; attention/MoE take any length."""
+    if any(m == "mamba" for m, _ in getattr(cfg, "superblock", ())):
+        return int(cfg.mamba_chunk)
+    return 1
+
+
+def build_prefill_fn(arch, max_len: int):
+    """Jitted masked prefill shared by both engines: (params, tokens,
+    positions) -> (first greedy token fp32, pooled cache of max_len rows).
+    Retraces per padded prompt length — bucket lengths to bound that."""
+    def prefill(params, tokens, positions):
+        logits, cache = arch.prefill(
+            params, {"tokens": tokens}, cache_len=max_len,
+            per_slot=True, positions=positions)
+        return greedy_next(logits.astype(jnp.float32)), cache
+    return jax.jit(prefill)
+
+
+def synthetic_requests(n: int, vocab: int, *, prompt_len: int,
+                       new_tokens: int, seed: int = 0,
+                       min_new_frac: float = 0.5):
+    """Load-generator workload: mixed prompt lengths in
+    [prompt_len/2, prompt_len] and budgets in [new_tokens*min_new_frac,
+    new_tokens]. Pure function of the arguments, so two engines handed the
+    same seed see byte-identical requests."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        new = int(rng.integers(max(1, int(new_tokens * min_new_frac)),
+                               new_tokens + 1))
+        reqs.append(Request(
+            prompt=rng.integers(5, vocab, size=plen).astype(np.int32),
+            max_new_tokens=new))
+    return reqs
+
+
+def pad_prompts(prompts: List[np.ndarray], granularity: int = 1,
+                pad_len: Optional[int] = None):
+    """Left-pad to a common length; returns (tokens, positions, lengths).
+
+    Positions are per-request LOCAL timelines (0..len-1 for real tokens,
+    negative for padding) — the contract the masked prefill relies on.
+    """
+    lens = np.array([len(p) for p in prompts], np.int32)
+    plen = pad_len if pad_len is not None else int(lens.max())
+    plen = -(-plen // granularity) * granularity
+    if plen < int(lens.max()):
+        raise ValueError(f"pad_len {plen} < longest prompt {lens.max()}")
+    B = len(prompts)
+    tokens = np.zeros((B, plen), np.int32)
+    positions = np.empty((B, plen), np.int32)
+    for i, p in enumerate(prompts):
+        tokens[i, plen - len(p):] = p
+        positions[i] = np.arange(plen) - (plen - len(p))
+    return tokens, positions, lens
+
+
+class ContinuousEngine:
+    """Continuous-batching greedy decode over a fixed slot pool."""
+
+    def __init__(self, arch, params, *, max_batch: int = 8,
+                 max_len: int = 256, policy=None, mesh=None,
+                 prefill_bucket: int = 1, on_step=None):
+        if arch.kind != "decoder":
+            raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
+        self.arch, self.params = apply_serving_policy(arch, params, policy)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        # prefill lengths round up to bucket multiples: fewer distinct
+        # prompt shapes -> fewer prefill compilations (the masked left-pad
+        # keeps bucketed prefill token-exact).
+        self.prefill_bucket = max(prefill_bucket,
+                                  prompt_granularity(self.arch.cfg))
+        self.pool = CachePool(self.arch, max_batch, max_len)
+        self.scheduler = Scheduler(max_batch)
+        self.on_step = on_step          # callback(dict) per decode step
+        self._step = build_serve_step(self.arch.decode_step, mesh)
+        self._prefill = build_prefill_fn(self.arch, max_len)
+
+        self._tokens = np.zeros((max_batch, 1), np.int32)
+        self._positions = np.zeros((max_batch, 1), np.int32)
+        self._emitted = {}              # slot -> list of generated ids
+        self._next_rid = 0
+        self.steps_run = 0
+        self.slot_steps = 0             # decode-step slots that were active
+
+    # ---------------- request lifecycle ----------------
+
+    def submit(self, request: Request):
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt {len(request.prompt)} + max_new_tokens "
+                f"{request.max_new_tokens} exceeds max_len {self.max_len}")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if request.rid is None:
+            request.rid = self._next_rid
+            self._next_rid += 1
+        request.trace.mark_submit()
+        self.scheduler.submit(request)
+
+    def _finish(self, slot: int):
+        req = self.scheduler.complete(slot)
+        req.generated = np.array(self._emitted.pop(slot), np.int32)
+        req.trace.done_t = time.perf_counter()
+        self.pool.evict(slot)
+        return req
+
+    def _admit(self):
+        """Fill free slots from the queue: prefill each request alone and
+        insert its cache row. Runs between decode steps (and again right
+        away when a 1-token request completes at admission)."""
+        while True:
+            pairs = self.scheduler.assign()
+            if not pairs:
+                return
+            for slot, req in pairs:
+                tokens, positions, lens = pad_prompts(
+                    [req.prompt], self.prefill_bucket)
+                first, req_cache = self._prefill(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions))
+                self.pool.insert(req_cache, slot)
+                t0 = int(np.asarray(first)[0])
+                req.trace.admit_t = time.perf_counter()
+                req.trace.mark_token(req.trace.admit_t)
+                self._emitted[slot] = [t0]
+                self._tokens[slot, 0] = t0
+                self._positions[slot, 0] = int(lens[0])
+                if len(self._emitted[slot]) >= req.max_new_tokens:
+                    self._finish(slot)   # 1-token request: done at prefill
+
+    def step(self) -> bool:
+        """One engine iteration: admissions, then one pooled decode step.
+        Returns False when no work remains."""
+        self._admit()
+        active = sorted(self.scheduler.active)
+        if not active:
+            return self.scheduler.has_work
+        nxt, self.pool.cache = self._step(
+            self.params, jnp.asarray(self._tokens),
+            jnp.asarray(self._positions), self.pool.cache)
+        nxt = np.asarray(nxt)            # host sync: tokens feed next step
+        now = time.perf_counter()
+        self.steps_run += 1
+        self.slot_steps += len(active)
+        for slot in active:
+            req = self.scheduler.active[slot]
+            self._emitted[slot].append(int(nxt[slot]))
+            req.trace.mark_token(now)
+            self._tokens[slot, 0] = int(nxt[slot])
+            self._positions[slot, 0] += 1
+            if len(self._emitted[slot]) >= req.max_new_tokens:
+                self._finish(slot)
+        if self.on_step is not None:
+            self.on_step({"step": self.steps_run, "active": len(active),
+                          "queued": self.scheduler.queued})
+        return self.scheduler.has_work
+
+    def run(self, requests: Optional[List[Request]] = None) -> List[Request]:
+        """Drain: submit `requests` (if given) and step until idle."""
+        for r in requests or ():
+            self.submit(r)
+        while self.step():
+            pass
+        return self.scheduler.completed
+
+    # static-engine-compatible alias (throughput_probe, benchmarks)
+    def run_batch(self, requests: List[Request]) -> List[Request]:
+        self.run(requests)
+        return requests
+
+    def report(self, wall_s: float) -> dict:
+        done = self.scheduler.completed
+        stats = aggregate([r.trace for r in done], wall_s,
+                          sum(len(r.generated) for r in done))
+        denom = max(1, self.steps_run * self.max_batch)
+        stats["slot_utilization"] = self.slot_steps / denom
+        stats["decode_steps"] = self.steps_run
+        return stats
 
 
 class ServeEngine:
-    def __init__(self, arch, params, *, max_len: int = 512):
-        self.arch = arch
-        self.params = params
+    """Static-batch baseline: one padded prefill, lockstep greedy decode.
+
+    Kept as the comparison point for benchmarks/serving_load.py and for
+    callers that want the simplest possible batch API. Shares the decode
+    step, precision policy and exact left-pad masking with
+    ContinuousEngine, so the two produce identical tokens per request."""
+
+    def __init__(self, arch, params, *, max_len: int = 512, policy=None,
+                 mesh=None):
+        if arch.kind != "decoder":
+            raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
+        self.arch, self.params = apply_serving_policy(arch, params, policy)
         self.max_len = max_len
-        self._decode = jax.jit(
-            lambda p, b, c: arch.decode_step(p, b, c))
+        self.granularity = prompt_granularity(self.arch.cfg)
+        self._step = build_serve_step(self.arch.decode_step, mesh)
+        self._prefill = build_prefill_fn(self.arch, max_len)
 
     def run_batch(self, requests: List[Request]) -> List[Request]:
         assert requests
-        B = len(requests)
-        plen = max(len(r.prompt) for r in requests)
-        prompts = np.full((B, plen), 0, np.int32)
-        for i, r in enumerate(requests):
-            prompts[i, -len(r.prompt):] = r.prompt  # left-pad
-
-        batch = {"tokens": jnp.asarray(prompts)}
-        # decode cache must be long enough for prompt + generation
         steps = max(r.max_new_tokens for r in requests)
-        logits, cache = self.arch.prefill(self.params, batch,
-                                          cache_len=plen + steps)
-        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        out = [tok]
+        tokens, positions, lens = pad_prompts(
+            [r.prompt for r in requests], self.granularity)
+        if tokens.shape[1] + steps > self.max_len:
+            raise ValueError(
+                f"padded prompt {tokens.shape[1]} + {steps} new tokens "
+                f"exceeds max_len {self.max_len}")
+        for r in requests:
+            # respect an earlier submission timestamp: callers running
+            # waves (benchmarks, launch/serve --engine static) stamp the
+            # whole workload up front so TTFT includes the queue wait —
+            # otherwise wave k's wait behind waves 0..k-1 would vanish
+            # from the static/continuous comparison.
+            if r.trace.submit_t == 0.0:
+                r.trace.mark_submit()
+        tok, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                   jnp.asarray(positions))
+        out = [np.asarray(tok)]
+        now = time.perf_counter()
+        for r in requests:
+            r.trace.admit_t = now
+            r.trace.mark_token(now)
+        pos_next = lens.copy()
         for _ in range(steps - 1):
-            step_batch = {"tokens": tok[:, None]}
-            logits, cache = self._decode(self.params, step_batch, cache)
-            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            out.append(tok)
-        gen = np.stack([np.asarray(t) for t in out], axis=1)  # (B, steps)
+            tok, cache = self._step(self.params, tok[:, None],
+                                    jnp.asarray(pos_next[:, None]), cache)
+            tok_h = np.asarray(tok)
+            now = time.perf_counter()
+            out.append(tok_h)
+            pos_next += 1
+            for i, r in enumerate(requests):
+                if len(r.trace.token_ts) < r.max_new_tokens:
+                    r.trace.mark_token(now)
+        gen = np.stack(out, axis=1)      # (B, steps)
         for i, r in enumerate(requests):
             r.generated = gen[i, :r.max_new_tokens]
+            r.trace.done_t = r.trace.token_ts[-1]
         return requests
 
 
-def throughput_probe(engine: ServeEngine, requests: List[Request]) -> dict:
-    t0 = time.time()
+def throughput_probe(engine, requests: List[Request], *,
+                     warmup: bool = True) -> dict:
+    """Timed run over `requests`; tokens/s + latency percentiles.
+
+    warmup=True first runs a shape-identical clone of the request set so
+    jit compilation (both prefill shapes and the decode step) stays out of
+    the measured wall clock — compile time used to dominate tokens/s on
+    small batches."""
+    if warmup:
+        clones = [Request(prompt=r.prompt.copy(),
+                          max_new_tokens=r.max_new_tokens)
+                  for r in requests]
+        engine.run_batch(clones)
+    t0 = time.perf_counter()
     done = engine.run_batch(requests)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
-    return {"requests": len(done), "tokens": toks,
-            "tokens_per_s": toks / dt, "wall_s": dt}
+    stats = aggregate([r.trace for r in done], dt, toks)
+    stats["warmup"] = warmup
+    return stats

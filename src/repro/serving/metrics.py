@@ -1,0 +1,77 @@
+"""Serving-side latency/throughput accounting.
+
+Each request carries a `RequestTrace` of wall-clock events: submission,
+admission (prefill done, first token available) and one timestamp per
+generated token. `aggregate()` folds a set of traces into the numbers a
+serving dashboard wants:
+
+  tokens_per_s   generated tokens / wall
+  ttft_*_ms      time-to-first-token percentiles (submit -> first token)
+  itl_*_ms       inter-token latency percentiles (gaps between tokens of
+                 the same request — the per-token latency of the decode
+                 loop, which is what slot reuse and low-precision decode
+                 are meant to shrink)
+
+No jnp here: this is pure host bookkeeping and must stay off the decode
+hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    submit_t: float = 0.0
+    admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+    token_ts: List[float] = dataclasses.field(default_factory=list)
+
+    def mark_submit(self, now=None):
+        self.submit_t = time.perf_counter() if now is None else now
+
+    def mark_token(self, now=None):
+        now = time.perf_counter() if now is None else now
+        if self.first_token_t is None:
+            self.first_token_t = now
+        self.token_ts.append(now)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def inter_token_s(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_ts, self.token_ts[1:])]
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile; 0.0 on empty input (keeps JSON simple)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[k]
+
+
+def aggregate(traces: List[RequestTrace], wall_s: float,
+              n_tokens: int) -> Dict[str, float]:
+    ttfts = [t.ttft_s for t in traces if t.ttft_s is not None]
+    itls: List[float] = []
+    for t in traces:
+        itls.extend(t.inter_token_s)
+    return {
+        "requests": len(traces),
+        "tokens": n_tokens,
+        "wall_s": wall_s,
+        "tokens_per_s": n_tokens / wall_s if wall_s > 0 else 0.0,
+        "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
+        "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
+        "itl_p50_ms": percentile(itls, 50) * 1e3,
+        "itl_p99_ms": percentile(itls, 99) * 1e3,
+    }

@@ -1,0 +1,89 @@
+"""Slot scheduler for the continuous-batching engine.
+
+Host-side FIFO admission control over a fixed pool of decode slots. The
+scheduler owns the slot <-> request mapping and nothing else: no device
+state, no timing — which keeps its invariants (the ones the property tests
+check) easy to state:
+
+  * a slot is either free or bound to exactly one in-flight request;
+  * a request is queued, active in exactly one slot, or completed;
+  * admissions are FIFO: requests enter slots in submission order;
+  * completion frees the slot for the next queued request.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from typing import Any, Deque, Dict, List, Tuple
+
+
+class SchedulerError(RuntimeError):
+    pass
+
+
+class Scheduler:
+    """Fixed-capacity slot assignment with a FIFO admission queue."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: Deque[int] = collections.deque(range(n_slots))
+        self._queue: Deque[Any] = collections.deque()
+        self.active: Dict[int, Any] = {}
+        self.completed: List[Any] = []
+        self._seq = itertools.count()
+
+    # ---------------- queue side ----------------
+
+    def submit(self, request) -> int:
+        """Enqueue a request; returns its admission ticket (FIFO order)."""
+        ticket = next(self._seq)
+        self._queue.append(request)
+        return ticket
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self.active)
+
+    # ---------------- slot side ----------------
+
+    def assign(self) -> List[Tuple[int, Any]]:
+        """Bind queued requests to free slots (FIFO). Returns the new
+        (slot, request) pairs; caller prefills and inserts their caches."""
+        pairs: List[Tuple[int, Any]] = []
+        while self._free and self._queue:
+            slot = self._free.popleft()
+            if slot in self.active:  # corrupted free list — refuse to reuse
+                raise SchedulerError(f"slot {slot} free but active")
+            req = self._queue.popleft()
+            self.active[slot] = req
+            pairs.append((slot, req))
+        return pairs
+
+    def complete(self, slot: int):
+        """Release a slot whose request finished; returns the request."""
+        if slot not in self.active:
+            raise SchedulerError(f"complete() on inactive slot {slot}")
+        req = self.active.pop(slot)
+        self._free.append(slot)
+        self.completed.append(req)
+        return req
+
+    # ---------------- invariants (used by tests) ----------------
+
+    def check_invariants(self):
+        free = list(self._free)
+        assert len(set(free)) == len(free), "duplicate free slots"
+        assert not (set(free) & set(self.active)), "slot both free and active"
+        assert len(free) + len(self.active) == self.n_slots, (
+            "slots leaked", free, list(self.active))
+        assert all(0 <= s < self.n_slots for s in free + list(self.active))

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import reduced_arch
 from repro.core.optim import lans
@@ -56,3 +57,27 @@ def test_zero1_moment_spec_sharded_over_data():
         (ax if isinstance(ax, tuple) else (ax,))
         for spec in flat for ax in spec if ax is not None))
     assert "data" in names
+
+
+def test_microbatch_aux_averaged_not_last():
+    """Regression: with microbatches > 1 the step used to report only the
+    LAST microbatch's aux (jax.tree.map(lambda a: a[-1], auxs)); numeric
+    aux must be the mean over all microbatches."""
+    mesh = make_local_mesh(data=1, model=1)
+
+    def loss_fn(params, batch):
+        x = batch["x"]
+        loss = jnp.mean((x * params["w"]) ** 2)
+        return loss, {"x_mean": jnp.mean(x),
+                      "mb_id": jnp.max(x).astype(jnp.int32)}
+
+    step_fn, init_fn, _ = build_train_step(
+        loss_fn, lans(1e-3), mesh, microbatches=2,
+        param_init_fn=lambda rng: {"w": jnp.ones((4,))})
+    params, opt_state = init_fn(jax.random.PRNGKey(0))
+    # microbatch 0 is all 1.0, microbatch 1 all 3.0
+    batch = {"x": jnp.concatenate([jnp.full((2, 4), 1.0),
+                                   jnp.full((2, 4), 3.0)])}
+    _, _, metrics = step_fn(params, opt_state, batch)
+    assert float(metrics["x_mean"]) == pytest.approx(2.0)  # mean, not 3.0
+    assert int(metrics["mb_id"]) == 3  # non-float aux keeps last-mb value

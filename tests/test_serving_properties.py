@@ -1,0 +1,168 @@
+"""Hypothesis properties: scheduler invariants + loss-scale state machine.
+
+Skips cleanly when the optional `hypothesis` extra is absent (see
+requirements.txt) — deterministic versions of the core scheduler checks
+live in tests/test_serving_engine.py so tier-1 still covers them.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test extra (see requirements.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.precision.loss_scale import (DynamicLossScale, StaticLossScale,
+                                        unscale_grads)
+from repro.serving.scheduler import Scheduler, SchedulerError
+
+
+# --------------------------------------------------------------------------
+# scheduler: no double assignment, FIFO admission, full completion
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(n_slots=st.integers(1, 5),
+       n_requests=st.integers(0, 25),
+       choices=st.lists(st.integers(0, 2 ** 16), min_size=0, max_size=200))
+def test_scheduler_invariants_under_random_schedules(n_slots, n_requests,
+                                                     choices):
+    """Random interleavings of submit/assign/complete keep every invariant:
+    a slot never holds two requests, admissions are FIFO, and draining
+    completes every submitted request exactly once."""
+    sched = Scheduler(n_slots)
+    pending = [f"r{i}" for i in range(n_requests)]
+    admitted_order = []
+    it = iter(choices)
+    for c in it:
+        op = c % 3
+        if op == 0 and pending:
+            sched.submit(pending.pop(0))
+        elif op == 1:
+            for slot, req in sched.assign():
+                admitted_order.append(req)
+        elif op == 2 and sched.active:
+            slots = sorted(sched.active)
+            sched.complete(slots[next(it, 0) % len(slots)]
+                           if slots else slots[0])
+        sched.check_invariants()
+        # a request is in at most one place
+        states = (list(sched.active.values()) + sched.completed
+                  + list(sched._queue) + pending)
+        assert len(states) == n_requests
+        assert len(set(states)) == n_requests
+    # drain: everything submitted eventually completes, exactly once
+    while pending:
+        sched.submit(pending.pop(0))
+    while sched.has_work:
+        for slot, req in sched.assign():
+            admitted_order.append(req)
+        for slot in sorted(sched.active):
+            sched.complete(slot)
+        sched.check_invariants()
+    assert admitted_order == [f"r{i}" for i in range(n_requests)]  # FIFO
+    assert sorted(sched.completed) == sorted(f"r{i}"
+                                             for i in range(n_requests))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_slots=st.integers(1, 4),
+       budgets=st.lists(st.integers(1, 7), min_size=0, max_size=15))
+def test_engine_loop_emits_exactly_max_new_tokens(n_slots, budgets):
+    """Pure-python mirror of ContinuousEngine.step()'s control flow (prefill
+    emits token 1, each decode step emits one more per active slot, the
+    slot frees at its budget): every admitted request ends with exactly
+    max_new_tokens tokens and the loop terminates."""
+    sched = Scheduler(n_slots)
+    emitted = {}
+    counts = {}
+    for i, b in enumerate(budgets):
+        sched.submit((i, b))
+    guard = 0
+    while sched.has_work:
+        guard += 1
+        assert guard < 10_000, "engine loop failed to terminate"
+        # admissions: prefill produces the first token; 1-token requests
+        # complete immediately, freeing the slot for the next in queue
+        while True:
+            pairs = sched.assign()
+            if not pairs:
+                break
+            for slot, (rid, budget) in pairs:
+                emitted[slot] = 1
+                counts[rid] = 1
+                if emitted[slot] >= budget:
+                    sched.complete(slot)
+        # one decode step over the active slots
+        for slot in sorted(sched.active):
+            rid, budget = sched.active[slot]
+            emitted[slot] += 1
+            counts[rid] += 1
+            if emitted[slot] >= budget:
+                sched.complete(slot)
+        sched.check_invariants()
+    assert counts == {i: b for i, (b) in enumerate(budgets)}
+
+
+# --------------------------------------------------------------------------
+# dynamic loss scale: skip-and-halve state machine (precision/loss_scale.py)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(flags=st.lists(st.booleans(), min_size=0, max_size=60),
+       growth_interval=st.integers(1, 5),
+       init_pow=st.integers(0, 10))
+def test_dynamic_loss_scale_matches_reference_machine(flags, growth_interval,
+                                                      init_pow):
+    """Fold an arbitrary finite/overflow history through adjust(): the jit
+    state machine must track the apex reference exactly — halve on
+    overflow (floored at min_scale), double after `growth_interval`
+    consecutive clean steps (capped at max_scale), count every skip."""
+    scaler = DynamicLossScale(init_scale=2.0 ** init_pow,
+                              growth_interval=growth_interval,
+                              min_scale=1.0, max_scale=2.0 ** 12)
+    state = scaler.init()
+    scale, good, overflows = 2.0 ** init_pow, 0, 0
+    for finite in flags:
+        state = scaler.adjust(state, jnp.bool_(finite))
+        if finite:
+            good += 1
+            if good >= growth_interval:
+                scale = min(scale * 2.0, 2.0 ** 12)
+                good = 0
+        else:
+            scale = max(scale * 0.5, 1.0)
+            good = 0
+            overflows += 1
+        assert float(state.scale) == scale
+        assert int(state.good_steps) == good
+        assert int(state.overflow_count) == overflows
+        # structural invariants, independent of the reference
+        assert 1.0 <= float(state.scale) <= 2.0 ** 12
+        assert 0 <= int(state.good_steps) < growth_interval
+
+
+@settings(max_examples=30, deadline=None)
+@given(flags=st.lists(st.booleans(), min_size=1, max_size=40))
+def test_static_loss_scale_never_moves(flags):
+    scaler = StaticLossScale(scale_value=8.0)
+    state = scaler.init()
+    for finite in flags:
+        state = scaler.adjust(state, jnp.bool_(finite))
+        assert float(state.scale) == 8.0
+    assert int(state.overflow_count) == sum(1 for f in flags if not f)
+
+
+@settings(max_examples=30, deadline=None)
+@given(scale_pow=st.integers(0, 16), seed=st.integers(0, 2 ** 31 - 1))
+def test_unscale_divides_float_leaves_exactly(scale_pow, seed):
+    """Power-of-two scales divide out bit-exactly; int leaves untouched."""
+    scaler = DynamicLossScale(init_scale=2.0 ** scale_pow)
+    state = scaler.init()
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(5, 3)), jnp.float32),
+         "step": jnp.asarray(7, jnp.int32)}
+    scaled = {"w": g["w"] * state.scale, "step": g["step"]}
+    out = unscale_grads(scaled, state)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
+    assert out["step"].dtype == jnp.int32 and int(out["step"]) == 7
