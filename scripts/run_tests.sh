@@ -3,7 +3,8 @@
 #   PYTHONPATH=src python -m pytest -x -q
 # (pytest.ini deselects tests marked `slow` by default.)
 #
-#   scripts/run_tests.sh --all    # include the slow serving matrices
+#   scripts/run_tests.sh --all      # include the slow serving matrices
+#   scripts/run_tests.sh --paged    # only the paged-cache/allocator suite
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
 # tests/test_properties.py and tests/test_serving_properties.py, which
@@ -15,5 +16,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--all" ]]; then
   shift
   exec python -m pytest -x -q -m "" "$@"
+fi
+if [[ "${1:-}" == "--paged" ]]; then
+  shift
+  exec python -m pytest -x -q -m "paged" "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -107,6 +107,41 @@ class Arch:
             return ed_lib.init_encdec_cache(self.cfg, batch, max_len)
         raise ValueError(f"{self.kind} has no decode cache")
 
+    def init_paged_cache(self, batch: int, max_len: int, *,
+                         block_size: int = 16, n_blocks=None):
+        """Paged (block-arena) serving cache — decoder-only.
+
+        n_blocks defaults to the dense-equivalent budget: `batch` slots'
+        worth of blocks per attention slot-type (ring length // block
+        size each), so a no-sharing workload fits exactly as many slots
+        as the dense pool while shared prompt prefixes fit more.
+        """
+        if self.kind != "decoder":
+            raise NotImplementedError("paged serving is decoder-only")
+        if n_blocks is None:
+            layout = dec_lib.paged_layout(self.cfg, max_len, block_size)
+            n_blocks = {si: batch * (ring // block_size)
+                        for si, ring in filter(None, layout)}
+        return dec_lib.init_paged_decoder_cache(
+            self.cfg, batch, max_len, block_size=block_size,
+            n_blocks=n_blocks)
+
+    def paged_cache_specs(self, shape_name: str, *, block_size: int = 16):
+        """Abstract paged cache for the dry-run decode shapes — the HLO
+        the production mesh actually serves (block-table gather included).
+
+        Arenas are sized one null block short of the dense-equivalent
+        budget so the total blocks dim stays divisible by the data axis —
+        that is the dim the pool shards across chips."""
+        shape = SHAPES[shape_name]
+        layout = dec_lib.paged_layout(self.cfg, shape.seq_len, block_size)
+        n_blocks = {si: shape.global_batch * (ring // block_size) - 1
+                    for si, ring in filter(None, layout)}
+        return jax.eval_shape(
+            lambda: self.init_paged_cache(shape.global_batch, shape.seq_len,
+                                          block_size=block_size,
+                                          n_blocks=n_blocks))
+
     def prefill(self, params, batch, *, cache_len: Optional[int] = None,
                 per_slot: bool = False, positions=None):
         """Full-sequence forward with cache writes -> (last_logits, cache).

@@ -28,6 +28,7 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -209,27 +210,33 @@ def batch_pspec(batch: PyTree, mesh: Mesh) -> PyTree:
 
 
 def cache_pspec(cache: PyTree, mesh: Mesh) -> PyTree:
-    """KV / SSM cache sharding for serving.
+    """KV / SSM cache sharding for serving — dense and paged layouts.
 
     kv caches (layers, B, L, kv, hd): B over data (if divisible), hd over
     model (contracting-dim sharding; exact under SPMD).
     ssm states  (layers, B, H, N, P): B over data, N over model.
     conv states (layers, B, W-1, C):  B over data, C over model.
+    paged arenas (layers, n_blocks, bsz, kv, hd): BLOCKS over data — the
+    pool's capacity dim distributes across chips the way batch rows do in
+    the dense pool — hd over model as before.
+    Integer bookkeeping (positions, block tables, cursors) never shards
+    over model: only its leading batch/blocks dim goes over data, so the
+    block-table gather indexes a locally-addressable table.
     """
     dsize = _axis_size(mesh, "data")
     msize = _axis_size(mesh, "model")
     paths = tree_paths(cache)
 
     def spec(pth, v):
-        low = pth.lower()
         if v.ndim <= 1:
             return P(*([None] * v.ndim))
         s = [None] * v.ndim
-        # batch dim is axis 1 for stacked caches (axis 0 = layers)
+        # batch/blocks dim is axis 1 for stacked caches (axis 0 = layers)
         b_ax = 1 if v.ndim >= 3 else 0
         if _divisible(v.shape[b_ax], dsize):
             s[b_ax] = "data"
-        if _divisible(v.shape[-1], msize):
+        if not jnp.issubdtype(v.dtype, jnp.integer) and _divisible(
+                v.shape[-1], msize):
             s[-1] = "model"
         return P(*s)
 

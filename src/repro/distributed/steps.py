@@ -158,7 +158,8 @@ def build_prefill_step(forward_with_cache: Callable, mesh: Mesh):
 
 
 def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
-                     params_like=None, cache_like=None, donate_cache=True):
+                     sampler=None, params_like=None, cache_like=None,
+                     donate_cache=True):
     """Build the jitted serving decode step — the decode_32k / long_500k
     shapes lower exactly this function.
 
@@ -168,23 +169,40 @@ def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
         step(params, tokens (B, 1), positions (B, 1), cache)
             -> (next_tokens (B,), new_cache)
 
-    that greedy-samples in fp32 regardless of the serving precision policy
-    (bf16/fp16 models still pick tokens from fp32 logits) and threads the
-    per-slot `positions` through to the pooled cache. Compiled exactly once
-    per (B, cache shape): the continuous-batching engine reuses it for its
-    whole lifetime.
+    or, with a non-greedy `sampler` (repro.serving.sampler.Sampler),
+
+        step(params, tokens, positions, cache, keys (B, 2) uint32)
+            -> (next_tokens (B,), new_cache)
+
+    Sampling always reads fp32 logits regardless of the serving precision
+    policy (bf16/fp16 models still pick tokens from fp32 logits) and the
+    per-slot `positions` thread through to the pooled cache. A greedy
+    sampler (temperature == 0) compiles the exact argmax step — bit-equal
+    to sampler=None. Compiled exactly once per (B, cache shape): the
+    continuous-batching engine reuses it for its whole lifetime, and the
+    paged pool's block tables / cursors are VALUES inside `cache`, so
+    block churn never recompiles (asserted in tests/test_paged_cache.py).
 
     With a multi-device mesh plus params_like/cache_like abstract trees, the
     step is pjit'ed with the production shardings (params per the param
-    rules, cache batch over data / head_dim over model, metrics
-    replicated); on a single device it is a plain jit. donate_cache hands
-    the old cache's buffers to the new one — the KV pool is updated in
-    place instead of being double-buffered.
+    rules, cache batch over data / head_dim over model — or, for paged
+    arenas, blocks over data); on a single device it is a plain jit.
+    donate_cache hands the old cache's buffers to the new one — the KV
+    pool is updated in place instead of being double-buffered.
     """
-    def step(params, tokens, positions, cache):
-        logits, new_cache = decode_fn(
-            params, {"tokens": tokens, "positions": positions}, cache)
-        return greedy_next(logits.astype(jnp.float32)), new_cache
+    sampled = sampler is not None and not sampler.greedy
+
+    if sampled:
+        def step(params, tokens, positions, cache, keys):
+            logits, new_cache = decode_fn(
+                params, {"tokens": tokens, "positions": positions}, cache)
+            nxt = sampler.sample(logits[:, -1, :].astype(jnp.float32), keys)
+            return nxt, new_cache
+    else:
+        def step(params, tokens, positions, cache):
+            logits, new_cache = decode_fn(
+                params, {"tokens": tokens, "positions": positions}, cache)
+            return greedy_next(logits.astype(jnp.float32)), new_cache
 
     donate = (3,) if donate_cache else ()
     if mesh is None or mesh.devices.size <= 1 or params_like is None:
@@ -196,10 +214,20 @@ def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
 
     pspec = shardings(shd.params_pspec(params_like, mesh))
     cspec = shardings(shd.cache_pspec(cache_like, mesh))
-    tok_sh = NamedSharding(mesh, P(shd.batch_axes(mesh)))
+    # batch sharding must respect divisibility (long_500k serves B=1):
+    # the pooled cache's per-slot cursor carries the batch size
+    baxes = shd.batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    idx = cache_like["index"] if isinstance(cache_like, dict) else None
+    B = idx.shape[0] if getattr(idx, "ndim", 0) == 1 else None
+    tok_sh = NamedSharding(
+        mesh, P(baxes) if B is not None and B % bsize == 0 else P())
+    in_sh = (pspec, tok_sh, tok_sh, cspec) + ((tok_sh,) if sampled else ())
     return jax.jit(
         step,
-        in_shardings=(pspec, tok_sh, tok_sh, cspec),
+        in_shardings=in_sh,
         out_shardings=(tok_sh, cspec),
         donate_argnums=donate,
     )

@@ -159,7 +159,28 @@ def lower_one(arch_name: str, shape_name: str, multi_pod: bool,
             lowered = jitted.lower(params_abs, batch_abs)
             compiled = lowered.compile()
 
-    else:  # decode
+    elif shape.kind == "decode" and arch.kind == "decoder":
+        # Pooled PAGED decode: lower the exact serving step the
+        # continuous-batching engine runs — block arenas sharded blocks-
+        # over-data / head_dim-over-model, block-table gather included —
+        # so the production-mesh sharding of the paged pool gets HLO
+        # coverage (the engine-side no-recompile property is asserted in
+        # tests/test_paged_cache.py).
+        from repro.distributed.steps import build_serve_step
+
+        cache_abs = arch.paged_cache_specs(shape_name)
+        B = shape.global_batch
+        tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        jitted = build_serve_step(arch.decode_step, mesh,
+                                  params_like=params_abs,
+                                  cache_like=cache_abs)
+        record["cache"] = "paged"
+        with mesh:
+            lowered = jitted.lower(params_abs, tok_abs, pos_abs, cache_abs)
+            compiled = lowered.compile()
+
+    else:  # decode, enc-dec archs (whisper): dense cross-attention cache
         cache_abs = arch.cache_specs(shape_name)
         cspec = shd.cache_pspec(cache_abs, mesh)
 

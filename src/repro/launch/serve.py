@@ -1,15 +1,21 @@
-"""Serving launcher: continuous-batching greedy decode against an arch.
+"""Serving launcher: continuous-batching decode against an arch.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \\
-      --requests 16 --max-batch 4 --precision bf16 --metrics serve.jsonl
+      --requests 16 --max-batch 4 --precision bf16 --metrics serve.jsonl \\
+      --sampler temperature=0.8,top_k=40 --cache paged --shared-prefix 24
 
 Generates a synthetic request stream (randomized prompt lengths and
-generation budgets around --prompt-len / --new-tokens), drives the
-requested engine and prints a JSON report: tokens/s, time-to-first-token
-and inter-token latency percentiles, slot utilization. --engine static
-runs the padded lockstep baseline instead. --metrics writes one JSONL
-record per decode step (active slots, queue depth, step latency) plus a
-final summary record — the serving analogue of train.py's loss curve.
+generation budgets around --prompt-len / --new-tokens; --shared-prefix N
+prepends a common N-token system prompt the paged cache deduplicates),
+drives the requested engine and prints a JSON report: tokens/s,
+time-to-first-token and inter-token latency percentiles, slot
+utilization, peak concurrency and shared-prefix block hits. --cache
+dense keeps the PR 2 per-slot-rows pool; --sampler greedy (default) or
+"temperature=...,top_k=...,top_p=...,seed=..." samples with per-slot
+PRNG keys (temperature=0 is bit-exact greedy). --engine static runs the
+padded lockstep baseline instead. --metrics writes one JSONL record per
+decode step (active slots, queue depth, step latency) plus a final
+summary record — the serving analogue of train.py's loss curve.
 """
 from __future__ import annotations
 
@@ -43,7 +49,24 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--prefill-bucket", type=int, default=8,
                     help="round prompt lengths up to this multiple "
-                         "(fewer prefill compiles; token-exact)")
+                         "(fewer prefill compiles; token-exact — one "
+                         "batched prefill per bucket at admission)")
+    ap.add_argument("--cache", choices=["paged", "dense"], default="paged",
+                    help="paged: block arena + shared prompt prefixes; "
+                         "dense: per-slot rows (PR 2 baseline)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged cache block granularity (must divide "
+                         "max-len and any sliding window)")
+    ap.add_argument("--slots-budget", type=int, default=0,
+                    help="size the paged arena for this many dense-"
+                         "equivalent slots (0: max-batch); with shared "
+                         "prefixes max-batch can exceed it")
+    ap.add_argument("--sampler", default="greedy",
+                    help="'greedy' or 'temperature=0.8,top_k=40,"
+                         "top_p=0.95,seed=0' (temperature=0 == greedy)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="common system-prompt tokens prepended to every "
+                         "request (exercises prefix sharing)")
     ap.add_argument("--metrics", default=None,
                     help="JSONL path for per-step latency/throughput")
     ap.add_argument("--seed", type=int, default=0)
@@ -57,7 +80,12 @@ def main():
 
     reqs = synthetic_requests(args.requests, arch.cfg.vocab,
                               prompt_len=args.prompt_len,
-                              new_tokens=args.new_tokens, seed=args.seed)
+                              new_tokens=args.new_tokens, seed=args.seed,
+                              shared_prefix=args.shared_prefix)
+    if args.shared_prefix:
+        max_len += args.shared_prefix
+    if args.cache == "paged":   # arena rows come in whole blocks
+        max_len = -(-max_len // args.block_size) * args.block_size
     log = MetricsLogger(args.metrics)
 
     t0 = time.perf_counter()
@@ -73,12 +101,14 @@ def main():
         engine = ContinuousEngine(
             arch, params, max_batch=args.max_batch, max_len=max_len,
             policy=args.precision, prefill_bucket=args.prefill_bucket,
-            on_step=on_step)
+            on_step=on_step, cache=args.cache, block_size=args.block_size,
+            slots_budget=args.slots_budget or None,
+            sampler=args.sampler)
         engine.run(reqs)
         stats = engine.report(time.perf_counter() - t0)
     else:
         engine = ServeEngine(arch, params, max_len=max_len,
-                             policy=args.precision)
+                             policy=args.precision, sampler=args.sampler)
         from repro.serving.metrics import aggregate
         for r in reqs:              # TTFT includes the inter-wave queue wait
             r.trace.mark_submit()
@@ -90,6 +120,8 @@ def main():
 
     stats["engine"] = args.engine
     stats["precision"] = args.precision
+    stats["cache"] = args.cache if args.engine == "continuous" else "static"
+    stats["sampler"] = args.sampler
     log.log(-1, **{k: v for k, v in stats.items()
                    if isinstance(v, (int, float))})
     log.close()

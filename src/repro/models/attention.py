@@ -126,8 +126,52 @@ def attn_apply(
     # Pooled (continuous-batching) caches carry a per-slot write cursor
     # index: (B,) and per-slot positions pos: (B, cache_len); the classic
     # single-stream cache keeps the scalar index / shared (cache_len,) pos.
+    # Paged pooled caches additionally carry a block table: k/v/pos are
+    # block ARENAS shared by every slot, and "table" maps each slot's
+    # logical rows onto arena blocks.
     pooled = cache is not None and jnp.ndim(cache["index"]) == 1
-    if cache is not None and S > 1 and S >= cache["k"].shape[1]:
+    if cache is not None and "table" in cache:
+        # Paged decode (serving/cache_pool.PagedCachePool): cache k/v are
+        # (n_blocks, block_size, kv, hd) arenas, pos is (n_blocks,
+        # block_size), table is (B, max_blocks) int32 arena indices with 0
+        # pointing at the reserved null block (pos -1 everywhere, so its
+        # rows are structurally masked). Logical row r of slot b lives at
+        # arena[table[b, r // bsz], r % bsz]; r = cursor % ring_len gives
+        # the sliding-window layers their ring semantics for free. The
+        # host-side allocator guarantees the block being written is
+        # exclusively owned (shared prefix blocks are never in the write
+        # path), so the scatter below cannot race between slots —
+        # inactive slots all write the null block with position -1, which
+        # keeps it invalid. Everything is a fixed-shape gather/scatter:
+        # the jitted step never recompiles as blocks churn.
+        if S != 1:
+            raise NotImplementedError(
+                "paged cache only serves single-token decode; prefill "
+                "runs against a dense per-request cache")
+        idx = cache["index"]                       # (B,) local cursors
+        tbl = cache["table"]                       # (B, max_blocks)
+        bsz = cache["k"].shape[1]
+        ring_len = tbl.shape[1] * bsz
+        r = jax.lax.rem(idx, ring_len)
+        blk = jnp.take_along_axis(tbl, (r // bsz)[:, None], axis=1)[:, 0]
+        off = jax.lax.rem(r, bsz)
+        k_new = maybe_constrain(k.astype(cache["k"].dtype),
+                                "data", None, None, "model")[:, 0]
+        v_new = maybe_constrain(v.astype(cache["v"].dtype),
+                                "data", None, None, "model")[:, 0]
+        q_pos = (positions if positions.ndim == 2
+                 else jnp.broadcast_to(positions, (B, S))).astype(jnp.int32)
+        k_arena = cache["k"].at[blk, off].set(k_new)
+        v_arena = cache["v"].at[blk, off].set(v_new)
+        pos_arena = cache["pos"].at[blk, off].set(q_pos[:, 0])
+        new_cache = {"k": k_arena, "v": v_arena, "pos": pos_arena,
+                     "index": idx + 1}
+        # block-table gather: (B, max_blocks, bsz, ...) -> (B, ring_len, ...)
+        k = k_arena[tbl].reshape(B, ring_len, kv, hd).astype(compute_dtype)
+        v = v_arena[tbl].reshape(B, ring_len, kv, hd).astype(compute_dtype)
+        k_pos = pos_arena[tbl].reshape(B, ring_len)
+        q = maybe_constrain(q, "data", None, None, "model")
+    elif cache is not None and S > 1 and S >= cache["k"].shape[1]:
         attend_cached = False  # attend in-flight; cache write is tail-only
         # Prefill longer than a ring cache (sliding-window layer): attend
         # the in-flight k/v (standard masking below) and write only the
@@ -241,6 +285,23 @@ def attn_apply(
     out = out.reshape(B, S, h * hd)
     out = dense_apply(p["wo"], out, compute_dtype)
     return out, new_cache
+
+
+def init_paged_kv_cache(n_blocks: int, block_size: int, n_kv: int,
+                        head_dim: int, dtype=jnp.bfloat16):
+    """Block arena for the paged serving cache (one attention slot-type).
+
+    Unlike `init_kv_cache` there is no batch dim: slots reference blocks
+    through a (max_batch, max_blocks) int32 table kept NEXT to the cache
+    (see serving/cache_pool.PagedCachePool). Block 0 is the reserved null
+    block — its positions stay -1 so unbacked table entries gather rows
+    that are structurally masked.
+    """
+    return {
+        "k": jnp.zeros((n_blocks, block_size, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_blocks, block_size, n_kv, head_dim), dtype),
+        "pos": jnp.full((n_blocks, block_size), -1, jnp.int32),
+    }
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,

@@ -244,6 +244,11 @@ def decoder_apply(params, cfg: DecoderConfig, tokens=None, *, embeds=None,
     aux_acc = {"moe_aux_loss": jnp.zeros((), jnp.float32),
                "router_entropy": jnp.zeros((), jnp.float32)}
 
+    # Paged serving cache: block tables are read-only in the model (the
+    # host-side allocator owns them) and identical across periods, so they
+    # ride into the scan as captured constants rather than scanned leaves.
+    tables = caches.get("tables") if isinstance(caches, dict) else None
+
     def period_step(carry, xs):
         x = carry
         slot_params, slot_caches = xs
@@ -254,6 +259,8 @@ def decoder_apply(params, cfg: DecoderConfig, tokens=None, *, embeds=None,
             if slot_caches is not None:
                 cache_i = dict(slot_caches[si])
                 cache_i["index"] = caches["index"]
+                if tables is not None and tables[si] is not None:
+                    cache_i["table"] = tables[si]
             x, nc, aux = _run_slot(
                 slot_params[si], cfg, mixer, ffn, x, positions,
                 cache_i, kv_valid_len, valid)
@@ -285,6 +292,8 @@ def decoder_apply(params, cfg: DecoderConfig, tokens=None, *, embeds=None,
     if caches is not None and new_cache_stacks is not None:
         new_caches = {"slots": tuple(new_cache_stacks),
                       "index": caches["index"] + S}
+        if tables is not None:
+            new_caches["tables"] = tables    # pass-through: host-owned
 
     aux = {k: jnp.sum(v) for k, v in aux_stacks.items()}
 
@@ -329,6 +338,78 @@ def init_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
     index = (jnp.zeros((batch,), jnp.int32) if per_slot
              else jnp.zeros((), jnp.int32))
     return {"slots": tuple(slots), "index": index}
+
+
+def paged_layout(cfg: DecoderConfig, max_len: int, block_size: int):
+    """Per-superblock-slot paged layout: [(slot_idx, ring_len) | None].
+
+    Attention slots page their KV through a block arena; the entry gives
+    the slot's logical ring length (max_len, or the sliding window for
+    "attn_local" slots). Mamba slots return None: their state is O(1) per
+    slot (a fixed SSM tensor + conv tail), so paging buys nothing and
+    they stay slot-resident (see init_paged_decoder_cache).
+    """
+    out = []
+    for si, (mixer, _) in enumerate(cfg.superblock):
+        if mixer == "mamba":
+            out.append(None)
+            continue
+        L = max_len
+        if mixer == "attn_local" and cfg.sliding_window:
+            L = min(max_len, cfg.sliding_window)
+        if L % block_size != 0:
+            raise ValueError(
+                f"slot {si} ({mixer}): cache length {L} not a multiple of "
+                f"block_size {block_size}")
+        out.append((si, L))
+    return out
+
+
+def init_paged_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
+                             *, block_size: int, n_blocks,
+                             dtype=jnp.bfloat16):
+    """Paged continuous-batching cache: block arenas + per-slot tables.
+
+    Layout (vs the dense per_slot layout of init_decoder_cache):
+      attention slots: k/v/pos become (n_periods, n_blocks, block_size,
+        ...) ARENAS with no batch dim; a (batch, ring_len // block_size)
+        int32 block table per slot-type (under "tables", index 0 = the
+        reserved null block) maps each decode slot's logical rows onto
+        arena blocks, so identical prompt prefixes are stored once and
+        shared across slots.
+      mamba slots: unchanged (n_periods, batch, ...) slot-resident state.
+      index: (batch,) per-slot LOCAL write cursors (== tokens seen, with
+        no left-pad offset — the paged chain is position-aligned).
+
+    n_blocks: data blocks per attention arena — an int (same for every
+    attention slot-type) or a dict {slot_idx: int}. One extra null block
+    is always added.
+    """
+    layouts = paged_layout(cfg, max_len, block_size)
+    slots, tables = [], []
+    for si, (mixer, _) in enumerate(cfg.superblock):
+        layout = layouts[si]
+        if layout is None:
+            one = mamba_lib.init_mamba_cache(batch, cfg.mamba_cfg())
+            one.pop("index")
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (cfg.n_periods,) + a.shape).copy(), one)
+            slots.append(stacked)
+            tables.append(None)
+            continue
+        _, ring_len = layout
+        nb = n_blocks[si] if isinstance(n_blocks, dict) else n_blocks
+        one = attn_lib.init_paged_kv_cache(
+            nb + 1, block_size, cfg.n_kv_heads, cfg.resolved_head_dim,
+            dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.n_periods,) + a.shape).copy(), one)
+        slots.append(stacked)
+        tables.append(jnp.zeros((batch, ring_len // block_size), jnp.int32))
+    return {"slots": tuple(slots), "tables": tuple(tables),
+            "index": jnp.zeros((batch,), jnp.int32)}
 
 
 # --------------------------------------------------------------------------

@@ -8,7 +8,15 @@ decomposition the paper uses to get matmul-dominated FLOPs.
 
 Decode (S == 1) takes the pure recurrent path with an explicit SSM + conv
 state cache: O(1) per token, which is what makes long_500k tractable for the
-SSM/hybrid archs.
+SSM/hybrid archs. Under the paged serving pool
+(serving/cache_pool.PagedCachePool) this state stays SLOT-RESIDENT: unlike
+attention KV it does not grow with sequence length — one (H, N, P) state
+plus a (W-1, C) conv tail per slot regardless of prompt size — so block
+paging would add table indirection for zero memory win, and a shared
+prompt prefix cannot be shared anyway (the recurrent state after the
+prefix is numerically folded into one tensor, not addressable rows).
+Hybrid archs therefore page their attention slots and scatter/gather
+mamba state by batch row exactly as the dense pool does.
 
 Layer anatomy (faithful to Mamba-2):
   in_proj -> [z (gate), x, B, C, dt]; causal depthwise conv over (x, B, C);

@@ -2,25 +2,34 @@
 
 See serving/engine.py for the architecture overview. Public surface:
 
-  ContinuousEngine   slot-pool continuous batching (production shape)
+  ContinuousEngine   slot-pool continuous batching (paged cache default)
   ServeEngine        static-batch baseline (padded lockstep decode)
   Request            one prompt + generation budget (+ latency trace)
+  Sampler            temperature/top-k/top-p decode (per-slot PRNG keys)
   throughput_probe   warmup-aware timed run -> tokens/s + percentiles
   Scheduler          FIFO slot admission (host-side, property-tested)
-  CachePool          preallocated pooled KV/SSM cache + insert/evict
+  CachePool          dense pooled KV/SSM cache + insert/evict (baseline)
+  PagedCachePool     block-paged KV arena with shared prompt prefixes
+  BlockAllocator     refcounted free-list over arena blocks
+  BlockTableMap      per-slot-type tables + prefix registry (host-side)
 """
-from repro.serving.cache_pool import CachePool
+from repro.serving.block_allocator import (BlockAllocator, BlockTableMap,
+                                           NoBlocksError)
+from repro.serving.cache_pool import CachePool, PagedCachePool
 from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
-                                  apply_serving_policy, build_prefill_fn,
-                                  pad_prompts, prompt_granularity,
-                                  synthetic_requests, throughput_probe)
+                                  apply_serving_policy, build_first_token_fn,
+                                  build_prefill_fn, pad_prompts,
+                                  prompt_granularity, synthetic_requests,
+                                  throughput_probe)
 from repro.serving.metrics import RequestTrace, aggregate, percentile
+from repro.serving.sampler import Sampler, fold_keys
 from repro.serving.scheduler import Scheduler, SchedulerError
 
 __all__ = [
-    "CachePool", "ContinuousEngine", "Request", "RequestTrace",
+    "BlockAllocator", "BlockTableMap", "CachePool", "ContinuousEngine",
+    "NoBlocksError", "PagedCachePool", "Request", "RequestTrace", "Sampler",
     "Scheduler", "SchedulerError", "ServeEngine", "aggregate",
-    "apply_serving_policy", "build_prefill_fn", "pad_prompts",
-    "percentile", "prompt_granularity", "synthetic_requests",
-    "throughput_probe",
+    "apply_serving_policy", "build_first_token_fn", "build_prefill_fn",
+    "fold_keys", "pad_prompts", "percentile", "prompt_granularity",
+    "synthetic_requests", "throughput_probe",
 ]

@@ -1,0 +1,241 @@
+"""Refcounted block allocator + block-table bookkeeping for the paged cache.
+
+All state here is host-side (numpy / python): the device side of the paged
+pool is just two kinds of arrays — block arenas `(n_blocks, block_size, ...)`
+and block tables `(max_batch, max_blocks)` of int32 arena indices — and this
+module decides what those tables contain. Splitting the bookkeeping from the
+device scatters keeps the allocator a pure state machine, which is what the
+hypothesis property tests in tests/test_serving_properties.py drive:
+
+  * refcounts are never negative; free blocks always have refcount 0;
+  * the free list and the live (ref > 0) blocks partition the arena
+    (minus the reserved null block);
+  * a block referenced by two slot tables is always a registered shared
+    block (refcount == number of table references);
+  * any sequence of insert/evict ops returns every block: no leaks.
+
+Block 0 is the reserved NULL block: unoccupied table entries point at it,
+so the fixed-shape gather in the decode step always has a valid index to
+read. Its position rows stay -1 forever (inserts route skipped chain
+positions' writes there with invalid source rows, and evicted slots'
+decode writes carry position -1), which masks it out of attention.
+
+Prefix sharing: a chain block whose `block_size` rows are entirely prompt
+tokens is content-addressed by (padded prefill length, the prompt tokens
+up to the end of the block), realised as an INCREMENTAL sha256 chain —
+digest_j = sha256(block_size, padded_len, tokens[0:(j+1)*bs]) built one
+block at a time — so registry keys are O(1) bytes each instead of O(plen)
+token tuples and a 32k-token system prompt does not hold megabytes of
+boxed ints live. The padded length is part of the key because the
+prefill's reduction shapes depend on it — two requests only share blocks
+their own prefill would have filled with identical values. Blocks that
+decode will later overwrite (ring-buffer wrap on sliding-window layers)
+are never shared, so copy-on-write is not needed: every block a slot
+writes is exclusively owned from admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+class NoBlocksError(RuntimeError):
+    """Arena exhausted: the caller should keep the request queued."""
+
+
+NULL_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator with refcounts over blocks 1..n_blocks-1."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 data + null), got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self.ref = np.zeros(n_blocks, np.int32)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return int((self.ref[1:] > 0).sum())
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise NoBlocksError(f"all {self.n_blocks - 1} blocks in use")
+        b = self._free.pop()
+        self.ref[b] = 1
+        return b
+
+    def retain(self, block: int):
+        if not (0 < block < self.n_blocks) or self.ref[block] < 1:
+            raise ValueError(f"retain of non-live block {block}")
+        self.ref[block] += 1
+
+    def release(self, block: int) -> bool:
+        """Drop one reference; returns True when the block went free."""
+        if not (0 < block < self.n_blocks) or self.ref[block] < 1:
+            raise ValueError(f"release of non-live block {block}")
+        self.ref[block] -= 1
+        if self.ref[block] == 0:
+            self._free.append(block)
+            return True
+        return False
+
+    def check_invariants(self):
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free blocks"
+        assert NULL_BLOCK not in free, "null block on the free list"
+        assert (self.ref >= 0).all(), "negative refcount"
+        assert all(self.ref[b] == 0 for b in free), "free block with refs"
+        live = {b for b in range(1, self.n_blocks) if self.ref[b] > 0}
+        assert not (free & live)
+        assert free | live == set(range(1, self.n_blocks)), (
+            "free + live blocks do not partition the arena")
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One chain position of an insert plan."""
+    chain_pos: int     # index into the slot's block table row
+    block: int         # arena block id
+    shared: bool       # True: reused an existing prefix block (no write)
+
+
+class BlockTableMap:
+    """Block tables + allocator + prefix registry for ONE attention
+    slot-type (full-attention and sliding-window layer types have
+    different ring lengths, hence separate arenas and maps).
+
+    `table` is the host mirror of the device block table handed to the
+    jitted decode step: row `slot` lists the arena blocks backing that
+    slot's logical rows [j*block_size, (j+1)*block_size), 0 = unbacked.
+    """
+
+    def __init__(self, max_batch: int, ring_len: int, block_size: int,
+                 n_blocks: int):
+        if ring_len % block_size != 0:
+            raise ValueError(
+                f"cache length {ring_len} not a multiple of block_size "
+                f"{block_size}")
+        self.block_size = block_size
+        self.ring_len = ring_len
+        self.max_blocks = ring_len // block_size
+        self.table = np.zeros((max_batch, self.max_blocks), np.int32)
+        self.alloc = BlockAllocator(n_blocks)
+        self._registry: Dict[tuple, int] = {}   # prefix key -> block
+        self._block_key: Dict[int, tuple] = {}  # block -> prefix key
+
+    # ---------------- planning ----------------
+
+    def _chain(self, prompt_key, plen: int, padded_len: int, budget: int,
+               share: bool) -> List[Tuple[int, bytes]]:
+        """(chain_pos, sharing key | None) for every block the slot needs.
+
+        Rows the slot touches: prompt rows 0..plen-1 plus decode writes at
+        rows plen..plen+budget-2 (the final sampled token is never fed
+        back). Ring wrap maps row r to r % ring_len; chain positions that
+        decode will overwrite are excluded from sharing, as is the whole
+        insert when the prefill stored a rolled ring layout
+        (padded_len > ring_len) whose rows are not content-addressable.
+        Keys are snapshots of one sha256 chain over (block_size,
+        padded_len, prompt tokens so far) — O(1) bytes per block.
+        """
+        bs, L = self.block_size, self.ring_len
+        total_rows = plen + max(budget - 1, 0)
+        wrap = total_rows > L
+        chain_len = self.max_blocks if wrap else -(-total_rows // bs)
+        overwritten = {(r % L) // bs for r in range(plen, total_rows)}
+        rolled = padded_len > L
+        toks = np.asarray(prompt_key, np.int64)
+        h = hashlib.sha256(np.array([bs, padded_len], np.int64).tobytes())
+        out = []
+        for j in range(chain_len):
+            key = None
+            if (j + 1) * bs <= plen:          # entirely prompt-backed
+                h.update(toks[j * bs:(j + 1) * bs].tobytes())
+                if share and not rolled and j not in overwritten:
+                    key = h.digest()
+            out.append((j, key))
+        return out
+
+    def blocks_needed(self, prompt_key, plen: int, padded_len: int,
+                      budget: int, share: bool = True) -> int:
+        """Fresh blocks an insert would consume (registry hits are free)."""
+        return sum(1 for _, key in self._chain(prompt_key, plen, padded_len,
+                                               budget, share)
+                   if key is None or key not in self._registry)
+
+    # ---------------- mutation ----------------
+
+    def insert(self, slot: int, prompt_key, plen: int,
+               padded_len: int, budget: int,
+               share: bool = True) -> List[Placement]:
+        """Allocate/retain the slot's whole chain up front. Atomic: on
+        NoBlocksError every block this call touched is released and the
+        table row is left empty, so the caller can requeue the request."""
+        assert not self.table[slot].any(), f"slot {slot} table not empty"
+        placed: List[Placement] = []
+        try:
+            for j, key in self._chain(prompt_key, plen, padded_len, budget,
+                                      share):
+                if key is not None and key in self._registry:
+                    b = self._registry[key]
+                    self.alloc.retain(b)
+                    placed.append(Placement(j, b, True))
+                else:
+                    b = self.alloc.alloc()
+                    placed.append(Placement(j, b, False))
+                    if key is not None:
+                        self._registry[key] = b
+                        self._block_key[b] = key
+        except NoBlocksError:
+            for p in placed:
+                self._release(p.block)
+            raise
+        for p in placed:
+            self.table[slot, p.chain_pos] = p.block
+        return placed
+
+    def _release(self, block: int) -> bool:
+        freed = self.alloc.release(block)
+        if freed and block in self._block_key:
+            del self._registry[self._block_key.pop(block)]
+        return freed
+
+    def evict(self, slot: int) -> List[int]:
+        """Return the slot's blocks to the pool; yields the freed ids."""
+        freed = []
+        for j in range(self.max_blocks):
+            b = int(self.table[slot, j])
+            if b != NULL_BLOCK and self._release(b):
+                freed.append(b)
+            self.table[slot, j] = NULL_BLOCK
+        return freed
+
+    # ---------------- introspection ----------------
+
+    @property
+    def n_shared(self) -> int:
+        return len(self._registry)
+
+    def check_invariants(self):
+        self.alloc.check_invariants()
+        counts = np.bincount(self.table.ravel(),
+                             minlength=self.alloc.n_blocks)
+        # every table reference holds exactly one refcount
+        np.testing.assert_array_equal(counts[1:], self.alloc.ref[1:])
+        # a block in two tables must be a registered shared block
+        multi = {b for b in np.nonzero(counts > 1)[0] if b != NULL_BLOCK}
+        assert multi <= set(self._block_key), (
+            "unshared block referenced by multiple table entries", multi)
+        # registry consistency: every registered block is live
+        for key, b in self._registry.items():
+            assert self.alloc.ref[b] > 0 and self._block_key.get(b) == key

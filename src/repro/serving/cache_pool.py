@@ -1,24 +1,42 @@
-"""Preallocated KV/SSM cache pool for continuous batching.
+"""KV/SSM cache pools for continuous batching: dense and paged.
 
-The pool is one pytree in the pooled (`per_slot=True`) layout: every
-stacked cache leaf is (n_periods, max_batch, ...), the write cursor is
-(max_batch,), and attention positions are (max_batch, cache_len) with -1
-marking invalid rows. Slot admission *inserts* a freshly prefilled
-single-request cache (same layout, batch 1) into one batch row; eviction
-re-blanks the row. Both are O(row) scatters jitted once — the decode step
-itself never changes shape, so the engine never recompiles after warmup.
+`CachePool` (PR 2 baseline, kept as the differential reference): every
+slot owns its full max_len KV rows. One pytree in the pooled
+(`per_slot=True`) layout: every stacked cache leaf is (n_periods,
+max_batch, ...), the write cursor is (max_batch,), and attention
+positions are (max_batch, cache_len) with -1 marking invalid rows. Slot
+admission *inserts* a freshly prefilled single-request cache (same
+layout, batch 1) into one batch row; eviction re-blanks the row.
 
-The insert is layout-generic: attention k/v/pos rows, mamba ssm/conv
-state and the cursor all have the slot on the same axis (axis 1 inside
-the stacked "slots" subtree, axis 0 for the top-level cursor), so one
-tree_map covers every arch family.
+`PagedCachePool` (the production pool): attention KV lives in block
+ARENAS of (n_periods, n_blocks, block_size, ...) with per-slot block
+TABLES of (max_batch, max_blocks) int32 arena indices, managed by the
+refcounted host-side allocator in serving/block_allocator.py. Identical
+prompt prefixes are content-addressed and stored ONCE — later requests
+retain the existing blocks instead of copying KV — and eviction returns
+blocks to the free list instead of blanking rows, so memory scales with
+*distinct* tokens, not slots x max_len. A request's whole chain
+(prompt + decode budget) is reserved at admission, which makes the pool
+atomic (admission either fully fits or the request stays queued) and
+removes copy-on-write from the decode path: every block a slot writes is
+exclusively owned from the start (blocks that a ring wrap will overwrite
+are simply never shared). SSM/conv state is O(1) per slot and stays
+slot-resident (the mamba leaves keep the dense layout).
+
+Both pools feed the same fixed-shape jitted decode step: inserts and
+evictions only change block-table VALUES and arena contents, never any
+shape, so the engine never recompiles after warmup.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoder as dec_lib
+from repro.serving.block_allocator import BlockTableMap, NoBlocksError
 
 PyTree = Any
 
@@ -65,5 +83,244 @@ class CachePool:
 
     def lengths(self):
         """Per-slot write cursors (host array) — diagnostic only."""
-        import numpy as np
         return np.asarray(self.cache["index"])
+
+
+def _arena_insert(arena: PyTree, req: PyTree, src_rows, dst_blocks) -> PyTree:
+    """Scatter a prefilled request's cache rows into arena blocks.
+
+    arena: {"k","v","pos"} with leading (n_periods, n_blocks) dims.
+    req:   the same slot-type's subtree from a dense batch-1 prefill cache,
+           leading dims (n_periods, 1, cache_len).
+    src_rows (ring_len,): request-cache row feeding each logical row; rows
+           of skipped chain positions point at a guaranteed pos==-1 row.
+    dst_blocks (max_blocks,): arena block per chain position, NULL (0) for
+           positions that must not be written (shared blocks, unused tail)
+           — their writes land in the null block carrying pos -1, which
+           keeps it invalid. The allocator guarantees every non-null dst
+           is exclusively owned, so duplicate-index races cannot happen
+           outside the null block.
+    """
+    nbk = dst_blocks.shape[0]
+    bs = arena["k"].shape[2]
+
+    def blocks_of(x, dtype):
+        g = x[:, 0][:, src_rows]              # (n_periods, ring_len, ...)
+        return g.reshape(g.shape[0], nbk, bs, *g.shape[2:]).astype(dtype)
+
+    # null-routed chain positions write position -1 UNCONDITIONALLY: the
+    # null block's invalidity must never depend on which filler row the
+    # source mapping picked (a fully-rolled zero-pad prefill cache has no
+    # pos==-1 row at all — review finding), and garbage K/V there is
+    # harmless once the positions are masked.
+    pos = jnp.where((dst_blocks != 0)[None, :, None],
+                    blocks_of(req["pos"], arena["pos"].dtype), -1)
+    return {"k": arena["k"].at[:, dst_blocks].set(
+                blocks_of(req["k"], arena["k"].dtype)),
+            "v": arena["v"].at[:, dst_blocks].set(
+                blocks_of(req["v"], arena["v"].dtype)),
+            "pos": arena["pos"].at[:, dst_blocks].set(pos)}
+
+
+def _state_insert(state: PyTree, req_state: PyTree, slot, new_index) -> PyTree:
+    """Slot-resident state (mamba SSM/conv) row insert + cursor update.
+
+    new_index is the slot's LOCAL token count (no left-pad offset): the
+    paged chain is position-aligned, unlike the dense pool whose cursor
+    counts padded storage rows."""
+    slots = jax.tree.map(
+        lambda P, r: P.at[:, slot].set(r[:, 0].astype(P.dtype)),
+        state["slots"], req_state["slots"])
+    index = state["index"].at[slot].set(new_index)
+    return {"slots": slots, "index": index}
+
+
+class PagedCachePool:
+    """Block-paged decode cache with refcounted shared prompt prefixes.
+
+    slots_budget sizes each attention arena in dense-slot equivalents:
+    `slots_budget * ring_len // block_size` data blocks (+1 null). The
+    default (== max_batch) matches the dense pool's memory exactly, so a
+    no-sharing workload admits the same number of slots while shared
+    prefixes admit more. An engine wanting 2x+ concurrency passes
+    max_batch > slots_budget and lets the allocator arbitrate.
+    """
+
+    def __init__(self, arch, max_batch: int, max_len: int, *,
+                 block_size: int = 16, slots_budget: Optional[int] = None,
+                 share_prefix: bool = True):
+        if arch.kind != "decoder":
+            raise NotImplementedError("paged serving is decoder-only")
+        self.arch = arch
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.block_size = block_size
+        self.share_prefix = share_prefix
+        budget = slots_budget if slots_budget is not None else max_batch
+        layout = dec_lib.paged_layout(arch.cfg, max_len, block_size)
+        self.maps = {}
+        n_blocks = {}
+        for entry in layout:
+            if entry is None:
+                continue
+            si, ring = entry
+            n_blocks[si] = budget * (ring // block_size)
+            self.maps[si] = BlockTableMap(max_batch, ring, block_size,
+                                          n_blocks[si] + 1)
+        full = arch.init_paged_cache(max_batch, max_len,
+                                     block_size=block_size,
+                                     n_blocks=n_blocks)
+        full.pop("tables")          # host-owned: see device_tables()
+        self.cache = full
+        self._mamba_slots = tuple(si for si, e in enumerate(layout)
+                                  if e is None)
+        self._insert_arena = jax.jit(_arena_insert, donate_argnums=0)
+        self._insert_state = jax.jit(_state_insert, donate_argnums=0)
+        # blank batch-1 state used on eviction (hygiene + lengths() diag)
+        blank = arch.init_cache(1, max_len, per_slot=True)
+        self._blank_state = {
+            "slots": {si: blank["slots"][si] for si in self._mamba_slots},
+            "index": blank["index"]}
+        self.shared_hits = 0    # prefix blocks reused instead of copied
+        self._dev_tables = None  # device mirror, valid between mutations
+
+    # ---------------- layout helpers ----------------
+
+    def device_tables(self):
+        """Per-slot-type block tables as device arrays, None for mamba
+        slots. Uploaded from the host mirror only after insert/evict
+        mutations (values change as blocks churn; shapes never do) —
+        between mutations the engine hands back the decode step's
+        pass-through outputs via put_device_tables, so steady-state
+        decode moves zero table bytes host->device."""
+        if self._dev_tables is None:
+            self._dev_tables = tuple(
+                jnp.asarray(self.maps[si].table) if si in self.maps else None
+                for si in range(len(self.arch.cfg.superblock)))
+        return self._dev_tables
+
+    def put_device_tables(self, tables):
+        """Reuse the decode step's pass-through table outputs for the next
+        step (they alias the donated inputs; same lifecycle as the
+        arenas). Ignored if a host-side mutation already invalidated."""
+        if self._dev_tables is not None:
+            self._dev_tables = tables
+
+    def _state_tree(self):
+        return {"slots": {si: self.cache["slots"][si]
+                          for si in self._mamba_slots},
+                "index": self.cache["index"]}
+
+    def _put_state(self, state):
+        slots = list(self.cache["slots"])
+        for si in self._mamba_slots:
+            slots[si] = state["slots"][si]
+        self.cache = {"slots": tuple(slots), "index": state["index"]}
+
+    def _src_rows(self, ring: int, cache_len: int, plen: int,
+                  padded_len: int):
+        """(request-cache row backing each logical ring row, invalid
+        filler row) — see _arena_insert. `rolled` mirrors attention's
+        prefill roll branch (padded_len >= the request cache's row count —
+        only sliding-window slot-types, whose request cache is
+        ring-sized)."""
+        pad = padded_len - plen
+        rolled = padded_len >= cache_len
+        # The filler row only has to carry pos == -1 for rows of WRITTEN
+        # blocks (a tail block's rows past the prompt); null-routed rows
+        # get their positions forced to -1 in _arena_insert regardless.
+        if rolled:
+            # rows hold the last `cache_len` padded positions, rolled so
+            # that storage row == (position + pad) % cache_len. Whenever a
+            # ring row is unbacked (plen < ring), position -1 exists in
+            # that window and its row carries pos == -1 — the filler. With
+            # zero pad every ring row is prompt-backed, so written blocks
+            # have no unmapped rows and the filler value is never read
+            # into a live block.
+            invalid = (pad - 1) % cache_len
+        else:
+            invalid = cache_len - 1   # never written: engine keeps
+            #                           padded_len < cache_len (slack row)
+        src = np.full(ring, invalid, np.int32)
+        ps = np.arange(max(0, plen - ring), plen)
+        rows = (pad + ps) % cache_len if rolled else pad + ps
+        src[ps % ring] = rows
+        return src, invalid
+
+    # ---------------- admission ----------------
+
+    def blocks_needed(self, prompt, plen: int, padded_len: int,
+                      budget: int) -> dict:
+        return {si: m.blocks_needed(prompt, plen, padded_len, budget,
+                                    self.share_prefix)
+                for si, m in self.maps.items()}
+
+    def free_blocks(self) -> dict:
+        return {si: m.alloc.n_free for si, m in self.maps.items()}
+
+    def insert(self, request_cache: PyTree, slot: int, *, prompt,
+               plen: int, padded_len: int, budget: int):
+        """Admit a prefilled request: reserve its whole block chain
+        (prompt + decode budget), write the fresh blocks, retain shared
+        prefix blocks without copying, and land the slot-resident state.
+        Atomic: on NoBlocksError nothing is left allocated and the
+        device cache is untouched."""
+        if not (0 <= slot < self.max_batch):
+            raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        placed = {}
+        try:
+            for si, m in self.maps.items():
+                placed[si] = m.insert(slot, prompt, plen, padded_len, budget,
+                                      self.share_prefix)
+        except NoBlocksError:
+            for si in placed:
+                self.maps[si].evict(slot)
+            raise
+        self.shared_hits += sum(p.shared for ps in placed.values()
+                                for p in ps)
+        self._dev_tables = None          # host tables changed: re-upload
+        slots = list(self.cache["slots"])
+        for si, m in self.maps.items():
+            ring = m.ring_len
+            cache_len = request_cache["slots"][si]["k"].shape[2]
+            src, invalid = self._src_rows(ring, cache_len, plen, padded_len)
+            dst = np.zeros(m.max_blocks, np.int32)
+            for p in placed[si]:
+                if not p.shared:
+                    dst[p.chain_pos] = p.block
+            # rows of unwritten chain positions (shared blocks, unused
+            # tail) scatter into the null block and must carry pos -1:
+            # route them through the invalid filler row
+            written = dst[np.arange(ring) // self.block_size] != 0
+            src = np.where(written, src, invalid).astype(np.int32)
+            slots[si] = self._insert_arena(
+                slots[si], request_cache["slots"][si],
+                jnp.asarray(src), jnp.asarray(dst))
+        self.cache = {"slots": tuple(slots), "index": self.cache["index"]}
+        req_state = {"slots": {si: request_cache["slots"][si]
+                               for si in self._mamba_slots},
+                     "index": request_cache["index"]}
+        self._put_state(self._insert_state(
+            self._state_tree(), req_state, slot,
+            jnp.asarray(plen, jnp.int32)))
+
+    def evict(self, slot: int):
+        """Return the slot's blocks to the allocator and blank its
+        slot-resident state. Arena contents of freed blocks are left as-is
+        (unreachable: no table references them; re-allocation rewrites
+        them fully, including positions, at the next insert)."""
+        if not (0 <= slot < self.max_batch):
+            raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        self._dev_tables = None          # host tables changed: re-upload
+        for m in self.maps.values():
+            m.evict(slot)
+        self._put_state(self._insert_state(
+            self._state_tree(), self._blank_state, slot,
+            jnp.asarray(0, jnp.int32)))
+
+    def lengths(self):
+        return np.asarray(self.cache["index"])
+
+    def check_invariants(self):
+        for m in self.maps.values():
+            m.check_invariants()

@@ -1,31 +1,46 @@
-"""Serving engines: continuous batching (slot pool) + the static baseline.
+"""Serving engines: continuous batching (paged or dense pool) + baseline.
 
 Two engines share one decode step (`build_serve_step` over
-`Arch.decode_step`), one precision path and one prompt handling scheme:
+`Arch.decode_step`), one precision path, one sampling scheme and one
+prompt handling scheme:
 
 `ContinuousEngine` — the production shape. A fixed pool of `max_batch`
-decode slots backed by a preallocated pooled KV/SSM cache
-(serving/cache_pool.py). Each request is prefilled alone (batch 1, prompt
-left-padded to the arch's granularity with pad positions < 0, so padding
-is exactly masked out of attention/SSM/MoE state), its cache row is
-inserted into a free slot between decode steps, and one fixed-shape
-jitted decode step then advances every active slot per iteration — no
-recompiles for the lifetime of the engine, and freed slots are refilled
-from the admission queue while other requests keep decoding.
+decode slots backed by a preallocated KV/SSM cache. With the default
+`cache="paged"` the pool is block-granular (serving/cache_pool.
+PagedCachePool): attention KV lives in block arenas addressed through
+per-slot block tables, identical prompt prefixes are stored once and
+shared across slots (refcounted, copy-free), and eviction returns blocks
+to a free list — memory scales with distinct tokens instead of
+slots x max_len, so the same arena admits more concurrent requests on
+shared-prefix traffic. `cache="dense"` keeps the PR 2 per-slot-rows pool
+(the differential baseline). Admission is batched: one pass prefills ALL
+queued requests together, bucketed by padded prompt length (one prefill
+compile per bucket instead of per request), and FIFO admission is gated
+on block availability — a request that does not fit stays at the head of
+the queue. Either way, one fixed-shape jitted decode step advances every
+active slot per iteration — no recompiles for the lifetime of the
+engine, block churn included.
 
 `ServeEngine` — the static baseline (kept for comparison + older
 callers): pads the whole request batch to a common length, prefills once,
 decodes lockstep for max(max_new_tokens) steps. Requests admitted
 together must finish together; the padded prefill is still exact (local
-positions, pads masked) so both engines emit token-identical greedy
-output for the same request set — asserted in tests/test_serving_engine.py
-under fp32 and bf16 policies.
+positions, pads masked) so all engines emit token-identical output for
+the same request set — asserted in tests/test_serving_engine.py under
+fp32 and bf16 policies, for paged and dense pools, and in
+tests/test_sampling.py for sampled decode.
+
+Sampling: pass `sampler` (spec string or serving.sampler.Sampler) for
+temperature / top-k / top-p decode with per-slot PRNG keys. Keys derive
+from (seed, request id, token index) only, so sampled streams are
+independent of slot placement, admission order and batch composition —
+the property that keeps the engines differential under sampling.
+temperature=0 is bit-exact greedy. Sampling always reads fp32 logits.
 
 Precision: pass `policy` (name or `repro.precision.Policy`) — parameters
 are cast once at engine construction (bf16/fp16 model copy with fp32
 LN/bias overrides, matching training's inference-side policy) and matmuls
-run in the policy compute dtype, while greedy sampling always reads fp32
-logits (see `build_serve_step`). MoE archs serve with dropless dispatch
+run in the policy compute dtype. MoE archs serve with dropless dispatch
 (capacity = tokens * top_k) so a token's output never depends on its
 batch-mates — the property that makes continuous batching and the static
 path byte-comparable.
@@ -34,15 +49,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.steps import build_serve_step, greedy_next
-from repro.serving.cache_pool import CachePool
+from repro.serving.block_allocator import NoBlocksError
+from repro.serving.cache_pool import CachePool, PagedCachePool
 from repro.serving.metrics import RequestTrace, aggregate
+from repro.serving.sampler import Sampler, fold_keys
 from repro.serving.scheduler import Scheduler
 
 
@@ -88,32 +105,65 @@ def prompt_granularity(cfg) -> int:
 
 def build_prefill_fn(arch, max_len: int):
     """Jitted masked prefill shared by both engines: (params, tokens,
-    positions) -> (first greedy token fp32, pooled cache of max_len rows).
-    Retraces per padded prompt length — bucket lengths to bound that."""
+    positions) -> (fp32 last-position logits (B, 1, V), pooled cache of
+    max_len rows). The caller turns logits into the first token (greedy
+    argmax or sampled — see build_first_token_fn). Retraces per padded
+    prompt shape — bucket lengths to bound that."""
     def prefill(params, tokens, positions):
         logits, cache = arch.prefill(
             params, {"tokens": tokens}, cache_len=max_len,
             per_slot=True, positions=positions)
-        return greedy_next(logits.astype(jnp.float32)), cache
+        return logits.astype(jnp.float32), cache
     return jax.jit(prefill)
+
+
+def build_first_token_fn(sampler: Optional[Sampler]):
+    """(jitted first-token fn, wants_keys). Greedy unless a non-greedy
+    sampler is given; the sampled variant takes (logits, keys (B, 2))."""
+    if sampler is None or sampler.greedy:
+        return jax.jit(greedy_next), False
+    return jax.jit(
+        lambda logits, keys: sampler.sample(logits[:, -1, :], keys)), True
+
+
+def first_tokens(first_fn, sampler: Optional[Sampler], wants_keys: bool,
+                 logits, requests):
+    """Prefill logits -> first token per request, sampling with each
+    request's token-0 key when a sampler is active.
+
+    Single definition used by BOTH engines: the key derivation
+    (fold_in(request key, token index 0)) must stay bit-identical across
+    them for the differential token-equality guarantee to hold. Returns
+    (first tokens (B,) np.int32, request base keys (B, 2) np or None).
+    """
+    if not wants_keys:
+        return np.asarray(first_fn(logits)), None
+    rkeys = np.stack([np.asarray(sampler.request_key(r.rid))
+                      for r in requests])
+    toks = first_fn(logits, fold_keys(jnp.asarray(rkeys),
+                                      jnp.zeros(len(requests), jnp.int32)))
+    return np.asarray(toks), rkeys
 
 
 def synthetic_requests(n: int, vocab: int, *, prompt_len: int,
                        new_tokens: int, seed: int = 0,
-                       min_new_frac: float = 0.5):
+                       min_new_frac: float = 0.5, shared_prefix: int = 0):
     """Load-generator workload: mixed prompt lengths in
     [prompt_len/2, prompt_len] and budgets in [new_tokens*min_new_frac,
-    new_tokens]. Pure function of the arguments, so two engines handed the
-    same seed see byte-identical requests."""
+    new_tokens]. shared_prefix > 0 prepends that many COMMON tokens to
+    every prompt (the "same system prompt, different user turns" traffic
+    the paged pool deduplicates). Pure function of the arguments, so two
+    engines handed the same seed see byte-identical requests."""
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(5, vocab, size=shared_prefix).astype(np.int32)
     reqs = []
     for _ in range(n):
         plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
         new = int(rng.integers(max(1, int(new_tokens * min_new_frac)),
                                new_tokens + 1))
-        reqs.append(Request(
-            prompt=rng.integers(5, vocab, size=plen).astype(np.int32),
-            max_new_tokens=new))
+        tail = rng.integers(5, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=new))
     return reqs
 
 
@@ -138,34 +188,63 @@ def pad_prompts(prompts: List[np.ndarray], granularity: int = 1,
     return tokens, positions, lens
 
 
+def _slice_request(cache, g: int):
+    """Batch row g of a batched-prefill pooled cache as a batch-1 cache."""
+    return {"slots": jax.tree.map(lambda a: a[:, g:g + 1], cache["slots"]),
+            "index": cache["index"][g:g + 1]}
+
+
 class ContinuousEngine:
-    """Continuous-batching greedy decode over a fixed slot pool."""
+    """Continuous-batching decode over a fixed slot pool (paged by
+    default; `cache="dense"` for the PR 2 per-slot-rows baseline)."""
 
     def __init__(self, arch, params, *, max_batch: int = 8,
                  max_len: int = 256, policy=None, mesh=None,
-                 prefill_bucket: int = 1, on_step=None):
+                 prefill_bucket: int = 1, on_step=None,
+                 cache: str = "paged", block_size: int = 16,
+                 slots_budget: Optional[int] = None,
+                 share_prefix: bool = True, sampler=None):
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
+        if cache not in ("paged", "dense"):
+            raise ValueError(f"cache must be 'paged' or 'dense', got {cache}")
         self.arch, self.params = apply_serving_policy(arch, params, policy)
         self.max_batch = max_batch
         self.max_len = max_len
+        self.paged = cache == "paged"
+        self.sampler = Sampler.parse(sampler)
         # prefill lengths round up to bucket multiples: fewer distinct
         # prompt shapes -> fewer prefill compilations (the masked left-pad
-        # keeps bucketed prefill token-exact).
+        # keeps bucketed prefill token-exact) — and one admission pass
+        # prefills every same-bucket request in a single batched call.
         self.prefill_bucket = max(prefill_bucket,
                                   prompt_granularity(self.arch.cfg))
-        self.pool = CachePool(self.arch, max_batch, max_len)
+        if self.paged:
+            self.pool = PagedCachePool(
+                self.arch, max_batch, max_len, block_size=block_size,
+                slots_budget=slots_budget, share_prefix=share_prefix)
+            # slack rows so the padded prompt never reaches the request
+            # cache's last row, which stays pos=-1 (the insert's invalid
+            # filler — see PagedCachePool._src_rows)
+            prefill_len = max_len + max(block_size, self.prefill_bucket)
+        else:
+            self.pool = CachePool(self.arch, max_batch, max_len)
+            prefill_len = max_len
         self.scheduler = Scheduler(max_batch)
         self.on_step = on_step          # callback(dict) per decode step
-        self._step = build_serve_step(self.arch.decode_step, mesh)
-        self._prefill = build_prefill_fn(self.arch, max_len)
+        self._step = build_serve_step(self.arch.decode_step, mesh,
+                                      sampler=self.sampler)
+        self._prefill = build_prefill_fn(self.arch, prefill_len)
+        self._first, self._wants_keys = build_first_token_fn(self.sampler)
 
         self._tokens = np.zeros((max_batch, 1), np.int32)
-        self._positions = np.zeros((max_batch, 1), np.int32)
-        self._emitted = {}              # slot -> list of generated ids
+        self._positions = np.full((max_batch, 1), -1, np.int32)
+        self._req_keys = np.zeros((max_batch, 2), np.uint32)
+        self._emitted: Dict[int, list] = {}     # slot -> generated ids
         self._next_rid = 0
         self.steps_run = 0
         self.slot_steps = 0             # decode-step slots that were active
+        self.max_concurrent = 0         # peak simultaneously-active slots
 
     # ---------------- request lifecycle ----------------
 
@@ -187,41 +266,127 @@ class ContinuousEngine:
         req.generated = np.array(self._emitted.pop(slot), np.int32)
         req.trace.done_t = time.perf_counter()
         self.pool.evict(slot)
+        # position -1 marks the slot inactive: its (ignored) decode writes
+        # carry an invalid position, which in the paged pool is what keeps
+        # the shared null block masked.
+        self._positions[slot, 0] = -1
+        self._tokens[slot, 0] = 0
         return req
 
+    def _padded_len(self, req: Request) -> int:
+        plen = max(len(req.prompt), 1)
+        return -(-plen // self.prefill_bucket) * self.prefill_bucket
+
+    def _fits(self, req: Request, pending: dict):
+        """Admission gate for the paged pool: would this request's block
+        chain fit next to the admissions already planned this pass? The
+        count assumes no sharing with the in-flight plans (conservative:
+        their prefix blocks are not registered yet), so a True can never
+        turn into an allocator failure."""
+        if not self.paged:
+            return True, None
+        need = self.pool.blocks_needed(req.prompt, len(req.prompt),
+                                       self._padded_len(req),
+                                       req.max_new_tokens)
+        free = self.pool.free_blocks()
+        ok = all(n + pending.get(si, 0) <= free[si]
+                 for si, n in need.items())
+        return ok, need
+
     def _admit(self):
-        """Fill free slots from the queue: prefill each request alone and
-        insert its cache row. Runs between decode steps (and again right
-        away when a 1-token request completes at admission)."""
+        """Fill free slots from the queue: ONE batched prefill per padded-
+        length bucket covers every admitted request, then each cache row
+        is inserted into its slot. Runs between decode steps (and loops
+        when 1-token requests complete at admission, freeing slots)."""
         while True:
-            pairs = self.scheduler.assign()
+            pairs, pending = [], {}
+            while self.scheduler.free_slots and self.scheduler.queued:
+                req = self.scheduler.peek()
+                ok, need = self._fits(req, pending)
+                if not ok:
+                    break          # FIFO head-of-line: wait for evictions
+                for si, n in (need or {}).items():
+                    pending[si] = pending.get(si, 0) + n
+                pairs.append(self.scheduler.assign_one())
             if not pairs:
                 return
+            groups: Dict[int, list] = {}
             for slot, req in pairs:
+                groups.setdefault(self._padded_len(req), []).append(
+                    (slot, req))
+            failed = []
+            for padded, grp in groups.items():
                 tokens, positions, lens = pad_prompts(
-                    [req.prompt], self.prefill_bucket)
-                first, req_cache = self._prefill(
+                    [r.prompt for _, r in grp], self.prefill_bucket,
+                    pad_len=padded)
+                logits, batch_cache = self._prefill(
                     self.params, jnp.asarray(tokens), jnp.asarray(positions))
-                self.pool.insert(req_cache, slot)
-                t0 = int(np.asarray(first)[0])
-                req.trace.admit_t = time.perf_counter()
-                req.trace.mark_token(req.trace.admit_t)
-                self._emitted[slot] = [t0]
-                self._tokens[slot, 0] = t0
-                self._positions[slot, 0] = int(lens[0])
-                if len(self._emitted[slot]) >= req.max_new_tokens:
-                    self._finish(slot)   # 1-token request: done at prefill
+                first, rkeys = first_tokens(
+                    self._first, self.sampler, self._wants_keys, logits,
+                    [req for _, req in grp])
+                now = time.perf_counter()
+                for g, (slot, req) in enumerate(grp):
+                    req_cache = _slice_request(batch_cache, g)
+                    try:
+                        if self.paged:
+                            self.pool.insert(
+                                req_cache, slot, prompt=req.prompt,
+                                plen=len(req.prompt), padded_len=padded,
+                                budget=req.max_new_tokens)
+                        else:
+                            self.pool.insert(req_cache, slot)
+                    except NoBlocksError:
+                        # gate miscount cannot happen by construction, but
+                        # stay safe: put the request back, FIFO intact
+                        failed.append((slot, req))
+                        continue
+                    t0 = int(first[g])
+                    req.trace.admit_t = now
+                    req.trace.mark_token(now)
+                    self._emitted[slot] = [t0]
+                    self._tokens[slot, 0] = t0
+                    self._positions[slot, 0] = int(lens[g])
+                    if rkeys is not None:
+                        self._req_keys[slot] = rkeys[g]
+                    if len(self._emitted[slot]) >= req.max_new_tokens:
+                        self._finish(slot)   # 1-token request: done now
+            for slot, req in reversed(failed):
+                self.scheduler.requeue(slot)
+            if failed:
+                return
 
     def step(self) -> bool:
         """One engine iteration: admissions, then one pooled decode step.
         Returns False when no work remains."""
         self._admit()
         active = sorted(self.scheduler.active)
+        self.max_concurrent = max(self.max_concurrent, len(active))
         if not active:
+            if self.scheduler.queued:
+                req = self.scheduler.peek()
+                raise RuntimeError(
+                    f"request rid={req.rid} (prompt {len(req.prompt)}, "
+                    f"budget {req.max_new_tokens}) cannot fit an empty "
+                    f"paged arena: raise slots_budget or max_len")
             return self.scheduler.has_work
-        nxt, self.pool.cache = self._step(
-            self.params, jnp.asarray(self._tokens),
-            jnp.asarray(self._positions), self.pool.cache)
+        cache = self.pool.cache
+        if self.paged:
+            cache = {**cache, "tables": self.pool.device_tables()}
+        args = (self.params, jnp.asarray(self._tokens),
+                jnp.asarray(self._positions), cache)
+        if self._wants_keys:
+            tvec = np.zeros(self.max_batch, np.int32)
+            for slot in active:
+                tvec[slot] = len(self._emitted[slot])
+            args += (fold_keys(jnp.asarray(self._req_keys),
+                               jnp.asarray(tvec)),)
+        nxt, new_cache = self._step(*args)
+        self.pool.cache = {"slots": new_cache["slots"],
+                           "index": new_cache["index"]}
+        if self.paged:
+            # reuse the pass-through table outputs next step: zero table
+            # uploads while no admission/eviction churns the block maps
+            self.pool.put_device_tables(new_cache["tables"])
         nxt = np.asarray(nxt)            # host sync: tokens feed next step
         now = time.perf_counter()
         self.steps_run += 1
@@ -259,26 +424,34 @@ class ContinuousEngine:
         denom = max(1, self.steps_run * self.max_batch)
         stats["slot_utilization"] = self.slot_steps / denom
         stats["decode_steps"] = self.steps_run
+        stats["max_concurrent"] = self.max_concurrent
+        if self.paged:
+            stats["shared_block_hits"] = self.pool.shared_hits
         return stats
 
 
 class ServeEngine:
-    """Static-batch baseline: one padded prefill, lockstep greedy decode.
+    """Static-batch baseline: one padded prefill, lockstep decode.
 
     Kept as the comparison point for benchmarks/serving_load.py and for
     callers that want the simplest possible batch API. Shares the decode
-    step, precision policy and exact left-pad masking with
-    ContinuousEngine, so the two produce identical tokens per request."""
+    step, precision policy, sampler key scheme and exact left-pad masking
+    with ContinuousEngine, so the engines produce identical tokens per
+    request."""
 
     def __init__(self, arch, params, *, max_len: int = 512, policy=None,
-                 mesh=None):
+                 mesh=None, sampler=None):
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
         self.arch, self.params = apply_serving_policy(arch, params, policy)
         self.max_len = max_len
         self.granularity = prompt_granularity(self.arch.cfg)
-        self._step = build_serve_step(self.arch.decode_step, mesh)
+        self.sampler = Sampler.parse(sampler)
+        self._step = build_serve_step(self.arch.decode_step, mesh,
+                                      sampler=self.sampler)
         self._prefill = build_prefill_fn(self.arch, max_len)
+        self._first, self._wants_keys = build_first_token_fn(self.sampler)
+        self._next_rid = 0
 
     def run_batch(self, requests: List[Request]) -> List[Request]:
         assert requests
@@ -297,22 +470,33 @@ class ServeEngine:
             # from the static/continuous comparison.
             if r.trace.submit_t == 0.0:
                 r.trace.mark_submit()
-        tok, cache = self._prefill(self.params, jnp.asarray(tokens),
-                                   jnp.asarray(positions))
+            if r.rid is None:
+                r.rid = self._next_rid
+                self._next_rid += 1
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                      jnp.asarray(positions))
+        tok, rkeys = first_tokens(self._first, self.sampler,
+                                  self._wants_keys, logits, requests)
+        if rkeys is not None:
+            rkeys = jnp.asarray(rkeys)
         out = [np.asarray(tok)]
         now = time.perf_counter()
         for r in requests:
             r.trace.admit_t = now
             r.trace.mark_token(now)
         pos_next = lens.copy()
-        for _ in range(steps - 1):
-            tok, cache = self._step(self.params, tok[:, None],
-                                    jnp.asarray(pos_next[:, None]), cache)
+        for i in range(steps - 1):
+            args = (self.params, tok[:, None],
+                    jnp.asarray(pos_next[:, None]), cache)
+            if self._wants_keys:
+                args += (fold_keys(rkeys, jnp.full(len(requests), i + 1,
+                                                   jnp.int32)),)
+            tok, cache = self._step(*args)
             tok_h = np.asarray(tok)
             now = time.perf_counter()
             out.append(tok_h)
             pos_next += 1
-            for i, r in enumerate(requests):
+            for r in requests:
                 if len(r.trace.token_ts) < r.max_new_tokens:
                     r.trace.mark_token(now)
         gen = np.stack(out, axis=1)      # (B, steps)

@@ -1,0 +1,104 @@
+"""Token sampling for the serving decode step.
+
+One frozen `Sampler` config is baked into the jitted decode step as a
+static closure (it never changes for the engine's lifetime); the only
+per-step input is a `(B, 2)` uint32 array of per-slot PRNG keys. The
+engines derive those keys deterministically —
+
+    request key   = fold_in(PRNGKey(sampler.seed), request.rid)
+    token-t key   = fold_in(request key, t)
+
+— so the sampled stream is a pure function of (seed, rid, token index):
+independent of slot placement, admission order, batched-vs-single
+prefill, and of whichever other requests happen to share the batch.
+That is what makes the continuous, paged and static engines
+token-identical under sampling, and two runs of the same workload
+byte-reproducible (asserted in tests/test_sampling.py).
+
+`temperature == 0` short-circuits to argmax — bit-exact greedy, the same
+computation `greedy_next` performs — so `--sampler temperature=0`
+degrades to the PR 2 greedy path by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """temperature / top-k / top-p sampling with per-slot PRNG keys."""
+    temperature: float = 1.0
+    top_k: int = 0          # 0 disables
+    top_p: float = 1.0      # 1.0 disables
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    @classmethod
+    def parse(cls, spec) -> "Sampler":
+        """"greedy" | "k=v,..." with keys temperature/top_k/top_p/seed,
+        e.g. --sampler temperature=0.8,top_k=40,top_p=0.95,seed=1."""
+        if spec is None or isinstance(spec, Sampler):
+            return spec
+        if spec == "greedy":
+            return cls(temperature=0.0)
+        kwargs = {}
+        for part in spec.split(","):
+            k, _, v = part.partition("=")
+            if not _:
+                raise ValueError(f"bad sampler spec item {part!r}")
+            k = k.strip()
+            if k not in ("temperature", "top_k", "top_p", "seed"):
+                raise ValueError(f"unknown sampler key {k!r}")
+            kwargs[k] = int(v) if k in ("top_k", "seed") else float(v)
+        return cls(**kwargs)
+
+    def sample(self, logits, keys):
+        """logits (B, V) fp32, keys (B, 2) uint32 -> (B,) int32 tokens.
+
+        Masking happens in logit space before one categorical draw per
+        row, so a token's probability under top-k/top-p is exactly the
+        renormalized softmax over the kept set.
+        """
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t = logits / jnp.float32(self.temperature)
+        top_k = min(self.top_k, logits.shape[-1])  # k >= vocab: keep all
+        if top_k:
+            kth = jnp.sort(t, axis=-1)[..., -top_k, None]
+            t = jnp.where(t < kth, -jnp.inf, t)
+        if self.top_p < 1.0:
+            srt = jnp.sort(t, axis=-1)[..., ::-1]          # descending
+            probs = jax.nn.softmax(srt, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            # keep the smallest prefix whose mass reaches top_p (the
+            # first token always survives: cum - probs is 0 there)
+            keep = (cum - probs) < self.top_p
+            thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                          keepdims=True)
+            t = jnp.where(t < thr, -jnp.inf, t)
+        draw = jax.vmap(lambda k, row: jax.random.categorical(k, row))
+        return draw(keys, t).astype(jnp.int32)
+
+    # ---------------- key derivation (host side, both engines) ----------
+
+    def request_key(self, rid: int):
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), rid)
+
+
+def fold_keys(request_keys, token_indices):
+    """(B, 2) request keys + (B,) token indices -> (B, 2) step keys."""
+    return jax.vmap(jax.random.fold_in)(request_keys, token_indices)

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import collections
 import itertools
-from typing import Any, Deque, Dict, List, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 
 class SchedulerError(RuntimeError):
@@ -56,18 +56,44 @@ class Scheduler:
 
     # ---------------- slot side ----------------
 
+    def peek(self):
+        """Head of the admission queue (None when empty) — lets the
+        engine gate admission on cache-pool capacity without breaking
+        FIFO order."""
+        return self._queue[0] if self._queue else None
+
+    def assign_one(self) -> Optional[Tuple[int, Any]]:
+        """Bind the queue head to one free slot, or None if either side
+        is empty."""
+        if not (self._free and self._queue):
+            return None
+        slot = self._free.popleft()
+        if slot in self.active:  # corrupted free list — refuse to reuse
+            raise SchedulerError(f"slot {slot} free but active")
+        req = self._queue.popleft()
+        self.active[slot] = req
+        return slot, req
+
     def assign(self) -> List[Tuple[int, Any]]:
         """Bind queued requests to free slots (FIFO). Returns the new
         (slot, request) pairs; caller prefills and inserts their caches."""
         pairs: List[Tuple[int, Any]] = []
-        while self._free and self._queue:
-            slot = self._free.popleft()
-            if slot in self.active:  # corrupted free list — refuse to reuse
-                raise SchedulerError(f"slot {slot} free but active")
-            req = self._queue.popleft()
-            self.active[slot] = req
-            pairs.append((slot, req))
-        return pairs
+        while True:
+            pair = self.assign_one()
+            if pair is None:
+                return pairs
+            pairs.append(pair)
+
+    def requeue(self, slot: int):
+        """Undo an assignment (admission failed downstream, e.g. the
+        paged pool ran out of blocks): the request returns to the FRONT
+        of the queue — FIFO order is preserved — and the slot frees."""
+        if slot not in self.active:
+            raise SchedulerError(f"requeue() on inactive slot {slot}")
+        req = self.active.pop(slot)
+        self._free.append(slot)
+        self._queue.appendleft(req)
+        return req
 
     def complete(self, slot: int):
         """Release a slot whose request finished; returns the request."""

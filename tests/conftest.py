@@ -11,3 +11,40 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# shared serving-test helpers (tests/test_serving_engine.py,
+# test_paged_cache.py, test_sampling.py): one reduced-arch cache per run and
+# ONE request-generation convention — the differential claims across files
+# (static == dense == paged, sampled == greedy at temp 0, ...) are only
+# comparable because every file builds byte-identical workloads.
+# ---------------------------------------------------------------------------
+
+_arch_cache = {}
+
+
+def setup_serving_arch(name):
+    """(reduced arch, params) memoized across the whole test session."""
+    if name not in _arch_cache:
+        import jax
+        from repro.configs import reduced_arch
+        arch = reduced_arch(name)
+        _arch_cache[name] = (arch, arch.init(jax.random.PRNGKey(0)))
+    return _arch_cache[name]
+
+
+def make_serving_requests(arch, spec, seed=1, prefix=0):
+    """spec: list of (prompt_len, max_new_tokens). Prompts are a pure
+    function of (seed, index) so a request run solo is byte-identical to
+    the same request inside any batch; prefix > 0 prepends that many
+    COMMON tokens (the shared system prompt the paged pool dedups)."""
+    from repro.serving import Request
+    rng = np.random.default_rng([seed, 999])
+    common = rng.integers(5, arch.cfg.vocab, size=prefix).astype(np.int32)
+    return [Request(prompt=np.concatenate([
+                        common,
+                        np.random.default_rng([seed, i]).integers(
+                            5, arch.cfg.vocab, size=n).astype(np.int32)]),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(spec)]

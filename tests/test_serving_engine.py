@@ -2,10 +2,12 @@
 
 The load-bearing claims, each asserted here:
 
-  * the continuous engine emits token-identical greedy output to the
-    static lockstep baseline for the same request set — under fp32 and
-    bf16 policies, across the three decoder families (dense+sliding
-    window, pure-SSM, MoE);
+  * the continuous engine — PAGED pool (the default) and the dense PR 2
+    pool alike — emits token-identical greedy output to the static
+    lockstep baseline for the same request set, under fp32 and bf16
+    policies, across the three decoder families (dense+sliding window,
+    pure-SSM, MoE), including requests that share a prompt prefix (whose
+    KV blocks the paged pool stores once);
   * slots are safely reused after eviction (later occupants see none of
     the previous request's KV/SSM state);
   * requests admitted mid-stream (while other slots keep decoding)
@@ -17,7 +19,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs import reduced_arch
+from conftest import make_serving_requests as make_requests
+from conftest import setup_serving_arch as setup_arch
 from repro.serving import (CachePool, ContinuousEngine, Request, Scheduler,
                            ServeEngine, pad_prompts, throughput_probe)
 
@@ -26,25 +29,6 @@ pytestmark = pytest.mark.serving
 # dense + sliding-window / pure-SSM / mixture-of-experts
 ARCHS = ["gemma2-2b", "mamba2-130m", "granite-moe-3b-a800m"]
 MAX_LEN = 48
-
-_cache = {}
-
-
-def setup_arch(name):
-    if name not in _cache:
-        arch = reduced_arch(name)
-        _cache[name] = (arch, arch.init(jax.random.PRNGKey(0)))
-    return _cache[name]
-
-
-def make_requests(arch, spec, seed=1):
-    """spec: list of (prompt_len, max_new_tokens). Prompts are a pure
-    function of (seed, index) so a request run solo is byte-identical to
-    the same request inside any batch."""
-    return [Request(prompt=np.random.default_rng([seed, i]).integers(
-                        5, arch.cfg.vocab, size=n).astype(np.int32),
-                    max_new_tokens=m)
-            for i, (n, m) in enumerate(spec)]
 
 
 SPEC = [(7, 4), (11, 6), (5, 1), (9, 3), (11, 4)]
@@ -59,6 +43,28 @@ def _run_both(name, policy):
     ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
                      policy=policy).run_batch(b)
     return a, b
+
+
+def _run_trio(name, policy, prefix=0):
+    """static / dense-pool / paged-pool over the same workload. prefix
+    puts shared-prefix blocks on the paged decode path."""
+    arch, params = setup_arch(name)
+    outs = []
+    for build in (
+            lambda: ServeEngine(arch, params, max_len=MAX_LEN,
+                                policy=policy),
+            lambda: ContinuousEngine(arch, params, max_batch=2,
+                                     max_len=MAX_LEN, policy=policy,
+                                     cache="dense", prefill_bucket=8),
+            lambda: ContinuousEngine(arch, params, max_batch=3,
+                                     max_len=MAX_LEN, policy=policy,
+                                     cache="paged", block_size=8,
+                                     prefill_bucket=8)):
+        reqs = make_requests(arch, SPEC, prefix=prefix)
+        engine = build()
+        engine.run_batch(reqs)
+        outs.append((engine, reqs))
+    return outs
 
 
 @pytest.mark.parametrize("name", ARCHS)
@@ -77,6 +83,38 @@ def test_continuous_matches_static_bf16(name):
     a, b = _run_both(name, "bf16")
     for ra, rb in zip(a, b):
         np.testing.assert_array_equal(ra.generated, rb.generated)
+
+
+@pytest.mark.paged
+@pytest.mark.parametrize("name", ARCHS)
+def test_paged_matches_dense_and_static_shared_prefix_fp32(name):
+    """The differential harness of this PR: the paged engine is token-
+    identical to the dense PR 2 engine and the static baseline, with
+    every request carrying a 16-token shared prefix whose KV the paged
+    pool stores once (shared_hits > 0 on attention archs — pure-SSM
+    state is slot-resident, nothing to share)."""
+    (s_eng, a), (d_eng, b), (p_eng, c) = _run_trio(name, None, prefix=16)
+    for ra, rb, rc in zip(a, b, c):
+        assert ra.generated.shape == (ra.max_new_tokens,)
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+        np.testing.assert_array_equal(ra.generated, rc.generated)
+    if p_eng.pool.maps:
+        assert p_eng.pool.shared_hits > 0
+    p_eng.pool.check_invariants()
+    assert all(m.alloc.n_live == 0 for m in p_eng.pool.maps.values())
+
+
+@pytest.mark.slow
+@pytest.mark.paged
+@pytest.mark.parametrize("name", ARCHS)
+def test_paged_matches_dense_and_static_shared_prefix_bf16(name):
+    """Same trio under the bf16 policy: the cast must not perturb block
+    contents differently across pool layouts."""
+    (_, a), (_, b), (p_eng, c) = _run_trio(name, "bf16", prefix=16)
+    for ra, rb, rc in zip(a, b, c):
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+        np.testing.assert_array_equal(ra.generated, rc.generated)
+    p_eng.pool.check_invariants()
 
 
 def test_bf16_policy_casts_params_and_matches_static():

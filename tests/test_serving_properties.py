@@ -1,8 +1,9 @@
-"""Hypothesis properties: scheduler invariants + loss-scale state machine.
+"""Hypothesis properties: scheduler, block allocator, loss-scale machine.
 
 Skips cleanly when the optional `hypothesis` extra is absent (see
-requirements.txt) — deterministic versions of the core scheduler checks
-live in tests/test_serving_engine.py so tier-1 still covers them.
+requirements.txt) — deterministic versions of the core scheduler and
+allocator checks live in tests/test_serving_engine.py and
+tests/test_paged_cache.py so tier-1 still covers them.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -14,6 +15,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.precision.loss_scale import (DynamicLossScale, StaticLossScale,
                                         unscale_grads)
+from repro.serving.block_allocator import BlockTableMap, NoBlocksError
 from repro.serving.scheduler import Scheduler, SchedulerError
 
 
@@ -102,6 +104,69 @@ def test_engine_loop_emits_exactly_max_new_tokens(n_slots, budgets):
                 sched.complete(slot)
         sched.check_invariants()
     assert counts == {i: b for i, (b) in enumerate(budgets)}
+
+
+# --------------------------------------------------------------------------
+# paged-cache block allocator: refcounts, sharing, no leaks
+# --------------------------------------------------------------------------
+
+@pytest.mark.paged
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(),
+       max_batch=st.integers(1, 4),
+       max_blocks=st.integers(1, 5),
+       extra_blocks=st.integers(0, 12))
+def test_block_table_map_random_insert_evict_never_leaks(data, max_batch,
+                                                         max_blocks,
+                                                         extra_blocks):
+    """Random interleavings of insert (tiny token alphabet, so prefix-
+    registry hits are common) and evict over a small arena keep every
+    allocator invariant: refcounts never negative and always equal to
+    the table references, a block never sits in two tables unless it is
+    a registered shared block, free + live blocks partition the arena,
+    and failed inserts roll back completely. Draining evicts returns
+    every block: nothing leaks."""
+    bs = 4
+    ring = max_blocks * bs
+    n_blocks = 1 + max_batch + extra_blocks     # null + a scarce arena
+    m = BlockTableMap(max_batch, ring, bs, n_blocks)
+    occupied = set()
+    for _ in range(data.draw(st.integers(0, 25), label="n_ops")):
+        if occupied and data.draw(st.booleans(), label="evict?"):
+            slot = data.draw(st.sampled_from(sorted(occupied)),
+                             label="evict_slot")
+            freed = m.evict(slot)
+            occupied.discard(slot)
+            assert all(m.alloc.ref[b] == 0 for b in freed)
+        else:
+            free = sorted(set(range(max_batch)) - occupied)
+            if not free:
+                continue
+            slot = data.draw(st.sampled_from(free), label="slot")
+            plen = data.draw(st.integers(1, 2 * ring), label="plen")
+            padded = -(-plen // bs) * bs
+            budget = data.draw(st.integers(1, ring), label="budget")
+            prompt = tuple(data.draw(
+                st.lists(st.integers(1, 2), min_size=plen, max_size=plen),
+                label="prompt"))
+            n_free_before = m.alloc.n_free
+            need = m.blocks_needed(prompt, plen, padded, budget)
+            try:
+                placed = m.insert(slot, prompt, plen, padded, budget)
+            except NoBlocksError:
+                assert need > n_free_before      # gate would have said no
+                assert m.alloc.n_free == n_free_before   # full rollback
+                assert not m.table[slot].any()
+            else:
+                occupied.add(slot)
+                assert need <= n_free_before
+                assert sum(not p.shared for p in placed) == need
+        m.check_invariants()
+    for slot in sorted(occupied):
+        m.evict(slot)
+    m.check_invariants()
+    assert m.alloc.n_free == n_blocks - 1 and m.alloc.n_live == 0
+    assert m.n_shared == 0
 
 
 # --------------------------------------------------------------------------
