@@ -5,6 +5,7 @@
 #
 #   scripts/run_tests.sh --all      # include the slow serving matrices
 #   scripts/run_tests.sh --paged    # only the paged-cache/allocator suite
+#   scripts/run_tests.sh --docs     # smoke-check docs/README code fences
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
 # tests/test_properties.py and tests/test_serving_properties.py, which
@@ -20,5 +21,9 @@ fi
 if [[ "${1:-}" == "--paged" ]]; then
   shift
   exec python -m pytest -x -q -m "paged" "$@"
+fi
+if [[ "${1:-}" == "--docs" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_docs.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,185 @@
+"""Pallas TPU kernel: fused paged-attention for single-token decode.
+
+The serving decode step stores attention KV in block ARENAS of
+(n_blocks, block_size, n_kv, head_dim) addressed through per-slot block
+TABLES (serving/cache_pool.PagedCachePool). The XLA path lowers the
+block-table gather as `arena[table]`, which materializes a dense
+(B, ring_len, n_kv, head_dim) K **and** V copy in HBM every layer every
+step — read arena + write dense + read dense is ~3x the unavoidable K/V
+traffic, and decode is memory-bound (Pati et al. 2021), so that copy IS
+the step time at scale.
+
+This kernel removes the materialization: the block table rides in as a
+scalar-prefetch operand, the K/V/pos BlockSpec index maps select arena
+block `table[b, j]` for grid step (b, j), and the pipeline emitter
+streams exactly the referenced blocks HBM -> VMEM (double-buffered)
+while the kernel body folds each block into an online-softmax
+accumulator. Nothing of size (B, ring_len, ...) ever exists.
+
+Grid: (B, max_blocks), sequential on TPU — the per-slot running state
+(m, l, acc) lives in VMEM scratch, initialised at j == 0 and written to
+the output block at j == max_blocks - 1 (the same revisited-output
+idiom as the lans reduction kernels).
+
+Masking happens ON-CHIP from the streamed position block: position -1
+rows (the reserved null block, unwritten ring rows, evicted slots) drop
+out of the softmax exactly — `exp(NEG_INF - m) == 0` — and causality /
+sliding windows test the block positions against the slot's query
+position, also a scalar-prefetch operand. A slot with no valid key at
+all (an inactive decode slot: every table entry is the null block)
+returns exactly 0 rather than NaN.
+
+Numerics: all arithmetic is fp32 in VREGs regardless of the arena
+storage dtype, mirroring the XLA decode branch (which accumulates its
+logit and PV contractions in fp32 via preferred_element_type) — the two
+paths agree to fp32 summation-order tolerance, which is what keeps
+greedy decode token-identical between kernel="xla" and kernel="paged"
+(tests/test_paged_cache.py runs both engines differentially).
+
+`interpret` defaults by backend: True off-TPU (this CPU container),
+False on real TPU. kernels/ref.py:paged_attention_ref is the dense
+pure-jnp oracle tests gate against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import NEG_INF
+
+_VALID_FLOOR = -1e37     # any real logit is far above this
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _paged_attn_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref,
+                       out_ref, m_ref, l_ref, acc_ref, *,
+                       scale, causal, window, softcap, n_kv):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # (h, hd)
+    k = k_ref[0].astype(jnp.float32)           # (bs, n_kv, hd)
+    pos = pos_ref[...]                         # (1, bs) int32
+    h, hd = q.shape
+    g = h // n_kv
+
+    # GQA without materializing repeated heads: head r = kv*g + i reads
+    # kv head r // g — the same layout jnp.repeat(k, g, axis=2) yields.
+    logits = jax.lax.dot_general(
+        q.reshape(n_kv, g, hd), k,
+        dimension_numbers=(((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,    # (n_kv, g, bs)
+    ).reshape(h, -1) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    ok = pos >= 0                              # (1, bs): null/unwritten rows
+    if causal:
+        ok = ok & (pos <= qpos_ref[b])
+    if window is not None:
+        ok = ok & ((qpos_ref[b] - pos) < window)
+    logits = jnp.where(ok, logits, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]                  # (h,)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    # A fully-masked prefix keeps m at NEG_INF; shift by 0 there so the
+    # masked exp still underflows to exactly 0 instead of exp(0) == 1.
+    m_safe = jnp.where(m_new > _VALID_FLOOR, m_new, 0.0)
+    alpha = jnp.exp(m_prev - m_safe)           # 0 when m_prev is NEG_INF
+    e = jnp.exp(logits - m_safe[:, None])      # masked entries -> exactly 0
+
+    v = v_ref[0].astype(jnp.float32)           # (bs, n_kv, hd)
+    pv = jax.lax.dot_general(
+        e.reshape(n_kv, g, -1), v,
+        dimension_numbers=(((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,    # (n_kv, g, hd)
+    ).reshape(h, hd)
+
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = (alpha * l_ref[...][:, 0] + jnp.sum(e, axis=1))[:, None]
+    acc_ref[...] = alpha[:, None] * acc_ref[...] + pv
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        lsum = l_ref[...][:, 0]
+        live = lsum > 0.0                      # False only for dead slots
+        out = acc_ref[...] / jnp.where(live, lsum, 1.0)[:, None]
+        out_ref[0] = jnp.where(live[:, None], out, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "interpret"))
+def paged_attention(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
+                    scale, causal=True, window=None, softcap=None,
+                    interpret=None):
+    """Fused paged decode attention: out (B, h, head_dim) fp32.
+
+    Args:
+      q: (B, h, head_dim) query for the single decode token, any float
+        dtype (upcast to fp32 on-chip).
+      k_arena / v_arena: (n_blocks, block_size, n_kv, head_dim) block
+        arenas, POST-scatter (the decode token's K/V already written).
+      pos_arena: (n_blocks, block_size) int32 absolute key positions;
+        -1 marks invalid rows (null block, unwritten ring slots) and is
+        masked unconditionally.
+      tables: (B, max_blocks) int32 arena indices, 0 = the null block.
+      q_pos: (B,) int32 absolute query positions (for causal / window).
+      scale / causal / window / softcap: static attention config,
+        matching models/attention.AttnConfig semantics.
+      interpret: Pallas interpret mode; None = auto (True off-TPU).
+
+    Slots whose table references no valid key (inactive decode slots)
+    return exactly 0 — see kernels/ref.py:paged_attention_ref, the
+    oracle that pins this contract.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B, h, hd = q.shape
+    _, bs, n_kv, _ = k_arena.shape
+    nb = tables.shape[1]
+    if h % n_kv:
+        raise ValueError(f"n_heads {h} not a multiple of n_kv {n_kv}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # tables, q_pos
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda b, j, tbl, qp: (b, 0, 0)),
+            pl.BlockSpec((1, bs, n_kv, hd),
+                         lambda b, j, tbl, qp: (tbl[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, n_kv, hd),
+                         lambda b, j, tbl, qp: (tbl[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs), lambda b, j, tbl, qp: (tbl[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda b, j, tbl, qp: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),   # running max m
+            pltpu.VMEM((h, 1), jnp.float32),   # running normalizer l
+            pltpu.VMEM((h, hd), jnp.float32),  # unnormalized output acc
+        ],
+    )
+    kern = functools.partial(
+        _paged_attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, hd), jnp.float32),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), q_pos.astype(jnp.int32),
+      q, k_arena, v_arena, pos_arena)

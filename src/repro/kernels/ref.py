@@ -1,14 +1,19 @@
-"""Pure-jnp oracles for the fused optimizer kernels.
+"""Pure-jnp oracles for the Pallas kernels.
 
 These are the ground truth the Pallas kernels are validated against
 (tests/test_kernels.py sweeps shapes & dtypes with assert_allclose).
-Single-tensor, fp32-internal, mirrors repro.core.optim exactly.
+The optimizer oracles are single-tensor, fp32-internal, and mirror
+repro.core.optim exactly; `paged_attention_ref` mirrors the XLA
+dense-gather decode branch of models/attention.py.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
+
+from repro.kernels import NEG_INF
 
 
 class StepOut(NamedTuple):
@@ -87,3 +92,46 @@ def lamb_step_ref(
 def sq_norm_ref(x) -> jnp.ndarray:
     """Sum of squares (fp32) — oracle for the reduction kernel."""
     return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def paged_attention_ref(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
+                        scale, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """Dense-gather oracle for the paged-attention decode kernel.
+
+    Materializes `arena[tables]` into the (B, ring_len, ...) copy the
+    XLA path pays for, then runs masked softmax attention with the same
+    fp32 accumulation as models/attention.py's kernel="xla" decode
+    branch. Shapes/semantics as paged_attention_kernel.paged_attention.
+
+    Dead slots (no valid key: all positions -1) return exactly 0 — a
+    contract of the KERNEL/ORACLE pair only. The XLA branch instead
+    yields the uniform-softmax mean of the gathered V for such rows;
+    the engine discards dead-slot outputs either way, which is why the
+    two implementations still emit identical tokens.
+    """
+    B, h, hd = q.shape
+    n_kv = k_arena.shape[2]
+    ring = tables.shape[1] * k_arena.shape[1]
+    k = k_arena[tables].reshape(B, ring, n_kv, hd)
+    v = v_arena[tables].reshape(B, ring, n_kv, hd)
+    kp = pos_arena[tables].reshape(B, ring)
+    if n_kv != h:
+        k = jnp.repeat(k, h // n_kv, axis=2)
+        v = jnp.repeat(v, h // n_kv, axis=2)
+    logits = jnp.einsum("bhd,bkhd->bhk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    ok = kp >= 0
+    if causal:
+        ok = ok & (kp <= q_pos[:, None])
+    if window is not None:
+        ok = ok & ((q_pos[:, None] - kp) < window)
+    logits = jnp.where(ok[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, v,
+                     preferred_element_type=jnp.float32)
+    live = jnp.any(ok, axis=1)                 # (B,): slot has a valid key
+    return jnp.where(live[:, None, None], out, 0.0)

@@ -44,8 +44,17 @@ def make_tx(arch):
 
 
 def lower_one(arch_name: str, shape_name: str, multi_pod: bool,
-              microbatches: int = 1) -> dict:
+              microbatches: int = 1, attn_kernel: str = "xla") -> dict:
     arch = get_arch(arch_name)
+    if attn_kernel != "xla" and arch.kind == "decoder":
+        # Lower the decode shapes with the fused Pallas paged-attention
+        # step instead of the XLA gather. Off-TPU this lowers the
+        # interpret-mode kernel (practical only for reduced shapes — the
+        # interpreter unrolls the (B, blocks) grid); on TPU it lowers
+        # the compiled Mosaic kernel the production mesh would run.
+        import dataclasses as _dc
+        arch = _dc.replace(arch, cfg=_dc.replace(arch.cfg,
+                                                 attn_kernel=attn_kernel))
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
@@ -176,6 +185,7 @@ def lower_one(arch_name: str, shape_name: str, multi_pod: bool,
                                   params_like=params_abs,
                                   cache_like=cache_abs)
         record["cache"] = "paged"
+        record["attn_kernel"] = attn_kernel
         with mesh:
             lowered = jitted.lower(params_abs, tok_abs, pos_abs, cache_abs)
             compiled = lowered.compile()
@@ -243,6 +253,9 @@ def main():
                     help="arch id or 'all' (the 10 assigned)")
     ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
     ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--attn-kernel", default="xla", choices=["xla", "paged"],
+                    help="decode shapes: lower the XLA arena gather or the "
+                         "fused Pallas paged-attention step (see lower_one)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -257,7 +270,8 @@ def main():
             for multi_pod in meshes:
                 tag = f"{arch_name}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
                 try:
-                    rec = lower_one(arch_name, shape_name, multi_pod)
+                    rec = lower_one(arch_name, shape_name, multi_pod,
+                                    attn_kernel=args.attn_kernel)
                 except Exception as e:
                     rec = {"arch": arch_name, "shape": shape_name,
                            "mesh": "pod2" if multi_pod else "pod1",

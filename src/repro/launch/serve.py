@@ -61,6 +61,13 @@ def main():
                     help="size the paged arena for this many dense-"
                          "equivalent slots (0: max-batch); with shared "
                          "prefixes max-batch can exceed it")
+    ap.add_argument("--attn-kernel", choices=["xla", "paged"], default=None,
+                    help="paged decode attention: 'xla' gathers the block "
+                         "arenas into a dense (B, ring) K/V copy per step; "
+                         "'paged' streams blocks inside the fused Pallas "
+                         "kernel (token-identical; interpret mode off-TPU; "
+                         "requires --cache paged). Default: adopt the "
+                         "arch config (usually 'xla')")
     ap.add_argument("--sampler", default="greedy",
                     help="'greedy' or 'temperature=0.8,top_k=40,"
                          "top_p=0.95,seed=0' (temperature=0 == greedy)")
@@ -103,10 +110,16 @@ def main():
             policy=args.precision, prefill_bucket=args.prefill_bucket,
             on_step=on_step, cache=args.cache, block_size=args.block_size,
             slots_budget=args.slots_budget or None,
-            sampler=args.sampler)
+            sampler=args.sampler, attn_kernel=args.attn_kernel)
         engine.run(reqs)
         stats = engine.report(time.perf_counter() - t0)
+        attn_kernel = (engine.pool.attn_kernel
+                       if args.cache == "paged" else "xla")
     else:
+        if args.attn_kernel == "paged":
+            raise SystemExit("--attn-kernel paged needs the continuous "
+                             "engine's paged cache (--engine continuous)")
+        attn_kernel = "xla"
         engine = ServeEngine(arch, params, max_len=max_len,
                              policy=args.precision, sampler=args.sampler)
         from repro.serving.metrics import aggregate
@@ -121,6 +134,7 @@ def main():
     stats["engine"] = args.engine
     stats["precision"] = args.precision
     stats["cache"] = args.cache if args.engine == "continuous" else "static"
+    stats["attn_kernel"] = attn_kernel
     stats["sampler"] = args.sampler
     log.log(-1, **{k: v for k, v in stats.items()
                    if isinstance(v, (int, float))})

@@ -21,11 +21,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import NEG_INF  # single-sourced masked-logit value
 from repro.models.common import (apply_rope, dense_apply, dense_init,
                                  maybe_constrain, rmsnorm_apply,
                                  rmsnorm_init, softcap)
-
-NEG_INF = -2.3819763e38  # large negative for masked logits (matches XLA practice)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +46,11 @@ class AttnConfig:
     # XLA-level flash-attention analogue that makes prefill_32k fit).
     q_chunk_threshold: int = 4096
     q_block: int = 1024
+    # Paged decode implementation: "xla" gathers arena[table] into a dense
+    # (B, ring_len) K/V copy; "paged" streams the table's blocks from HBM
+    # inside the fused Pallas kernel (kernels/paged_attention_kernel.py).
+    # Only the paged serving branch reads this; token output is identical.
+    decode_kernel: str = "xla"
 
 
 def attn_init(rng, cfg: AttnConfig, *, cross: bool = False, dtype=jnp.float32):
@@ -166,11 +170,30 @@ def attn_apply(
         pos_arena = cache["pos"].at[blk, off].set(q_pos[:, 0])
         new_cache = {"k": k_arena, "v": v_arena, "pos": pos_arena,
                      "index": idx + 1}
+        q = maybe_constrain(q, "data", None, None, "model")
+        if cfg.decode_kernel == "paged":
+            # Fused Pallas path: the block table rides into the kernel as
+            # a scalar-prefetch operand and K/V blocks stream HBM->VMEM
+            # directly — no (B, ring_len, kv, hd) materialization. Token
+            # output matches the XLA gather below to fp32 summation-order
+            # tolerance (both accumulate in fp32; see kernel module doc).
+            if kv_valid_len is not None:
+                raise NotImplementedError(
+                    "kv_valid_len is unsupported on the paged kernel path")
+            from repro.kernels.paged_attention_kernel import paged_attention
+            out = paged_attention(
+                q[:, 0], k_arena, v_arena, pos_arena, tbl, q_pos[:, 0],
+                scale=scale, causal=cfg.causal, window=cfg.sliding_window,
+                softcap=cfg.logit_softcap).astype(compute_dtype)
+            out = maybe_constrain(out[:, None], "data", None, None, "model")
+            out = out.reshape(B, S, h * hd)
+            return dense_apply(p["wo"], out, compute_dtype), new_cache
+        if cfg.decode_kernel != "xla":
+            raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
         # block-table gather: (B, max_blocks, bsz, ...) -> (B, ring_len, ...)
         k = k_arena[tbl].reshape(B, ring_len, kv, hd).astype(compute_dtype)
         v = v_arena[tbl].reshape(B, ring_len, kv, hd).astype(compute_dtype)
         k_pos = pos_arena[tbl].reshape(B, ring_len)
-        q = maybe_constrain(q, "data", None, None, "model")
     elif cache is not None and S > 1 and S >= cache["k"].shape[1]:
         attend_cached = False  # attend in-flight; cache write is tail-only
         # Prefill longer than a ring cache (sliding-window layer): attend
@@ -252,17 +275,31 @@ def attn_apply(
         v = jnp.repeat(v, h // kv, axis=2)
 
     causal = cfg.causal and kv_x is None
+    # Single-token cached decode runs its logit/PV contractions with fp32
+    # accumulation and keeps probs fp32: the (B, H, 1, K) intermediates are
+    # tiny, and it makes the Pallas paged kernel (fp32 in VREGs throughout)
+    # token-comparable to every XLA decode path — the property the
+    # paged-pallas == paged-xla differential tests pin. The OUTPUT still
+    # rounds to compute_dtype: the pools lay the same keys out at
+    # different cache rows, and that single rounding is what absorbs the
+    # sub-ulp fp32 summation-order differences so static == dense ==
+    # paged stays token-exact across layouts.
+    decode = attend_cached and S == 1
+    acc_dtype = jnp.float32 if decode else None
+    probs_dtype = jnp.float32 if decode else compute_dtype
 
     def _attend_block(qb, q_pos_b, kv_len):
-        logits = jnp.einsum("bqhd,bkhd->bhqk", qb, k) * scale
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qb, k,
+                            preferred_element_type=acc_dtype) * scale
         logits = softcap(logits, cfg.logit_softcap)
         logits = _mask_logits(
             logits.astype(jnp.float32), q_pos_b, k_pos,
             causal=causal, window=cfg.sliding_window,
             kv_valid_len=kv_len)
-        probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
-        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
-        if attend_cached and S == 1:
+        probs = jax.nn.softmax(logits, axis=-1).astype(probs_dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                       preferred_element_type=acc_dtype).astype(compute_dtype)
+        if decode:
             # keep decode attention head_dim-sharded (see cache note above)
             o = maybe_constrain(o, "data", None, None, "model")
         return o

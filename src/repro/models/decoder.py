@@ -59,6 +59,7 @@ class DecoderConfig:
     attn_softcap: Optional[float] = None       # gemma2: 50.0
     final_softcap: Optional[float] = None      # gemma2: 30.0
     post_block_norm: bool = False              # gemma2 pre+post norms
+    attn_kernel: str = "xla"                   # paged decode: "xla" | "paged"
 
     # ffn
     activation: str = "silu"
@@ -103,7 +104,8 @@ class DecoderConfig:
             qkv_bias=self.qkv_bias, qk_norm=self.qk_norm, rope=True,
             rope_theta=self.rope_theta, causal=True,
             sliding_window=self.sliding_window if local else None,
-            logit_softcap=self.attn_softcap)
+            logit_softcap=self.attn_softcap,
+            decode_kernel=self.attn_kernel)
 
     def moe_cfg(self) -> moe_lib.MoeConfig:
         return moe_lib.MoeConfig(

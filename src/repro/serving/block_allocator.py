@@ -61,13 +61,16 @@ class BlockAllocator:
 
     @property
     def n_free(self) -> int:
+        """Blocks available for allocation (excludes the null block)."""
         return len(self._free)
 
     @property
     def n_live(self) -> int:
+        """Blocks currently referenced by at least one table entry."""
         return int((self.ref[1:] > 0).sum())
 
     def alloc(self) -> int:
+        """Take a free block (refcount 1); NoBlocksError when exhausted."""
         if not self._free:
             raise NoBlocksError(f"all {self.n_blocks - 1} blocks in use")
         b = self._free.pop()
@@ -75,6 +78,7 @@ class BlockAllocator:
         return b
 
     def retain(self, block: int):
+        """Add a reference to a live block (a shared-prefix hit)."""
         if not (0 < block < self.n_blocks) or self.ref[block] < 1:
             raise ValueError(f"retain of non-live block {block}")
         self.ref[block] += 1
@@ -90,6 +94,8 @@ class BlockAllocator:
         return False
 
     def check_invariants(self):
+        """Assert the free/live partition and refcount sanity (test hook;
+        also driven by the hypothesis state machine)."""
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate free blocks"
         assert NULL_BLOCK not in free, "null block on the free list"
@@ -224,9 +230,13 @@ class BlockTableMap:
 
     @property
     def n_shared(self) -> int:
+        """Prefix blocks currently registered for content-address reuse."""
         return len(self._registry)
 
     def check_invariants(self):
+        """Assert table/refcount/registry consistency: every table
+        reference holds exactly one refcount, multiply-referenced blocks
+        are registered shared prefixes, registered blocks are live."""
         self.alloc.check_invariants()
         counts = np.bincount(self.table.ravel(),
                              minlength=self.alloc.n_blocks)

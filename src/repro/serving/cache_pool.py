@@ -148,9 +148,31 @@ class PagedCachePool:
 
     def __init__(self, arch, max_batch: int, max_len: int, *,
                  block_size: int = 16, slots_budget: Optional[int] = None,
-                 share_prefix: bool = True):
+                 share_prefix: bool = True, attn_kernel: Optional[str] = None):
+        """Args:
+          arch: decoder Arch (paged serving is decoder-only).
+          max_batch: number of decode slots (block-table rows).
+          max_len: per-request logical KV budget in rows.
+          block_size: arena block granularity; must divide every
+            attention slot-type's ring length (max_len / sliding window).
+          slots_budget: arena memory in dense-slot equivalents (None:
+            == max_batch, i.e. exactly the dense pool's memory).
+          share_prefix: content-address identical prompt prefixes and
+            store their blocks once (refcounted, copy-free).
+          attn_kernel: which paged decode attention the arenas feed —
+            "xla" (dense arena[table] gather) or "paged" (the fused
+            Pallas kernel). None adopts arch.cfg.attn_kernel. The pool
+            layout is identical either way; this is recorded here so the
+            pool and the decode step cannot disagree.
+        """
         if arch.kind != "decoder":
             raise NotImplementedError("paged serving is decoder-only")
+        if attn_kernel is None:
+            attn_kernel = getattr(arch.cfg, "attn_kernel", "xla")
+        if attn_kernel not in ("xla", "paged"):
+            raise ValueError(
+                f"attn_kernel must be 'xla' or 'paged', got {attn_kernel}")
+        self.attn_kernel = attn_kernel
         self.arch = arch
         self.max_batch = max_batch
         self.max_len = max_len
@@ -251,11 +273,15 @@ class PagedCachePool:
 
     def blocks_needed(self, prompt, plen: int, padded_len: int,
                       budget: int) -> dict:
+        """Fresh blocks per attention slot-type an insert would consume
+        (registered shared-prefix blocks count as free) — the engine's
+        admission gate compares this against free_blocks()."""
         return {si: m.blocks_needed(prompt, plen, padded_len, budget,
                                     self.share_prefix)
                 for si, m in self.maps.items()}
 
     def free_blocks(self) -> dict:
+        """Currently allocatable blocks per attention slot-type."""
         return {si: m.alloc.n_free for si, m in self.maps.items()}
 
     def insert(self, request_cache: PyTree, slot: int, *, prompt,
@@ -319,8 +345,11 @@ class PagedCachePool:
             jnp.asarray(0, jnp.int32)))
 
     def lengths(self):
+        """Per-slot LOCAL token counts (host array) — diagnostic only."""
         return np.asarray(self.cache["index"])
 
     def check_invariants(self):
+        """Assert every slot-type's allocator/table/registry invariants
+        (see BlockTableMap.check_invariants) — test hook."""
         for m in self.maps.values():
             m.check_invariants()

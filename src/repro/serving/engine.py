@@ -65,6 +65,12 @@ from repro.serving.scheduler import Scheduler
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: a prompt and a generation budget.
+
+    `generated` is filled by the engine on completion ((n,) int32,
+    n <= max_new_tokens); `rid` is assigned at submit and seeds the
+    sampler's per-request PRNG key; `trace` records submit/admit/token
+    timestamps for the latency report."""
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int = 16
     generated: Optional[np.ndarray] = None
@@ -203,12 +209,42 @@ class ContinuousEngine:
                  prefill_bucket: int = 1, on_step=None,
                  cache: str = "paged", block_size: int = 16,
                  slots_budget: Optional[int] = None,
-                 share_prefix: bool = True, sampler=None):
+                 share_prefix: bool = True, sampler=None,
+                 attn_kernel: Optional[str] = None):
+        """See the class/module docstring for the serving model. Key args:
+
+        max_batch: decode slot-pool size (the fixed step batch).
+        max_len: per-request KV budget (prompt + generation rows).
+        policy: precision policy name or repro.precision.Policy.
+        cache: "paged" (block arenas + shared prefixes, the default) or
+            "dense" (PR 2 per-slot-rows pool, the differential baseline).
+        block_size / slots_budget / share_prefix: paged-pool sizing, see
+            serving.cache_pool.PagedCachePool.
+        sampler: spec string or serving.sampler.Sampler (None = greedy).
+        attn_kernel: paged decode attention implementation — "xla"
+            gathers arena[table] into a dense (B, ring_len) K/V copy per
+            step; "paged" streams blocks inside the fused Pallas kernel
+            (kernels/paged_attention_kernel.py). Token-identical output;
+            requires cache="paged". None adopts arch.cfg.attn_kernel
+            (same convention as PagedCachePool).
+        """
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
         if cache not in ("paged", "dense"):
             raise ValueError(f"cache must be 'paged' or 'dense', got {cache}")
+        if attn_kernel is None:
+            attn_kernel = getattr(arch.cfg, "attn_kernel", "xla")
+        if attn_kernel not in ("xla", "paged"):
+            raise ValueError(
+                f"attn_kernel must be 'xla' or 'paged', got {attn_kernel}")
+        if attn_kernel == "paged" and cache != "paged":
+            raise ValueError("attn_kernel='paged' requires cache='paged' "
+                             "(the dense pool has no block tables)")
         self.arch, self.params = apply_serving_policy(arch, params, policy)
+        if attn_kernel != self.arch.cfg.attn_kernel:
+            self.arch = dataclasses.replace(
+                self.arch, cfg=dataclasses.replace(
+                    self.arch.cfg, attn_kernel=attn_kernel))
         self.max_batch = max_batch
         self.max_len = max_len
         self.paged = cache == "paged"
@@ -222,7 +258,8 @@ class ContinuousEngine:
         if self.paged:
             self.pool = PagedCachePool(
                 self.arch, max_batch, max_len, block_size=block_size,
-                slots_budget=slots_budget, share_prefix=share_prefix)
+                slots_budget=slots_budget, share_prefix=share_prefix,
+                attn_kernel=attn_kernel)
             # slack rows so the padded prompt never reaches the request
             # cache's last row, which stays pos=-1 (the insert's invalid
             # filler — see PagedCachePool._src_rows)
@@ -249,6 +286,8 @@ class ContinuousEngine:
     # ---------------- request lifecycle ----------------
 
     def submit(self, request: Request):
+        """Queue a request (FIFO). Validates it can ever fit (prompt +
+        budget <= max_len); admission happens at the next step()."""
         if len(request.prompt) + request.max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt {len(request.prompt)} + max_new_tokens "
@@ -412,12 +451,16 @@ class ContinuousEngine:
             pass
         return self.scheduler.completed
 
-    # static-engine-compatible alias (throughput_probe, benchmarks)
     def run_batch(self, requests: List[Request]) -> List[Request]:
+        """Static-engine-compatible alias for run() (throughput_probe,
+        benchmarks): submit + drain, return the same request objects."""
         self.run(requests)
         return requests
 
     def report(self, wall_s: float) -> dict:
+        """Aggregate throughput/latency stats for completed requests:
+        tokens/s, TTFT/ITL percentiles, slot utilization, decode-step
+        count, peak concurrency, and (paged) shared-prefix block hits."""
         done = self.scheduler.completed
         stats = aggregate([r.trace for r in done], wall_s,
                           sum(len(r.generated) for r in done))
@@ -454,6 +497,10 @@ class ServeEngine:
         self._next_rid = 0
 
     def run_batch(self, requests: List[Request]) -> List[Request]:
+        """Serve one padded batch to completion: a single left-padded
+        prefill, then lockstep decode for max(max_new_tokens) steps.
+        Fills each request's `generated`/trace in place and returns the
+        same list."""
         assert requests
         steps = max(r.max_new_tokens for r in requests)
         tokens, positions, lens = pad_prompts(

@@ -1,0 +1,84 @@
+"""Docs smoke check: every ```python fence in docs/*.md and README.md
+must at least parse — so documentation code can't silently rot.
+
+Shell fences (```bash) are checked against the repo's entry points: any
+`python -m <module>` they invoke must be an importable module path.
+Collected dynamically: adding a doc file or fence adds test cases.
+"""
+import ast
+import importlib.util
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+
+# Opener may carry an info string (```python title=x); the closer is a
+# bare ``` — matching them separately keeps the open/close state correct
+# for any opener a future doc uses.
+_OPEN = re.compile(r"^```(\w*)")
+_CLOSE = re.compile(r"^```\s*$")
+
+
+def _fences(path, lang):
+    """(start_line, code) for every ```lang fence in the file."""
+    out, buf, start, active = [], [], 0, False
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if not active and _OPEN.match(line):
+            active, tag, start, buf = True, _OPEN.match(line).group(1), i, []
+        elif active and _CLOSE.match(line):
+            active = False
+            if tag == lang:
+                out.append((start, "\n".join(buf)))
+        elif active:
+            buf.append(line)
+    assert not active, f"{path}: unterminated code fence at line {start}"
+    return out
+
+
+def _cases(lang):
+    return [pytest.param(path, line, code,
+                         id=f"{path.relative_to(ROOT)}:{line}")
+            for path in DOC_FILES if path.exists()
+            for line, code in _fences(path, lang)]
+
+
+def test_docs_exist_and_are_linked():
+    for name in ("architecture.md", "kernels.md", "serving.md"):
+        assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"
+        assert f"docs/{name}" in (ROOT / "README.md").read_text(), (
+            f"README does not link docs/{name}")
+
+
+@pytest.mark.parametrize("path,line,code", _cases("python"))
+def test_python_fences_parse(path, line, code):
+    try:
+        ast.parse(code)
+    except SyntaxError as e:
+        pytest.fail(f"{path.name}:{line} python fence does not parse: {e}")
+
+
+def _module_exists(mod: str) -> bool:
+    """Repo module file / package (with __init__.py), or any importable
+    module (installed tools like pytest) — bare directories don't count."""
+    rel = mod.replace(".", "/")
+    for base in (ROOT / "src", ROOT):
+        if (base / f"{rel}.py").exists() or \
+                (base / rel / "__init__.py").exists():
+            return True
+    try:
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ModuleNotFoundError, ValueError):
+        return False
+
+
+@pytest.mark.parametrize("path,line,code", _cases("bash"))
+def test_bash_fences_reference_real_modules(path, line, code):
+    """`python -m repro.x.y` / `-m benchmarks.z` in docs must resolve to
+    real modules (the flags themselves are exercised by the CLIs' own
+    tests)."""
+    for mod in re.findall(r"python -m ([\w.]+)", code):
+        assert _module_exists(mod), (
+            f"{path.name}:{line} references unknown module {mod}")

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.paged_attention_kernel import paged_attention
 
 SHAPES = [(1,), (7,), (128,), (300,), (129, 130), (8, 16, 32), (2, 3, 5, 7)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -72,6 +73,97 @@ def test_fused_no_trust_variant(rng):
                              apply_trust=False)
     np.testing.assert_allclose(np.asarray(got.x), np.asarray(want.x),
                                rtol=2e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------------
+# paged-attention decode kernel (kernels/paged_attention_kernel.py)
+# --------------------------------------------------------------------------
+
+def _paged_case(rng, *, B=4, h=4, n_kv=2, hd=16, bs=8, nb=5, n_blocks=12,
+                dtype=jnp.bfloat16, max_pos=30):
+    """Random decode-shaped inputs: arenas with a pos=-1 null block, random
+    (possibly aliasing) block tables, one dead (all-null) slot."""
+    q = jnp.asarray(rng.normal(size=(B, h, hd)), dtype)
+    ka = jnp.asarray(rng.normal(size=(n_blocks, bs, n_kv, hd)), dtype)
+    va = jnp.asarray(rng.normal(size=(n_blocks, bs, n_kv, hd)), dtype)
+    pos = rng.integers(-1, max_pos, size=(n_blocks, bs)).astype(np.int32)
+    pos[0] = -1                               # reserved null block
+    tbl = rng.integers(0, n_blocks, size=(B, nb)).astype(np.int32)
+    tbl[-1] = 0                               # dead slot: every entry null
+    qpos = rng.integers(0, max_pos, size=(B,)).astype(np.int32)
+    return q, ka, va, jnp.asarray(pos), jnp.asarray(tbl), jnp.asarray(qpos)
+
+
+PAGED_VARIANTS = [
+    dict(),                                   # plain causal GQA
+    dict(window=8),                           # sliding-window mask
+    dict(softcap=5.0),                        # gemma2-style logit cap
+    dict(causal=False),                       # bidirectional
+    dict(window=4, softcap=10.0),
+]
+
+
+@pytest.mark.parametrize("kwargs", PAGED_VARIANTS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_paged_attention_matches_ref(rng, kwargs, dtype):
+    args = _paged_case(rng, dtype=dtype)
+    got = paged_attention(*args, scale=0.25, **kwargs)
+    want = ref.paged_attention_ref(*args, scale=0.25, **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("h,n_kv", [(4, 4), (8, 2), (6, 1)])
+def test_paged_attention_gqa_head_mapping(rng, h, n_kv):
+    """MHA / grouped / MQA head layouts all match the repeat-heads oracle."""
+    args = _paged_case(rng, h=h, n_kv=n_kv, dtype=jnp.float32)
+    got = paged_attention(*args, scale=0.125)
+    want = ref.paged_attention_ref(*args, scale=0.125)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_paged_attention_pos_minus_one_masked_on_chip(rng):
+    """THE masking property: pos == -1 rows (null block, unwritten ring
+    slots) must contribute exactly nothing — huge garbage K/V planted in
+    every masked row leaves the output bitwise unchanged, and a slot whose
+    table references no valid key at all returns exactly 0, not NaN."""
+    q, ka, va, pos, tbl, qpos = _paged_case(rng, dtype=jnp.float32)
+    clean = paged_attention(q, ka, va, pos, tbl, qpos, scale=0.25)
+    masked = np.asarray(pos) < 0
+    garbage = jnp.where(jnp.asarray(masked)[:, :, None, None], 1e30, 0.0)
+    out = paged_attention(q, ka + garbage, va + garbage, pos, tbl, qpos,
+                          scale=0.25)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
+    # dead slot (table all null-block): exact zeros, finite everywhere
+    assert (np.asarray(out[-1]) == 0.0).all()
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_paged_attention_causal_and_window_masking(rng):
+    """Keys in the future of q_pos (and beyond the sliding window) are
+    masked even when their positions are valid (>= 0)."""
+    B, h, n_kv, hd, bs, nb = 2, 2, 2, 8, 4, 2
+    rngs = np.random.default_rng(7)
+    ka = jnp.asarray(rngs.normal(size=(1 + nb, bs, n_kv, hd)), jnp.float32)
+    va = jnp.asarray(rngs.normal(size=(1 + nb, bs, n_kv, hd)), jnp.float32)
+    q = jnp.asarray(rngs.normal(size=(B, h, hd)), jnp.float32)
+    pos = np.concatenate([np.full((1, bs), -1, np.int32),
+                          np.arange(nb * bs, dtype=np.int32).reshape(nb, bs)])
+    tbl = jnp.asarray(np.tile(np.arange(1, 1 + nb, dtype=np.int32), (B, 1)))
+    qpos = jnp.asarray(np.array([3, nb * bs - 1], np.int32))
+    pos = jnp.asarray(pos)
+    out = paged_attention(q, ka, va, pos, tbl, qpos, scale=0.5, window=4)
+    # slot 0 sees positions 0..3 only; slot 1 the last 4 positions: editing
+    # keys outside those windows must not change anything
+    ka2 = ka.at[2:, :].add(100.0)            # positions >= bs: hidden from slot 0
+    out2 = paged_attention(q, ka2, va, pos, tbl, qpos, scale=0.5, window=4)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out2[0]))
+    assert not np.array_equal(np.asarray(out[1]), np.asarray(out2[1]))
+    want = ref.paged_attention_ref(q, ka, va, pos, tbl, qpos, scale=0.5,
+                                   window=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
 
 
 def test_multi_step_trajectory_parity(rng):

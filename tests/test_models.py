@@ -20,8 +20,14 @@ def _dense_cfg(**over):
     return DecoderConfig(**base)
 
 
+# The three decode-parity tests pin decode-vs-full-forward agreement in
+# fp32 compute: cached decode intentionally runs fp32 softmax probs (the
+# Pallas paged-kernel comparability contract — see models/attention.py),
+# so under bf16 compute it is now MORE precise than the bf16 full
+# forward and parity is only bounded by bf16 rounding (~7e-3).
+
 def test_prefill_decode_parity_dense():
-    cfg = _dense_cfg()
+    cfg = _dense_cfg(compute_dtype=jnp.float32)
     params = decoder_init(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
     full, _, _ = decoder_apply(params, cfg, toks)
@@ -34,9 +40,27 @@ def test_prefill_decode_parity_dense():
     assert err < 1e-3, err
 
 
+def test_prefill_decode_parity_dense_bf16_loose():
+    """bf16-compute variant at the bf16-rounding-bounded tolerance:
+    cached decode (fp32 probs) vs the bf16 full forward. Keeps bf16-only
+    regressions in the cache branches (wrong cast, dropped constrain)
+    visible now that the tight parity tests run fp32."""
+    cfg = _dense_cfg()                      # default compute_dtype: bf16
+    params = decoder_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
+    full, _, _ = decoder_apply(params, cfg, toks)
+    cache = init_decoder_cache(cfg, 2, 24, dtype=jnp.float32)
+    outs = []
+    for i in range(24):
+        lg, cache, _ = decoder_apply(params, cfg, toks[:, i:i+1], caches=cache)
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(full - jnp.stack(outs, 1))))
+    assert err < 2e-2, err
+
+
 def test_sliding_window_ring_cache_matches_full_history():
     """Ring-buffer local attention == full-cache attention with window mask."""
-    cfg = _dense_cfg(sliding_window=8,
+    cfg = _dense_cfg(sliding_window=8, compute_dtype=jnp.float32,
                      superblock=(("attn_local", "mlp"),))
     params = decoder_init(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 20), 0, cfg.vocab)
@@ -159,7 +183,7 @@ def test_qk_norm_changes_attention_but_stays_finite():
 
 def test_prefill_through_ring_then_decode_matches_full():
     """32k-style prefill into a window-sized ring cache, then decode."""
-    cfg = _dense_cfg(sliding_window=8,
+    cfg = _dense_cfg(sliding_window=8, compute_dtype=jnp.float32,
                      superblock=(("attn_local", "mlp"), ("attn", "mlp")))
     params = decoder_init(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 28), 0, cfg.vocab)
