@@ -1,6 +1,7 @@
-"""Serving load generator: paged vs dense pools, continuous vs static.
+"""Serving load generator: paged vs dense pools, continuous vs static,
+lazy vs eager chain growth.
 
-Two workloads:
+Three workloads:
 
   mixed          (default) heterogeneous prompt lengths and generation
                  budgets with NO common prefix — the traffic shape where
@@ -15,28 +16,54 @@ Two workloads:
                  --max-batch) but 4x the decode slots, and must sustain
                  >= 2x the dense pool's peak concurrency by storing the
                  shared prefix blocks once (refcounted, copy-free).
+  bursty-long    a burst of requests whose generation BUDGETS are much
+                 larger than their prompts — the shape where whole-chain
+                 reservation strands arena memory on rows nobody has
+                 written yet. Lazy growth (decode blocks allocated as
+                 the cursor crosses block boundaries, preempt/requeue on
+                 exhaustion) must sustain >= --lazy-ratio (1.5) x the
+                 eager reservation's admitted concurrency at EQUAL arena
+                 memory, token-identically. A second phase replays two
+                 DISJOINT request waves (same system prompt, different
+                 tails) through a retention-enabled engine and must show
+                 retained-prefix revivals > 0 on the second wave: the
+                 prefix blocks survive refcount 0 on the bounded LRU and
+                 are reused copy-free across waves.
 
 Every engine pair runs the byte-identical seeded workload and must emit
-identical tokens per request — scheduling and cache layout must never
-change output (the differential property tests/test_serving_engine.py
-locks down; the benchmark re-checks it end to end). Reports tokens/s,
-p50/p99 TTFT / inter-token latency, decode-step counts, peak concurrency
-and shared-block hits, all measured on WARM engines (compiles cached)
-with interleaved best-of passes — see measure_interleaved.
+identical tokens per request — scheduling, cache layout, growth mode and
+preemption must never change output (the differential property
+tests/test_serving_engine.py + tests/test_scheduling.py lock down; the
+benchmark re-checks it end to end). Reports tokens/s, p50/p99 TTFT /
+inter-token latency, decode-step counts, peak concurrency, preemptions
+and shared/retained block hits, all measured on WARM engines (compiles
+cached) with interleaved best-of passes — see measure_interleaved.
 
   PYTHONPATH=src python -m benchmarks.serving_load                # mixed
   PYTHONPATH=src python -m benchmarks.serving_load --workload shared-prefix
+  PYTHONPATH=src python -m benchmarks.serving_load --workload bursty-long
 
-Runs on CPU in a few minutes at the defaults. PASS (mixed): zero token
-mismatches, paged >= --paged-tol x dense tokens/s, continuous >=
---static-tol x static tokens/s, AND the deterministic scheduling claim —
-the continuous engine finishes the workload in no more decode steps than
-the static waves burn (slots refill instead of idling until the wave's
-longest budget). At the reduced CPU scale a decode step costs ~1 ms, so
-wall-clock ratios are dispatch-overhead-bound and carry wide error bars
-(hence the tolerances); the step-count gate is exact. PASS
-(shared-prefix): paged peak concurrency >= 2x dense at equal arena
-memory, zero mismatches.
+Runs on CPU in a few minutes at the defaults. Alongside the human
+PASS/FAIL line, every run prints (and --json-out writes) a
+machine-readable JSON blob with each gate's measured value, threshold
+and verdict, so successive PRs can track the perf trajectory:
+
+  {"workload": ..., "gates": {"concurrency_ratio":
+      {"measured": 3.2, "threshold": 1.5, "op": ">=", "pass": true}, ...},
+   "engines": {"lazy": {"tokens_per_s": ..., ...}, ...}, "pass": true}
+
+PASS (mixed): zero token mismatches, paged >= --paged-tol x dense
+tokens/s, continuous >= --static-tol x static tokens/s, AND the
+deterministic scheduling claim — the continuous engine finishes the
+workload in no more decode steps than the static waves burn (slots
+refill instead of idling until the wave's longest budget). At the
+reduced CPU scale a decode step costs ~1 ms, so wall-clock ratios are
+dispatch-overhead-bound and carry wide error bars (hence the
+tolerances); the step-count gate is exact. PASS (shared-prefix): paged
+peak concurrency >= 2x dense at equal arena memory, zero mismatches.
+PASS (bursty-long): lazy admitted concurrency >= --lazy-ratio x eager
+at equal arena memory, zero mismatches (preemption included), and
+wave-2 retained-prefix revivals > 0.
 """
 from __future__ import annotations
 
@@ -83,17 +110,17 @@ def make_static(arch, params, workload, args, max_len):
 
 
 def make_continuous(arch, params, workload, args, max_len, *, cache,
-                    slot_factor=1):
+                    slot_factor=1, **engine_kw):
     engine = ContinuousEngine(
         arch, params, max_batch=slot_factor * args.max_batch,
         max_len=max_len, policy=args.precision,
         prefill_bucket=args.prefill_bucket, cache=cache,
         block_size=args.block_size, slots_budget=args.max_batch,
-        sampler=args.sampler)
+        sampler=args.sampler, **engine_kw)
 
     def one():
         reqs = workload()
-        steps0 = engine.steps_run
+        steps0, preempt0 = engine.steps_run, engine.preemptions
         t0 = time.perf_counter()
         engine.run(reqs)
         dt = time.perf_counter() - t0
@@ -101,8 +128,10 @@ def make_continuous(arch, params, workload, args, max_len, *, cache,
                           sum(len(r.generated) for r in reqs))
         stats["decode_steps"] = engine.steps_run - steps0
         stats["max_concurrent"] = engine.max_concurrent
+        stats["preemptions"] = engine.preemptions - preempt0
         if engine.paged:
             stats["shared_block_hits"] = engine.pool.shared_hits
+            stats["retained_block_hits"] = engine.pool.retained_hits
         return stats, reqs
 
     return one
@@ -117,6 +146,9 @@ def measure_interleaved(runners: dict, reps: int):
     whichever runs last; interleaving spreads the drift evenly and
     best-of filters the spikes. Returns every rep's outputs so the
     caller can gate token identity on ALL passes, not just the fastest.
+
+    max_concurrent is engine-lifetime (not per-pass), so it is taken
+    from the LAST stats — identical workloads peak identically.
     """
     for one in runners.values():
         one()                  # warmup: compiles cached per engine
@@ -130,6 +162,8 @@ def measure_interleaved(runners: dict, reps: int):
             if (name not in best
                     or stats["tokens_per_s"] > best[name]["tokens_per_s"]):
                 best[name] = stats
+            if "max_concurrent" in stats:
+                best[name]["max_concurrent"] = stats["max_concurrent"]
         rep_outputs.append(outs)
     return best, rep_outputs
 
@@ -146,8 +180,11 @@ def print_stats(results: dict):
         extra = ""
         if "max_concurrent" in s:
             extra = f" | peak slots {s['max_concurrent']:3d}"
+        if s.get("preemptions"):
+            extra += f" | preempts {s['preemptions']}"
         if "shared_block_hits" in s:
-            extra += f" | shared hits {s['shared_block_hits']}"
+            extra += (f" | shared hits {s['shared_block_hits']}"
+                      f" | retained hits {s.get('retained_block_hits', 0)}")
         print(f"{name:>10}: {s['tokens_per_s']:8.1f} tok/s | "
               f"ttft p50 {s['ttft_p50_ms']:7.2f} ms p99 "
               f"{s['ttft_p99_ms']:7.2f} ms | itl p50 "
@@ -155,20 +192,78 @@ def print_stats(results: dict):
               f"decode steps {s['decode_steps']}{extra}")
 
 
+def gate(measured, threshold, op=">="):
+    """One machine-readable PASS gate record."""
+    ok = measured >= threshold if op == ">=" else measured <= threshold
+    return {"measured": round(float(measured), 3),
+            "threshold": threshold, "op": op, "pass": bool(ok)}
+
+
+def run_bursty_long(arch, params, args, mk_workload, max_len):
+    """Lazy vs eager growth at equal arena memory, then retained-prefix
+    persistence across two disjoint request waves."""
+    workload = mk_workload(args.seed)
+    mk = (arch, params, workload, args, max_len)
+    runners = {
+        # dense pool = token baseline (slots == arena budget, no paging)
+        "dense": make_continuous(*mk, cache="dense"),
+        "eager": make_continuous(*mk, cache="paged", slot_factor=4,
+                                 growth="eager"),
+        "lazy": make_continuous(*mk, cache="paged", slot_factor=4,
+                                growth="lazy", watermark=1),
+    }
+    results, rep_outputs = measure_interleaved(runners, args.reps)
+    mismatch = sum(check_tokens(outs, "dense") for outs in rep_outputs)
+    print_stats(results)
+
+    ratio = (results["lazy"]["max_concurrent"]
+             / max(results["eager"]["max_concurrent"], 1))
+    gates = {
+        "token_mismatches": gate(mismatch, 0, op="<="),
+        "concurrency_ratio": gate(ratio, args.lazy_ratio),
+    }
+
+    # ---- phase 2: retained-prefix persistence across disjoint waves ----
+    # one synthetic_requests() call split in half: same system prompt,
+    # disjoint tails — so wave 2 can only reuse prefix blocks that
+    # SURVIVED wave 1's evictions on the retained LRU (refcount 0).
+    both = synthetic_requests(
+        2 * args.requests, arch.cfg.vocab, prompt_len=args.prompt_len,
+        new_tokens=args.new_tokens // 2, seed=args.seed + 1,
+        min_new_frac=0.5, shared_prefix=args.prefix_len)
+    wave1, wave2 = both[:args.requests], both[args.requests:]
+    wave_engine = ContinuousEngine(
+        arch, params, max_batch=args.max_batch, max_len=max_len,
+        policy=args.precision, prefill_bucket=args.prefill_bucket,
+        cache="paged", block_size=args.block_size, sampler=args.sampler)
+    wave_engine.run(wave1)                    # drains: every slot evicts
+    hits_before = wave_engine.pool.retained_hits
+    wave_engine.run(wave2)
+    wave2_hits = wave_engine.pool.retained_hits - hits_before
+    print(f"retained-prefix wave 2: {wave2_hits} revived blocks "
+          f"({wave_engine.pool.retained_blocks()} still parked)")
+    gates["wave2_retained_hits"] = gate(wave2_hits, 1)
+    results["waves"] = {"retained_block_hits_wave2": wave2_hits,
+                        "preemptions": wave_engine.preemptions}
+    return results, gates
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=["mixed", "shared-prefix"],
+    ap.add_argument("--workload",
+                    choices=["mixed", "shared-prefix", "bursty-long"],
                     default="mixed")
     ap.add_argument("--arch", default=None,
                     help="default: gemma2-2b (mixed) / qwen2.5-14b "
-                         "(shared-prefix: full attention, so every layer "
-                         "type dedups — sliding-window rings stop sharing "
-                         "once decode wraps them)")
+                         "(shared-prefix, bursty-long: full attention, so "
+                         "every layer type dedups — sliding-window rings "
+                         "stop sharing once decode wraps them)")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--prefix-len", type=int, default=32,
-                    help="shared system-prompt tokens (shared-prefix)")
+                    help="shared system-prompt tokens (shared-prefix / "
+                         "bursty-long wave phase)")
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--prefill-bucket", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=8)
@@ -185,6 +280,10 @@ def main():
                          "costs ~ the decode steps it saves; the exact "
                          "scheduling win is gated on decode-step counts "
                          "instead)")
+    ap.add_argument("--lazy-ratio", type=float, default=1.5,
+                    help="bursty-long PASS gate: lazy-growth admitted "
+                         "concurrency >= ratio x eager whole-chain "
+                         "reservation at equal arena memory")
     ap.add_argument("--reps", type=int, default=5,
                     help="measured passes per engine (after warmup); the "
                          "fastest is reported")
@@ -192,74 +291,100 @@ def main():
                     choices=["fp32", "bf16", "bf16_compute", "fp16"])
     ap.add_argument("--sampler", default=None,
                     help="optional sampler spec (default greedy)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the JSON summary blob to this path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     args.sampler = Sampler.parse(args.sampler)
 
     shared = args.workload == "shared-prefix"
-    arch_name = args.arch or ("qwen2.5-14b" if shared else "gemma2-2b")
+    bursty = args.workload == "bursty-long"
+    arch_name = args.arch or ("gemma2-2b" if args.workload == "mixed"
+                              else "qwen2.5-14b")
     arch = reduced_arch(arch_name)
     if arch.kind != "decoder":
         raise SystemExit(f"{arch_name} is {arch.kind}: no decode step")
     params = arch.init(jax.random.PRNGKey(args.seed))
 
     if shared:
-        prompt_len, prefix, new_tokens = 8, args.prefix_len, 8
-    else:
-        prompt_len, prefix, new_tokens = args.prompt_len, 0, args.new_tokens
-    max_len = prefix + prompt_len + new_tokens + args.prefill_bucket
+        args.prompt_len, args.new_tokens = 8, 8
+    elif bursty:
+        # budgets dwarf prompts: whole-chain reservation strands rows
+        args.requests = min(args.requests, 16)
+        args.prompt_len, args.new_tokens, args.prefix_len = 8, 32, 24
+    prefix = args.prefix_len if shared else 0
+    max_len = prefix + args.prompt_len + args.new_tokens \
+        + args.prefill_bucket
+    if bursty:
+        max_len += args.prefix_len     # wave phase prepends the prefix
     max_len = -(-max_len // args.block_size) * args.block_size
 
-    def workload():
-        return synthetic_requests(
-            args.requests, arch.cfg.vocab, prompt_len=prompt_len,
-            new_tokens=new_tokens, seed=args.seed, min_new_frac=0.25,
-            shared_prefix=prefix)
+    # bursty-long keeps budgets uniformly LONG (that is the stranding
+    # shape); the other workloads mix budgets down to 25%
+    min_new_frac = 0.75 if bursty else 0.25
 
-    mk = (arch, params, workload, args, max_len)
-    if shared:
-        runners = {
-            "dense": make_continuous(*mk, cache="dense"),
-            "paged": make_continuous(*mk, cache="paged", slot_factor=4),
-        }
+    def mk_workload(seed):
+        def workload():
+            return synthetic_requests(
+                args.requests, arch.cfg.vocab, prompt_len=args.prompt_len,
+                new_tokens=args.new_tokens, seed=seed,
+                min_new_frac=min_new_frac, shared_prefix=prefix)
+        return workload
+
+    summary = {"workload": args.workload, "arch": arch_name}
+    if bursty:
+        results, gates = run_bursty_long(arch, params, args, mk_workload,
+                                         max_len)
     else:
-        runners = {
-            "static": make_static(*mk),
-            "dense": make_continuous(*mk, cache="dense"),
-            "paged": make_continuous(*mk, cache="paged"),
-        }
-    results, rep_outputs = measure_interleaved(runners, args.reps)
+        mk = (arch, params, mk_workload(args.seed), args, max_len)
+        if shared:
+            runners = {
+                "dense": make_continuous(*mk, cache="dense"),
+                "paged": make_continuous(*mk, cache="paged", slot_factor=4),
+            }
+        else:
+            runners = {
+                "static": make_static(*mk),
+                "dense": make_continuous(*mk, cache="dense"),
+                "paged": make_continuous(*mk, cache="paged"),
+            }
+        results, rep_outputs = measure_interleaved(runners, args.reps)
 
-    # identical tokens from every engine on EVERY measured pass (same
-    # seeded workload) — scheduling and cache layout must not change
-    # output, including intermittently on reused warm engines
-    mismatch = sum(check_tokens(outs, "dense") for outs in rep_outputs)
-    print_stats(results)
+        # identical tokens from every engine on EVERY measured pass (same
+        # seeded workload) — scheduling and cache layout must not change
+        # output, including intermittently on reused warm engines
+        mismatch = sum(check_tokens(outs, "dense") for outs in rep_outputs)
+        print_stats(results)
+        gates = {"token_mismatches": gate(mismatch, 0, op="<=")}
+        if shared:
+            gates["concurrency_ratio"] = gate(
+                results["paged"]["max_concurrent"]
+                / max(results["dense"]["max_concurrent"], 1), 2.0)
+        else:
+            gates["speedup_vs_static"] = gate(
+                results["paged"]["tokens_per_s"]
+                / max(results["static"]["tokens_per_s"], 1e-9),
+                args.static_tol)
+            gates["paged_vs_dense"] = gate(
+                results["paged"]["tokens_per_s"]
+                / max(results["dense"]["tokens_per_s"], 1e-9),
+                args.paged_tol)
+            gates["continuous_steps_vs_static"] = gate(
+                results["paged"]["decode_steps"],
+                results["static"]["decode_steps"], op="<=")
 
-    summary = {"workload": args.workload, "arch": arch_name,
-               "token_mismatches": mismatch}
-    if shared:
-        ratio = (results["paged"]["max_concurrent"]
-                 / max(results["dense"]["max_concurrent"], 1))
-        ok = ratio >= 2.0 and mismatch == 0
-        summary["concurrency_ratio"] = round(ratio, 3)
-    else:
-        speedup = (results["paged"]["tokens_per_s"]
-                   / max(results["static"]["tokens_per_s"], 1e-9))
-        paged_vs_dense = (results["paged"]["tokens_per_s"]
-                          / max(results["dense"]["tokens_per_s"], 1e-9))
-        fewer_steps = (results["paged"]["decode_steps"]
-                       <= results["static"]["decode_steps"])
-        ok = (speedup >= args.static_tol
-              and paged_vs_dense >= args.paged_tol
-              and fewer_steps and mismatch == 0)
-        summary["speedup_vs_static"] = round(speedup, 3)
-        summary["paged_vs_dense"] = round(paged_vs_dense, 3)
-        summary["continuous_fewer_steps"] = fewer_steps
-    summary.update({name: {k: round(v, 3) for k, v in s.items()}
-                    for name, s in results.items()})
+    ok = all(g["pass"] for g in gates.values())
+    summary["gates"] = gates
+    summary["engines"] = {
+        name: {k: round(v, 3) if isinstance(v, float) else v
+               for k, v in s.items()}
+        for name, s in results.items()}
     summary["pass"] = ok
-    print(json.dumps(summary))
+    blob = json.dumps(summary)
+    print(blob)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(blob + "\n")
     print("PASS" if ok else "FAIL")
     if not ok:
         raise SystemExit(1)

@@ -9,13 +9,19 @@ generation budgets around --prompt-len / --new-tokens; --shared-prefix N
 prepends a common N-token system prompt the paged cache deduplicates),
 drives the requested engine and prints a JSON report: tokens/s,
 time-to-first-token and inter-token latency percentiles, slot
-utilization, peak concurrency and shared-prefix block hits. --cache
-dense keeps the PR 2 per-slot-rows pool; --sampler greedy (default) or
+utilization, peak concurrency, queue depth, preemption count and
+shared/retained prefix block hits. --cache dense keeps the PR 2
+per-slot-rows pool; --sampler greedy (default) or
 "temperature=...,top_k=...,top_p=...,seed=..." samples with per-slot
-PRNG keys (temperature=0 is bit-exact greedy). --engine static runs the
+PRNG keys (temperature=0 is bit-exact greedy). Scheduling is
+policy-driven: --sched-policy picks the admission/preemption policy,
+--growth lazy (default) allocates decode blocks on demand (preempting a
+victim when the arena exhausts; --no-preempt turns that into an error),
+--retain-blocks keeps evicted prefix blocks warm on a bounded LRU, and
+--slo-ms evicts slots that blow their SLO. --engine static runs the
 padded lockstep baseline instead. --metrics writes one JSONL record per
-decode step (active slots, queue depth, step latency) plus a final
-summary record — the serving analogue of train.py's loss curve.
+decode step (active slots, queue depth, preemptions, step latency) plus
+a final summary record — the serving analogue of train.py's loss curve.
 """
 from __future__ import annotations
 
@@ -59,8 +65,33 @@ def main():
                          "max-len and any sliding window)")
     ap.add_argument("--slots-budget", type=int, default=0,
                     help="size the paged arena for this many dense-"
-                         "equivalent slots (0: max-batch); with shared "
-                         "prefixes max-batch can exceed it")
+                         "equivalent slots (0: max-batch). Under lazy "
+                         "growth this is a HIGH-WATERMARK on blocks in "
+                         "use, not a per-request reservation — max-batch "
+                         "can exceed it whenever budgets outrun typical "
+                         "outputs or prefixes are shared")
+    ap.add_argument("--growth", choices=["lazy", "eager"], default=None,
+                    help="lazy (default): allocate decode blocks on "
+                         "demand, preempt a victim when the arena "
+                         "exhausts; eager: reserve the whole chain at "
+                         "admission (PR 3 contract)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=["fifo", "arrival-deadline", "prefix-affinity"],
+                    help="admission order + preemption victim selection "
+                         "(see serving/scheduler.py)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="finish any slot active longer than this early "
+                         "(SLO eviction of stuck slots; default off)")
+    ap.add_argument("--no-preempt", dest="preempt", action="store_false",
+                    help="turn lazy-growth arena exhaustion into an error "
+                         "instead of preempting a victim")
+    ap.add_argument("--retain-blocks", type=int, default=None,
+                    help="LRU bound on warm prefix blocks kept alive after "
+                         "their last holder evicts, per attention slot-"
+                         "type (default: one request's worth; 0 disables)")
+    ap.add_argument("--watermark", type=int, default=0,
+                    help="free blocks admission holds back per slot-type "
+                         "so in-flight slots can grow without preempting")
     ap.add_argument("--attn-kernel", choices=["xla", "paged"], default=None,
                     help="paged decode attention: 'xla' gathers the block "
                          "arenas into a dense (B, ring) K/V copy per step; "
@@ -102,6 +133,7 @@ def main():
         def on_step(rec):
             now = time.perf_counter()
             log.log(rec["step"], active=rec["active"], queued=rec["queued"],
+                    preemptions=rec["preemptions"],
                     step_latency_ms=(now - last["t"]) * 1e3)
             last["t"] = now
 
@@ -110,7 +142,10 @@ def main():
             policy=args.precision, prefill_bucket=args.prefill_bucket,
             on_step=on_step, cache=args.cache, block_size=args.block_size,
             slots_budget=args.slots_budget or None,
-            sampler=args.sampler, attn_kernel=args.attn_kernel)
+            sampler=args.sampler, attn_kernel=args.attn_kernel,
+            growth=args.growth or "lazy", sched_policy=args.sched_policy,
+            slo_ms=args.slo_ms, preempt=args.preempt,
+            retain_blocks=args.retain_blocks, watermark=args.watermark)
         engine.run(reqs)
         stats = engine.report(time.perf_counter() - t0)
         attn_kernel = (engine.pool.attn_kernel
@@ -119,6 +154,20 @@ def main():
         if args.attn_kernel == "paged":
             raise SystemExit("--attn-kernel paged needs the continuous "
                              "engine's paged cache (--engine continuous)")
+        # the static baseline has no scheduler/pool: reject explicitly
+        # requested scheduling flags instead of silently ignoring them
+        # (numbers that never exercised the requested settings mislead)
+        ignored = [flag for flag, on in (
+            ("--growth", args.growth is not None),
+            ("--sched-policy", args.sched_policy != "fifo"),
+            ("--slo-ms", args.slo_ms is not None),
+            ("--no-preempt", not args.preempt),
+            ("--retain-blocks", args.retain_blocks is not None),
+            ("--watermark", args.watermark != 0)) if on]
+        if ignored:
+            raise SystemExit(
+                f"{' '.join(ignored)} only apply to the continuous "
+                f"engine's scheduler/paged pool (--engine continuous)")
         attn_kernel = "xla"
         engine = ServeEngine(arch, params, max_len=max_len,
                              policy=args.precision, sampler=args.sampler)

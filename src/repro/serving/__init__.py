@@ -7,9 +7,12 @@ See serving/engine.py for the architecture overview. Public surface:
   Request            one prompt + generation budget (+ latency trace)
   Sampler            temperature/top-k/top-p decode (per-slot PRNG keys)
   throughput_probe   warmup-aware timed run -> tokens/s + percentiles
-  Scheduler          FIFO slot admission (host-side, property-tested)
+  Scheduler          ticketed slot admission (host-side, property-tested)
+  SchedulingPolicy   admission/victim/SLO policy (fifo | arrival-deadline
+                     | prefix-affinity; see serving/scheduler.py)
   CachePool          dense pooled KV/SSM cache + insert/evict (baseline)
-  PagedCachePool     block-paged KV arena with shared prompt prefixes
+  PagedCachePool     block-paged KV arena with shared prompt prefixes,
+                     lazy chain growth and a retained-prefix LRU
   BlockAllocator     refcounted free-list over arena blocks
   BlockTableMap      per-slot-type tables + prefix registry (host-side)
 """
@@ -21,15 +24,20 @@ from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
                                   build_prefill_fn, pad_prompts,
                                   prompt_granularity, synthetic_requests,
                                   throughput_probe)
-from repro.serving.metrics import RequestTrace, aggregate, percentile
+from repro.serving.metrics import (DepthTracker, RequestTrace, aggregate,
+                                   percentile)
 from repro.serving.sampler import Sampler, fold_keys
-from repro.serving.scheduler import Scheduler, SchedulerError
+from repro.serving.scheduler import (ArrivalDeadlinePolicy, PolicyContext,
+                                     PrefixAffinityPolicy, Scheduler,
+                                     SchedulerError, SchedulingPolicy)
 
 __all__ = [
-    "BlockAllocator", "BlockTableMap", "CachePool", "ContinuousEngine",
-    "NoBlocksError", "PagedCachePool", "Request", "RequestTrace", "Sampler",
-    "Scheduler", "SchedulerError", "ServeEngine", "aggregate",
-    "apply_serving_policy", "build_first_token_fn", "build_prefill_fn",
-    "fold_keys", "pad_prompts", "percentile", "prompt_granularity",
-    "synthetic_requests", "throughput_probe",
+    "ArrivalDeadlinePolicy", "BlockAllocator", "BlockTableMap", "CachePool",
+    "ContinuousEngine", "DepthTracker", "NoBlocksError", "PagedCachePool",
+    "PolicyContext", "PrefixAffinityPolicy", "Request", "RequestTrace",
+    "Sampler", "Scheduler", "SchedulerError", "SchedulingPolicy",
+    "ServeEngine", "aggregate", "apply_serving_policy",
+    "build_first_token_fn", "build_prefill_fn", "fold_keys", "pad_prompts",
+    "percentile", "prompt_granularity", "synthetic_requests",
+    "throughput_probe",
 ]

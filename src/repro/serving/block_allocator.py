@@ -8,11 +8,14 @@ device scatters keeps the allocator a pure state machine, which is what the
 hypothesis property tests in tests/test_serving_properties.py drive:
 
   * refcounts are never negative; free blocks always have refcount 0;
-  * the free list and the live (ref > 0) blocks partition the arena
-    (minus the reserved null block);
+  * the free list, the live (ref > 0) blocks and the RETAINED (ref 0,
+    content kept warm) blocks partition the arena (minus the reserved
+    null block);
   * a block referenced by two slot tables is always a registered shared
     block (refcount == number of table references);
-  * any sequence of insert/evict ops returns every block: no leaks.
+  * a retained block is never referenced by any table — live writes can
+    therefore never alias retained content;
+  * any sequence of insert/grow/evict ops returns every block: no leaks.
 
 Block 0 is the reserved NULL block: unoccupied table entries point at it,
 so the fixed-shape gather in the decode step always has a valid index to
@@ -32,36 +35,70 @@ their own prefill would have filled with identical values. Blocks that
 decode will later overwrite (ring-buffer wrap on sliding-window layers)
 are never shared, so copy-on-write is not needed: every block a slot
 writes is exclusively owned from admission.
+
+Retained prefixes (`retain_limit > 0`): when the LAST holder of a
+registered prefix block evicts, the block moves to a bounded LRU
+"retained" list instead of the free list — its arena content stays
+bitwise valid (no table references it, so nothing can write it), and a
+later request with the same (padded_len, tokens) prefix REVIVES it
+copy-free instead of re-prefilling its KV into a fresh block. Retained
+blocks are reclaimed lazily: allocation pressure pops the LRU tail
+(unregister + free) before ever failing, so retention can delay reuse
+but never causes an allocation failure the free list alone would not
+have had.
+
+Chain growth (`lazy=True` inserts + `grow()`): admission allocates only
+the chain positions the PROMPT occupies; decode-budget positions stay
+NULL in the table and are allocated one block at a time as the write
+cursor crosses block boundaries. Sharing eligibility is still computed
+against the full budget (a block decode may ever overwrite is never
+shared or retained), so growth never needs copy-on-write either.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 
 class NoBlocksError(RuntimeError):
-    """Arena exhausted: the caller should keep the request queued."""
+    """Arena exhausted: the caller should keep the request queued (at
+    admission) or preempt a victim slot (mid-decode growth)."""
 
 
 NULL_BLOCK = 0
 
 
 class BlockAllocator:
-    """Free-list allocator with refcounts over blocks 1..n_blocks-1."""
+    """Free-list allocator with refcounts over blocks 1..n_blocks-1.
 
-    def __init__(self, n_blocks: int):
+    Three disjoint states per data block: FREE (on the free list, ref 0),
+    LIVE (ref > 0, referenced by tables) and RETAINED (ref 0, off the
+    free list — a warm prefix block parked by release(keep=True) until
+    revive()/reclaim() moves it back). `watermark` is advisory headroom
+    the ADMISSION gate subtracts from the allocatable count so mid-decode
+    growth rarely has to preempt; alloc() itself ignores it (growth is
+    exactly what the watermark reserves blocks for).
+    """
+
+    def __init__(self, n_blocks: int, watermark: int = 0):
         if n_blocks < 2:
             raise ValueError(f"need >= 2 blocks (1 data + null), got {n_blocks}")
+        if watermark < 0 or watermark >= n_blocks - 1:
+            raise ValueError(
+                f"watermark {watermark} must be in [0, {n_blocks - 1})")
         self.n_blocks = n_blocks
+        self.watermark = watermark
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self._limbo: set = set()        # retained: ref 0, off the free list
         self.ref = np.zeros(n_blocks, np.int32)
 
     @property
     def n_free(self) -> int:
-        """Blocks available for allocation (excludes the null block)."""
+        """Blocks available for allocation (excludes null + retained)."""
         return len(self._free)
 
     @property
@@ -69,8 +106,15 @@ class BlockAllocator:
         """Blocks currently referenced by at least one table entry."""
         return int((self.ref[1:] > 0).sum())
 
+    @property
+    def n_retained(self) -> int:
+        """Warm ref-0 blocks parked off the free list (reclaimable)."""
+        return len(self._limbo)
+
     def alloc(self) -> int:
-        """Take a free block (refcount 1); NoBlocksError when exhausted."""
+        """Take a free block (refcount 1); NoBlocksError when exhausted.
+        Never touches retained blocks — the table map reclaims those
+        explicitly (LRU order) before retrying."""
         if not self._free:
             raise NoBlocksError(f"all {self.n_blocks - 1} blocks in use")
         b = self._free.pop()
@@ -83,28 +127,54 @@ class BlockAllocator:
             raise ValueError(f"retain of non-live block {block}")
         self.ref[block] += 1
 
-    def release(self, block: int) -> bool:
-        """Drop one reference; returns True when the block went free."""
+    def release(self, block: int, keep: bool = False) -> bool:
+        """Drop one reference; returns True when the block went FREE.
+        keep=True parks a block whose refcount hits 0 in the retained
+        set instead (returns False: the block is warm, not allocatable
+        until reclaim())."""
         if not (0 < block < self.n_blocks) or self.ref[block] < 1:
             raise ValueError(f"release of non-live block {block}")
         self.ref[block] -= 1
         if self.ref[block] == 0:
+            if keep:
+                self._limbo.add(block)
+                return False
             self._free.append(block)
             return True
         return False
 
+    def revive(self, block: int):
+        """Retained -> live (ref 1): a warm-prefix hit, content reused
+        copy-free."""
+        if block not in self._limbo:
+            raise ValueError(f"revive of non-retained block {block}")
+        self._limbo.discard(block)
+        self.ref[block] = 1
+
+    def reclaim(self, block: int):
+        """Retained -> free list: the content is given up (LRU pressure
+        or retain_limit shrink)."""
+        if block not in self._limbo:
+            raise ValueError(f"reclaim of non-retained block {block}")
+        self._limbo.discard(block)
+        self._free.append(block)
+
     def check_invariants(self):
-        """Assert the free/live partition and refcount sanity (test hook;
-        also driven by the hypothesis state machine)."""
+        """Assert the free/live/retained partition and refcount sanity
+        (test hook; also driven by the hypothesis state machine)."""
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate free blocks"
         assert NULL_BLOCK not in free, "null block on the free list"
+        assert NULL_BLOCK not in self._limbo, "null block retained"
         assert (self.ref >= 0).all(), "negative refcount"
         assert all(self.ref[b] == 0 for b in free), "free block with refs"
+        assert all(self.ref[b] == 0 for b in self._limbo), (
+            "retained block with refs")
         live = {b for b in range(1, self.n_blocks) if self.ref[b] > 0}
-        assert not (free & live)
-        assert free | live == set(range(1, self.n_blocks)), (
-            "free + live blocks do not partition the arena")
+        assert not (free & live) and not (free & self._limbo)
+        assert not (live & self._limbo)
+        assert free | live | self._limbo == set(range(1, self.n_blocks)), (
+            "free + live + retained blocks do not partition the arena")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +183,8 @@ class Placement:
     chain_pos: int     # index into the slot's block table row
     block: int         # arena block id
     shared: bool       # True: reused an existing prefix block (no write)
+    revived: bool = False   # True: the reuse hit the RETAINED list (the
+    #                         block survived with zero holders in between)
 
 
 class BlockTableMap:
@@ -123,27 +195,40 @@ class BlockTableMap:
     `table` is the host mirror of the device block table handed to the
     jitted decode step: row `slot` lists the arena blocks backing that
     slot's logical rows [j*block_size, (j+1)*block_size), 0 = unbacked.
+
+    `retain_limit` bounds the retained-LRU list (0 disables retention:
+    the PR 3 free-on-last-release behaviour). `watermark` is forwarded
+    to the allocator and only affects `admissible()`.
     """
 
     def __init__(self, max_batch: int, ring_len: int, block_size: int,
-                 n_blocks: int):
+                 n_blocks: int, *, retain_limit: int = 0,
+                 watermark: int = 0):
         if ring_len % block_size != 0:
             raise ValueError(
                 f"cache length {ring_len} not a multiple of block_size "
                 f"{block_size}")
+        if retain_limit < 0:
+            raise ValueError(f"retain_limit must be >= 0, got {retain_limit}")
         self.block_size = block_size
         self.ring_len = ring_len
         self.max_blocks = ring_len // block_size
+        self.retain_limit = retain_limit
         self.table = np.zeros((max_batch, self.max_blocks), np.int32)
-        self.alloc = BlockAllocator(n_blocks)
-        self._registry: Dict[tuple, int] = {}   # prefix key -> block
-        self._block_key: Dict[int, tuple] = {}  # block -> prefix key
+        self.alloc = BlockAllocator(n_blocks, watermark=watermark)
+        self._registry: Dict[bytes, int] = {}   # prefix key -> block
+        self._block_key: Dict[int, bytes] = {}  # block -> prefix key
+        # retained LRU: key -> block, oldest first (ref 0, warm content)
+        self._retained: "collections.OrderedDict[bytes, int]" = \
+            collections.OrderedDict()
+        self.retained_hits = 0     # revived warm blocks (survived ref 0)
 
     # ---------------- planning ----------------
 
     def _chain(self, prompt_key, plen: int, padded_len: int, budget: int,
-               share: bool) -> List[Tuple[int, bytes]]:
-        """(chain_pos, sharing key | None) for every block the slot needs.
+               share: bool) -> List[Tuple[int, Optional[bytes], bool]]:
+        """(chain_pos, sharing key | None, prompt_backed) for every block
+        the slot's full chain covers.
 
         Rows the slot touches: prompt rows 0..plen-1 plus decode writes at
         rows plen..plen+budget-2 (the final sampled token is never fed
@@ -151,6 +236,9 @@ class BlockTableMap:
         decode will overwrite are excluded from sharing, as is the whole
         insert when the prefill stored a rolled ring layout
         (padded_len > ring_len) whose rows are not content-addressable.
+        `prompt_backed` marks positions holding at least one prompt row —
+        the ones a LAZY insert must allocate at admission (the rest grow
+        on demand as the write cursor reaches them).
         Keys are snapshots of one sha256 chain over (block_size,
         padded_len, prompt tokens so far) — O(1) bytes per block.
         """
@@ -159,6 +247,7 @@ class BlockTableMap:
         wrap = total_rows > L
         chain_len = self.max_blocks if wrap else -(-total_rows // bs)
         overwritten = {(r % L) // bs for r in range(plen, total_rows)}
+        prompt_backed = {(r % L) // bs for r in range(plen)}
         rolled = padded_len > L
         toks = np.asarray(prompt_key, np.int64)
         h = hashlib.sha256(np.array([bs, padded_len], np.int64).tobytes())
@@ -169,55 +258,183 @@ class BlockTableMap:
                 h.update(toks[j * bs:(j + 1) * bs].tobytes())
                 if share and not rolled and j not in overwritten:
                     key = h.digest()
-            out.append((j, key))
+            out.append((j, key, j in prompt_backed))
         return out
 
+    def admission_plan(self, prompt_key, plen: int, padded_len: int,
+                       budget: int, share: bool = True,
+                       lazy: bool = False) -> Tuple[int, int]:
+        """(fresh blocks, warm retained hits) an insert would consume.
+
+        Fresh blocks come off the free list (possibly via LRU reclaim);
+        retained hits revive warm blocks. Their SUM is what admission
+        subtracts from `admissible()` — a retained hit that pressure
+        converts to a miss mid-insert costs one block either way, so the
+        count is conversion-invariant. lazy=True restricts the plan to
+        prompt-backed chain positions (decode positions grow on demand).
+        """
+        fresh = hits = 0
+        for _, key, prompt_backed in self._chain(prompt_key, plen,
+                                                 padded_len, budget, share):
+            if lazy and not prompt_backed:
+                continue
+            if key is not None and key in self._registry:
+                if key in self._retained:
+                    hits += 1
+            else:
+                fresh += 1
+        return fresh, hits
+
     def blocks_needed(self, prompt_key, plen: int, padded_len: int,
-                      budget: int, share: bool = True) -> int:
-        """Fresh blocks an insert would consume (registry hits are free)."""
-        return sum(1 for _, key in self._chain(prompt_key, plen, padded_len,
-                                               budget, share)
-                   if key is None or key not in self._registry)
+                      budget: int, share: bool = True,
+                      lazy: bool = False) -> int:
+        """Fresh blocks an insert would consume (registry hits are free,
+        whether live-shared or retained)."""
+        return self.admission_plan(prompt_key, plen, padded_len, budget,
+                                   share, lazy)[0]
+
+    def admissible(self) -> int:
+        """Blocks the ADMISSION gate may plan against: free + reclaimable
+        retained, minus the growth watermark. Growth itself ignores the
+        watermark — reserving headroom for it is the watermark's job."""
+        return (self.alloc.n_free + self.alloc.n_retained
+                - self.alloc.watermark)
 
     # ---------------- mutation ----------------
 
+    def _alloc_block(self) -> int:
+        """Allocate a fresh block, reclaiming the LRU-oldest retained
+        block (unregister + free) under pressure before failing."""
+        try:
+            return self.alloc.alloc()
+        except NoBlocksError:
+            if not self._retained:
+                raise
+            key, b = self._retained.popitem(last=False)   # LRU oldest
+            del self._registry[key]
+            del self._block_key[b]
+            self.alloc.reclaim(b)
+            return self.alloc.alloc()
+
     def insert(self, slot: int, prompt_key, plen: int,
                padded_len: int, budget: int,
-               share: bool = True) -> List[Placement]:
-        """Allocate/retain the slot's whole chain up front. Atomic: on
-        NoBlocksError every block this call touched is released and the
-        table row is left empty, so the caller can requeue the request."""
+               share: bool = True, lazy: bool = False) -> List[Placement]:
+        """Allocate/retain the slot's chain. Atomic: on NoBlocksError
+        every block this call touched is released and the table row is
+        left empty, so the caller can requeue the request.
+
+        lazy=False reserves the WHOLE chain (prompt + decode budget) up
+        front — a decoding slot can then never fail. lazy=True allocates
+        only the prompt-backed positions; the caller must grow() the
+        chain before each decode write (and preempt on NoBlocksError).
+        """
         assert not self.table[slot].any(), f"slot {slot} table not empty"
         placed: List[Placement] = []
         try:
-            for j, key in self._chain(prompt_key, plen, padded_len, budget,
-                                      share):
+            for j, key, prompt_backed in self._chain(prompt_key, plen,
+                                                     padded_len, budget,
+                                                     share):
+                if lazy and not prompt_backed:
+                    continue
                 if key is not None and key in self._registry:
                     b = self._registry[key]
-                    self.alloc.retain(b)
-                    placed.append(Placement(j, b, True))
+                    if key in self._retained:       # warm ref-0 block
+                        del self._retained[key]
+                        self.alloc.revive(b)
+                        self.retained_hits += 1
+                        placed.append(Placement(j, b, True, revived=True))
+                    else:
+                        self.alloc.retain(b)
+                        placed.append(Placement(j, b, True))
                 else:
-                    b = self.alloc.alloc()
+                    b = self._alloc_block()
                     placed.append(Placement(j, b, False))
                     if key is not None:
                         self._registry[key] = b
                         self._block_key[b] = key
         except NoBlocksError:
-            for p in placed:
-                self._release(p.block)
+            self._rollback(placed)
             raise
         for p in placed:
             self.table[slot, p.chain_pos] = p.block
         return placed
 
+    def _rollback(self, placed: List[Placement]):
+        """Undo an insert's placements exactly. NOT plain _release(): a
+        fresh block registered by THIS insert has no content yet and
+        must never be parked warm — unregister + free it. Revived
+        blocks (content still valid) go back to the retained list they
+        came from, with the hit counter corrected; plain shared retains
+        just drop the extra reference."""
+        for p in placed:
+            if p.revived:
+                self.alloc.release(p.block, keep=True)
+                self._retained[self._block_key[p.block]] = p.block
+                self.retained_hits -= 1
+            elif p.shared:
+                self.alloc.release(p.block)
+            else:
+                key = self._block_key.pop(p.block, None)
+                if key is not None:
+                    del self._registry[key]
+                self.alloc.release(p.block)
+
+    def rollback_insert(self, slot: int, placed: List[Placement]):
+        """Undo a COMPLETED insert whose sibling slot-type failed (the
+        pool's cross-map rollback): clear the table entries this insert
+        wrote, then apply the same exact per-placement rollback the
+        intra-map failure path uses — fresh registrations are freed and
+        unregistered (their device content was never written), revived
+        blocks are re-parked warm, shared retains are dropped."""
+        for p in placed:
+            self.table[slot, p.chain_pos] = NULL_BLOCK
+        self._rollback(placed)
+
+    def grow(self, slot: int, row: int) -> Optional[int]:
+        """Back the chain position covering logical `row` (the next
+        decode write) with a block, allocating on demand.
+
+        Returns the newly allocated block id, or None when the position
+        is already backed (a whole-chain insert, a previous grow, or a
+        ring wrap onto an exclusively-owned prompt block). Raises
+        NoBlocksError when free list AND retained LRU are both empty —
+        the engine's preemption path. Grown blocks hold decode writes
+        only: they are never registered, shared, or retained."""
+        j = (row % self.ring_len) // self.block_size
+        if self.table[slot, j] != NULL_BLOCK:
+            return None
+        b = self._alloc_block()
+        self.table[slot, j] = b
+        return b
+
     def _release(self, block: int) -> bool:
+        """Drop one table reference. A registered prefix block whose last
+        holder leaves is RETAINED (LRU, bounded) instead of freed when
+        retention is on; anything else frees normally. Returns True when
+        the block landed on the free list. (Rollback paths do NOT come
+        through here — see _rollback: a block whose device content was
+        never written must not be parked warm.)"""
+        key = self._block_key.get(block)
+        if (self.retain_limit > 0 and key is not None
+                and self.alloc.ref[block] == 1):
+            self.alloc.release(block, keep=True)
+            self._retained[key] = block         # newest at the end
+            while len(self._retained) > self.retain_limit:
+                k, b = self._retained.popitem(last=False)
+                del self._registry[k]
+                del self._block_key[b]
+                self.alloc.reclaim(b)
+            return False
         freed = self.alloc.release(block)
-        if freed and block in self._block_key:
+        if freed and key is not None:
             del self._registry[self._block_key.pop(block)]
         return freed
 
     def evict(self, slot: int) -> List[int]:
-        """Return the slot's blocks to the pool; yields the freed ids."""
+        """Return the slot's blocks to the pool; yields the freed ids
+        (retained blocks are parked warm, not freed, and not listed).
+        Only for slots whose insert COMPLETED — an insert that failed
+        midway in a sibling slot-type rolls back via rollback_insert."""
         freed = []
         for j in range(self.max_blocks):
             b = int(self.table[slot, j])
@@ -230,13 +447,32 @@ class BlockTableMap:
 
     @property
     def n_shared(self) -> int:
-        """Prefix blocks currently registered for content-address reuse."""
+        """Prefix blocks currently registered for content-address reuse
+        (live shared blocks + warm retained blocks)."""
         return len(self._registry)
 
+    @property
+    def n_retained(self) -> int:
+        """Warm ref-0 prefix blocks on the retained LRU."""
+        return len(self._retained)
+
+    def prefix_warm(self, prompt_key, plen: int, padded_len: int) -> bool:
+        """Does the request's FIRST full prompt block hit the registry
+        (live or retained)? The prefix-affinity scheduling policy's
+        admission signal — cheap: one sha256 over block_size tokens."""
+        bs = self.block_size
+        if plen < bs or padded_len > self.ring_len:
+            return False
+        h = hashlib.sha256(np.array([bs, padded_len], np.int64).tobytes())
+        h.update(np.asarray(prompt_key, np.int64)[:bs].tobytes())
+        return h.digest() in self._registry
+
     def check_invariants(self):
-        """Assert table/refcount/registry consistency: every table
-        reference holds exactly one refcount, multiply-referenced blocks
-        are registered shared prefixes, registered blocks are live."""
+        """Assert table/refcount/registry/retained consistency: every
+        table reference holds exactly one refcount, multiply-referenced
+        blocks are registered shared prefixes, registered blocks are
+        live or retained, retained blocks are never table-referenced
+        (so live writes cannot alias them) and respect the LRU bound."""
         self.alloc.check_invariants()
         counts = np.bincount(self.table.ravel(),
                              minlength=self.alloc.n_blocks)
@@ -246,6 +482,16 @@ class BlockTableMap:
         multi = {b for b in np.nonzero(counts > 1)[0] if b != NULL_BLOCK}
         assert multi <= set(self._block_key), (
             "unshared block referenced by multiple table entries", multi)
-        # registry consistency: every registered block is live
+        # retained list: bounded, ref 0, registered, never in a table
+        assert len(self._retained) <= max(self.retain_limit, 0), (
+            "retained LRU exceeds its bound")
+        assert len(self._retained) == self.alloc.n_retained
+        for key, b in self._retained.items():
+            assert self._registry.get(key) == b, "retained but unregistered"
+            assert counts[b] == 0, f"retained block {b} aliased by a table"
+            assert self.alloc.ref[b] == 0
+        # registry consistency: every registered block is live or retained
         for key, b in self._registry.items():
-            assert self.alloc.ref[b] > 0 and self._block_key.get(b) == key
+            assert self._block_key.get(b) == key
+            assert self.alloc.ref[b] > 0 or key in self._retained, (
+                "registered block neither live nor retained", b)

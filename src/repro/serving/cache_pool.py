@@ -15,17 +15,39 @@ refcounted host-side allocator in serving/block_allocator.py. Identical
 prompt prefixes are content-addressed and stored ONCE — later requests
 retain the existing blocks instead of copying KV — and eviction returns
 blocks to the free list instead of blanking rows, so memory scales with
-*distinct* tokens, not slots x max_len. A request's whole chain
-(prompt + decode budget) is reserved at admission, which makes the pool
-atomic (admission either fully fits or the request stays queued) and
-removes copy-on-write from the decode path: every block a slot writes is
-exclusively owned from the start (blocks that a ring wrap will overwrite
-are simply never shared). SSM/conv state is O(1) per slot and stays
-slot-resident (the mamba leaves keep the dense layout).
+*distinct* tokens, not slots x max_len.
 
-Both pools feed the same fixed-shape jitted decode step: inserts and
-evictions only change block-table VALUES and arena contents, never any
-shape, so the engine never recompiles after warmup.
+Admission comes in two growth modes. `growth="eager"` (the PR 3
+contract) reserves a request's whole chain (prompt + decode budget) up
+front: admission either fully fits or the request stays queued, and a
+decoding slot can never fail. `growth="lazy"` (the scheduler default)
+allocates only the PROMPT blocks at admission; decode blocks are grown
+one at a time as the write cursor crosses block boundaries (`grow()`
+before every decode step), so arena memory tracks tokens actually
+written instead of budgets promised — when budgets exceed typical
+outputs the same arena admits far more concurrent requests. Growth can
+exhaust the arena mid-decode; the ENGINE handles that by preempting a
+victim slot (blocks freed, request requeued with its generated tokens
+as a continuation prefill). Either way copy-on-write never exists:
+sharing eligibility is computed against the full budget, so every block
+a slot writes is exclusively owned from the moment its table entry
+appears (blocks a ring wrap may overwrite are simply never shared).
+SSM/conv state is O(1) per slot and stays slot-resident (the mamba
+leaves keep the dense layout).
+
+Retained prefixes (`retain_blocks > 0`): a registered prefix block whose
+last holder evicts parks on a bounded LRU list with its arena content
+intact instead of returning to the free list — the next request with
+the same prefix revives it copy-free (a `retained_hits` hit), and
+allocation pressure reclaims the LRU tail before ever failing. Popular
+system prompts therefore stay warm ACROSS request waves, not just
+across concurrently-resident requests.
+
+Both pools feed the same fixed-shape jitted decode step: inserts,
+evictions and lazy growth only change block-table VALUES and arena
+contents, never any shape, so the engine never recompiles after warmup
+(growth adds one extra fixed-shape jitted position-invalidation op,
+also compiled once).
 """
 from __future__ import annotations
 
@@ -122,6 +144,19 @@ def _arena_insert(arena: PyTree, req: PyTree, src_rows, dst_blocks) -> PyTree:
             "pos": arena["pos"].at[:, dst_blocks].set(pos)}
 
 
+def _pos_invalidate(pos: PyTree, blocks) -> PyTree:
+    """Set every row of the given arena blocks to position -1.
+
+    blocks is a FIXED-SHAPE (max_batch,) int32 vector padded with 0 (the
+    null block, whose rows are -1 already — rewriting them is a no-op),
+    so lazy growth never retraces: each active slot grows at most one
+    block per slot-type per step. A freshly grown block still holds a
+    previous occupant's rows; its positions must read as invalid before
+    the decode step gathers it (the step then writes the cursor row with
+    a live position, leaving the rest masked)."""
+    return pos.at[:, blocks].set(-1)
+
+
 def _state_insert(state: PyTree, req_state: PyTree, slot, new_index) -> PyTree:
     """Slot-resident state (mamba SSM/conv) row insert + cursor update.
 
@@ -148,7 +183,9 @@ class PagedCachePool:
 
     def __init__(self, arch, max_batch: int, max_len: int, *,
                  block_size: int = 16, slots_budget: Optional[int] = None,
-                 share_prefix: bool = True, attn_kernel: Optional[str] = None):
+                 share_prefix: bool = True, attn_kernel: Optional[str] = None,
+                 growth: str = "eager", retain_blocks: int = 0,
+                 watermark: int = 0):
         """Args:
           arch: decoder Arch (paged serving is decoder-only).
           max_batch: number of decode slots (block-table rows).
@@ -156,7 +193,9 @@ class PagedCachePool:
           block_size: arena block granularity; must divide every
             attention slot-type's ring length (max_len / sliding window).
           slots_budget: arena memory in dense-slot equivalents (None:
-            == max_batch, i.e. exactly the dense pool's memory).
+            == max_batch, i.e. exactly the dense pool's memory). Under
+            lazy growth this is a high-watermark on blocks in use, not a
+            per-request reservation.
           share_prefix: content-address identical prompt prefixes and
             store their blocks once (refcounted, copy-free).
           attn_kernel: which paged decode attention the arenas feed —
@@ -164,6 +203,17 @@ class PagedCachePool:
             Pallas kernel). None adopts arch.cfg.attn_kernel. The pool
             layout is identical either way; this is recorded here so the
             pool and the decode step cannot disagree.
+          growth: "eager" reserves a request's whole chain at admission
+            (atomic; decode can never fail); "lazy" allocates prompt
+            blocks only and grows decode blocks on demand — the caller
+            must grow()/flush_growth() before each decode step and
+            preempt a victim on NoBlocksError.
+          retain_blocks: LRU bound (blocks per attention slot-type) for
+            warm ref-0 prefix blocks kept alive across requests; 0
+            disables retention (PR 3 free-on-last-release).
+          watermark: free blocks the ADMISSION accounting holds back per
+            slot-type so in-flight slots can usually grow without
+            preempting (growth itself ignores it).
         """
         if arch.kind != "decoder":
             raise NotImplementedError("paged serving is decoder-only")
@@ -172,12 +222,16 @@ class PagedCachePool:
         if attn_kernel not in ("xla", "paged"):
             raise ValueError(
                 f"attn_kernel must be 'xla' or 'paged', got {attn_kernel}")
+        if growth not in ("eager", "lazy"):
+            raise ValueError(
+                f"growth must be 'eager' or 'lazy', got {growth}")
         self.attn_kernel = attn_kernel
         self.arch = arch
         self.max_batch = max_batch
         self.max_len = max_len
         self.block_size = block_size
         self.share_prefix = share_prefix
+        self.growth = growth
         budget = slots_budget if slots_budget is not None else max_batch
         layout = dec_lib.paged_layout(arch.cfg, max_len, block_size)
         self.maps = {}
@@ -187,8 +241,10 @@ class PagedCachePool:
                 continue
             si, ring = entry
             n_blocks[si] = budget * (ring // block_size)
-            self.maps[si] = BlockTableMap(max_batch, ring, block_size,
-                                          n_blocks[si] + 1)
+            self.maps[si] = BlockTableMap(
+                max_batch, ring, block_size, n_blocks[si] + 1,
+                retain_limit=min(retain_blocks, max(n_blocks[si] - 1, 0)),
+                watermark=min(watermark, max(n_blocks[si] - 1, 0)))
         full = arch.init_paged_cache(max_batch, max_len,
                                      block_size=block_size,
                                      n_blocks=n_blocks)
@@ -198,6 +254,8 @@ class PagedCachePool:
                                   if e is None)
         self._insert_arena = jax.jit(_arena_insert, donate_argnums=0)
         self._insert_state = jax.jit(_state_insert, donate_argnums=0)
+        self._invalidate = jax.jit(_pos_invalidate, donate_argnums=0)
+        self._pending_grown = {si: [] for si in self.maps}
         # blank batch-1 state used on eviction (hygiene + lengths() diag)
         blank = arch.init_cache(1, max_len, per_slot=True)
         self._blank_state = {
@@ -271,23 +329,40 @@ class PagedCachePool:
 
     # ---------------- admission ----------------
 
-    def blocks_needed(self, prompt, plen: int, padded_len: int,
-                      budget: int) -> dict:
-        """Fresh blocks per attention slot-type an insert would consume
-        (registered shared-prefix blocks count as free) — the engine's
-        admission gate compares this against free_blocks()."""
-        return {si: m.blocks_needed(prompt, plen, padded_len, budget,
-                                    self.share_prefix)
+    def admission_plan(self, prompt, plen: int, padded_len: int,
+                       budget: int) -> dict:
+        """{slot-type: fresh blocks + retained revivals} an insert would
+        consume from the (free + reclaimable-retained) pool — the
+        engine's admission gate compares this against
+        admissible_blocks(). Lazy growth counts only prompt-backed
+        positions; decode positions are grown (and accounted) later."""
+        return {si: sum(m.admission_plan(prompt, plen, padded_len, budget,
+                                         self.share_prefix,
+                                         lazy=self.growth == "lazy"))
                 for si, m in self.maps.items()}
 
+    def admissible_blocks(self) -> dict:
+        """Blocks admission may plan against, per attention slot-type:
+        free + reclaimable retained, minus the growth watermark."""
+        return {si: m.admissible() for si, m in self.maps.items()}
+
     def free_blocks(self) -> dict:
-        """Currently allocatable blocks per attention slot-type."""
+        """Currently allocatable blocks per attention slot-type
+        (excludes retained blocks, which need an explicit reclaim)."""
         return {si: m.alloc.n_free for si, m in self.maps.items()}
+
+    def prefix_warm(self, prompt, plen: int, padded_len: int) -> bool:
+        """Is the request's leading prompt block already resident (live
+        shared or retained) in any attention slot-type's registry? The
+        prefix-affinity scheduling policy's admission signal."""
+        return any(m.prefix_warm(prompt, plen, padded_len)
+                   for m in self.maps.values())
 
     def insert(self, request_cache: PyTree, slot: int, *, prompt,
                plen: int, padded_len: int, budget: int):
-        """Admit a prefilled request: reserve its whole block chain
-        (prompt + decode budget), write the fresh blocks, retain shared
+        """Admit a prefilled request: reserve its block chain (the whole
+        prompt + decode budget under eager growth; prompt blocks only
+        under lazy growth), write the fresh blocks, retain/revive shared
         prefix blocks without copying, and land the slot-resident state.
         Atomic: on NoBlocksError nothing is left allocated and the
         device cache is untouched."""
@@ -297,10 +372,18 @@ class PagedCachePool:
         try:
             for si, m in self.maps.items():
                 placed[si] = m.insert(slot, prompt, plen, padded_len, budget,
-                                      self.share_prefix)
+                                      self.share_prefix,
+                                      lazy=self.growth == "lazy")
         except NoBlocksError:
+            # cross-map rollback: earlier slot-types' placements succeed
+            # before the device write happens, so any prefix block THIS
+            # insert registered holds no real content yet and must be
+            # freed + unregistered, never parked warm (a later revival
+            # is read copy-free and would decode garbage KV); revived
+            # blocks re-park and shared retains drop — exactly the
+            # intra-map failure rollback, applied per placement.
             for si in placed:
-                self.maps[si].evict(slot)
+                self.maps[si].rollback_insert(slot, placed[si])
             raise
         self.shared_hits += sum(p.shared for ps in placed.values()
                                 for p in ps)
@@ -343,6 +426,61 @@ class PagedCachePool:
         self._put_state(self._insert_state(
             self._state_tree(), self._blank_state, slot,
             jnp.asarray(0, jnp.int32)))
+
+    # ---------------- lazy growth ----------------
+
+    def grow(self, slot: int, row: int) -> bool:
+        """Back logical `row` (the slot's next decode write) with a
+        block in every attention slot-type, allocating on demand.
+
+        Returns True when any map allocated a fresh block (its stale
+        positions are buffered for flush_growth(), which MUST run before
+        the next decode step). Raises NoBlocksError when some slot-type
+        cannot allocate even after reclaiming retained blocks — the
+        engine preempts a victim and retries; blocks grown by the
+        partial attempt stay in the table (eviction returns them).
+        Whole-chain (eager) slots always return False: every position is
+        already backed."""
+        grew = False
+        for si, m in self.maps.items():
+            b = m.grow(slot, row)
+            if b is not None:
+                self._pending_grown[si].append(b)
+                grew = True
+        return grew
+
+    def flush_growth(self):
+        """Invalidate the positions of every block grown since the last
+        flush (stale rows from previous occupants must read pos == -1)
+        and re-upload the changed block tables. One fixed-shape jitted
+        scatter per slot-type — (max_batch,) block ids padded with the
+        null block — so growth never retraces the decode step."""
+        if not any(self._pending_grown.values()):
+            return
+        self._dev_tables = None          # host tables changed: re-upload
+        slots = list(self.cache["slots"])
+        for si, grown in self._pending_grown.items():
+            if not grown:
+                continue
+            assert len(grown) <= self.max_batch, (
+                "more than one grown block per slot per step", grown)
+            vec = np.zeros(self.max_batch, np.int32)
+            vec[:len(grown)] = grown
+            slots[si] = {**slots[si],
+                         "pos": self._invalidate(slots[si]["pos"],
+                                                 jnp.asarray(vec))}
+            self._pending_grown[si] = []
+        self.cache = {"slots": tuple(slots), "index": self.cache["index"]}
+
+    @property
+    def retained_hits(self) -> int:
+        """Warm prefix blocks revived from the retained LRU (content
+        survived refcount 0) across all slot-types."""
+        return sum(m.retained_hits for m in self.maps.values())
+
+    def retained_blocks(self) -> dict:
+        """Currently parked warm blocks per attention slot-type."""
+        return {si: m.n_retained for si, m in self.maps.items()}
 
     def lengths(self):
         """Per-slot LOCAL token counts (host array) — diagnostic only."""

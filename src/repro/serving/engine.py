@@ -13,13 +13,36 @@ shared across slots (refcounted, copy-free), and eviction returns blocks
 to a free list — memory scales with distinct tokens instead of
 slots x max_len, so the same arena admits more concurrent requests on
 shared-prefix traffic. `cache="dense"` keeps the PR 2 per-slot-rows pool
-(the differential baseline). Admission is batched: one pass prefills ALL
-queued requests together, bucketed by padded prompt length (one prefill
-compile per bucket instead of per request), and FIFO admission is gated
-on block availability — a request that does not fit stays at the head of
-the queue. Either way, one fixed-shape jitted decode step advances every
-active slot per iteration — no recompiles for the lifetime of the
-engine, block churn included.
+(the differential baseline).
+
+Admission is POLICY-DRIVEN (serving/scheduler.SchedulingPolicy: fifo /
+arrival-deadline / prefix-affinity) and, with the default
+`growth="lazy"`, allocates only a request's PROMPT blocks up front:
+decode blocks are grown one at a time as each slot's write cursor
+crosses block boundaries, so arena memory tracks tokens actually
+written instead of budgets promised (`slots_budget` becomes a
+high-watermark on blocks in use, not a per-request reservation). When
+growth exhausts the arena mid-decode the engine PREEMPTS a victim slot
+(policy-chosen, youngest admission by default): its blocks are freed
+and the request re-enters the queue at its arrival position with its
+generated-so-far tokens as a CONTINUATION PREFILL — on re-admission the
+engine prefills prompt + generated and keeps counting tokens from where
+it left off, which recomputes exactly the math the evicted slot had
+already done, so greedy fp32 output is preempt-invariant (and sampled
+output too: sampler keys depend only on (seed, rid, token index)).
+`growth="eager"` keeps the PR 3 whole-chain reservation (atomic
+admission, decode can never fail, no preemption). Refcount-0 prefix
+blocks park on a bounded LRU retained list instead of freeing
+(`retain_blocks`), so popular system prompts stay warm ACROSS request
+waves and later admissions revive them copy-free. Admission is batched:
+one pass prefills ALL queued requests together, bucketed by padded
+prompt length AND padded to power-of-two group sizes (compile count
+O(buckets x log max_batch) instead of O(buckets x max_batch)), with
+admission gated on block availability — a request that does not fit
+stays at the policy head of the queue. Either way, one fixed-shape
+jitted decode step advances every active slot per iteration — no
+recompiles for the lifetime of the engine, block churn (growth and
+preemption included).
 
 `ServeEngine` — the static baseline (kept for comparison + older
 callers): pads the whole request batch to a common length, prefills once,
@@ -58,9 +81,10 @@ import numpy as np
 from repro.distributed.steps import build_serve_step, greedy_next
 from repro.serving.block_allocator import NoBlocksError
 from repro.serving.cache_pool import CachePool, PagedCachePool
-from repro.serving.metrics import RequestTrace, aggregate
+from repro.serving.metrics import DepthTracker, RequestTrace, aggregate
 from repro.serving.sampler import Sampler, fold_keys
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import (PolicyContext, Scheduler,
+                                     SchedulingPolicy)
 
 
 @dataclasses.dataclass
@@ -133,12 +157,15 @@ def build_first_token_fn(sampler: Optional[Sampler]):
 
 
 def first_tokens(first_fn, sampler: Optional[Sampler], wants_keys: bool,
-                 logits, requests):
+                 logits, requests, token_idx=None):
     """Prefill logits -> first token per request, sampling with each
-    request's token-0 key when a sampler is active.
+    request's token-`token_idx` key when a sampler is active (None: 0,
+    the fresh-admission case; a preempted request's CONTINUATION prefill
+    passes len(generated so far) so the sampled stream resumes exactly
+    where eviction cut it).
 
     Single definition used by BOTH engines: the key derivation
-    (fold_in(request key, token index 0)) must stay bit-identical across
+    (fold_in(request key, token index)) must stay bit-identical across
     them for the differential token-equality guarantee to hold. Returns
     (first tokens (B,) np.int32, request base keys (B, 2) np or None).
     """
@@ -146,8 +173,10 @@ def first_tokens(first_fn, sampler: Optional[Sampler], wants_keys: bool,
         return np.asarray(first_fn(logits)), None
     rkeys = np.stack([np.asarray(sampler.request_key(r.rid))
                       for r in requests])
+    tvec = (np.zeros(len(requests), np.int32) if token_idx is None
+            else np.asarray(token_idx, np.int32))
     toks = first_fn(logits, fold_keys(jnp.asarray(rkeys),
-                                      jnp.zeros(len(requests), jnp.int32)))
+                                      jnp.asarray(tvec)))
     return np.asarray(toks), rkeys
 
 
@@ -210,7 +239,10 @@ class ContinuousEngine:
                  cache: str = "paged", block_size: int = 16,
                  slots_budget: Optional[int] = None,
                  share_prefix: bool = True, sampler=None,
-                 attn_kernel: Optional[str] = None):
+                 attn_kernel: Optional[str] = None,
+                 growth: str = "lazy", sched_policy="fifo",
+                 slo_ms: Optional[float] = None, preempt: bool = True,
+                 retain_blocks: Optional[int] = None, watermark: int = 0):
         """See the class/module docstring for the serving model. Key args:
 
         max_batch: decode slot-pool size (the fixed step batch).
@@ -219,7 +251,9 @@ class ContinuousEngine:
         cache: "paged" (block arenas + shared prefixes, the default) or
             "dense" (PR 2 per-slot-rows pool, the differential baseline).
         block_size / slots_budget / share_prefix: paged-pool sizing, see
-            serving.cache_pool.PagedCachePool.
+            serving.cache_pool.PagedCachePool. Under lazy growth
+            slots_budget is a high-watermark on blocks in use, not a
+            per-request reservation.
         sampler: spec string or serving.sampler.Sampler (None = greedy).
         attn_kernel: paged decode attention implementation — "xla"
             gathers arena[table] into a dense (B, ring_len) K/V copy per
@@ -227,11 +261,31 @@ class ContinuousEngine:
             (kernels/paged_attention_kernel.py). Token-identical output;
             requires cache="paged". None adopts arch.cfg.attn_kernel
             (same convention as PagedCachePool).
+        growth: "lazy" (default) allocates decode blocks on demand and
+            preempts on exhaustion; "eager" reserves whole chains at
+            admission (the PR 3 contract — decode can never fail). Only
+            meaningful for the paged pool.
+        sched_policy: scheduling policy name (fifo | arrival-deadline |
+            prefix-affinity) or a serving.scheduler.SchedulingPolicy.
+        slo_ms: per-request SLO; an active slot running longer than this
+            since admission is finished early with the tokens it has
+            (trace.evicted_slo). None disables SLO eviction.
+        preempt: allow mid-decode preemption under lazy growth. With
+            preemption disabled, growth exhaustion raises instead —
+            differential tests use this to pin lazy == eager output.
+        retain_blocks: LRU bound (blocks per attention slot-type) for
+            warm prefix blocks kept alive after their last holder
+            evicts. None sizes it to one request's worth of full-
+            attention blocks (max_len / block_size); 0 disables.
+        watermark: free blocks admission holds back per slot-type so
+            in-flight slots can usually grow without preempting.
         """
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
         if cache not in ("paged", "dense"):
             raise ValueError(f"cache must be 'paged' or 'dense', got {cache}")
+        if growth not in ("lazy", "eager"):
+            raise ValueError(f"growth must be 'lazy' or 'eager', got {growth}")
         if attn_kernel is None:
             attn_kernel = getattr(arch.cfg, "attn_kernel", "xla")
         if attn_kernel not in ("xla", "paged"):
@@ -256,10 +310,13 @@ class ContinuousEngine:
         self.prefill_bucket = max(prefill_bucket,
                                   prompt_granularity(self.arch.cfg))
         if self.paged:
+            if retain_blocks is None:
+                retain_blocks = max(1, max_len // block_size)
             self.pool = PagedCachePool(
                 self.arch, max_batch, max_len, block_size=block_size,
                 slots_budget=slots_budget, share_prefix=share_prefix,
-                attn_kernel=attn_kernel)
+                attn_kernel=attn_kernel, growth=growth,
+                retain_blocks=retain_blocks, watermark=watermark)
             # slack rows so the padded prompt never reaches the request
             # cache's last row, which stays pos=-1 (the insert's invalid
             # filler — see PagedCachePool._src_rows)
@@ -268,6 +325,9 @@ class ContinuousEngine:
             self.pool = CachePool(self.arch, max_batch, max_len)
             prefill_len = max_len
         self.scheduler = Scheduler(max_batch)
+        slo_s = slo_ms / 1e3 if slo_ms is not None else None
+        self.sched_policy = SchedulingPolicy.parse(sched_policy, slo_s=slo_s)
+        self.preempt_enabled = preempt
         self.on_step = on_step          # callback(dict) per decode step
         self._step = build_serve_step(self.arch.decode_step, mesh,
                                       sampler=self.sampler)
@@ -278,10 +338,16 @@ class ContinuousEngine:
         self._positions = np.full((max_batch, 1), -1, np.int32)
         self._req_keys = np.zeros((max_batch, 2), np.uint32)
         self._emitted: Dict[int, list] = {}     # slot -> generated ids
+        self._resume: Dict[int, list] = {}      # rid -> preempted tokens
+        self._admit_seq: Dict[int, int] = {}    # slot -> admission seq no.
+        self._admit_time: Dict[int, float] = {}
+        self._admit_counter = 0
+        self._depth = DepthTracker()            # queue depth per step
         self._next_rid = 0
         self.steps_run = 0
         self.slot_steps = 0             # decode-step slots that were active
         self.max_concurrent = 0         # peak simultaneously-active slots
+        self.preemptions = 0            # victims evicted for block space
 
     # ---------------- request lifecycle ----------------
 
@@ -305,6 +371,8 @@ class ContinuousEngine:
         req.generated = np.array(self._emitted.pop(slot), np.int32)
         req.trace.done_t = time.perf_counter()
         self.pool.evict(slot)
+        self._admit_seq.pop(slot, None)
+        self._admit_time.pop(slot, None)
         # position -1 marks the slot inactive: its (ignored) decode writes
         # carry an invalid position, which in the paged pool is what keeps
         # the shared null block masked.
@@ -312,41 +380,94 @@ class ContinuousEngine:
         self._tokens[slot, 0] = 0
         return req
 
+    # -- continuation state (preempted requests) ----------------------
+
+    def _resume_of(self, req: Request) -> list:
+        return self._resume.get(req.rid, [])
+
+    def _full_prompt(self, req: Request) -> np.ndarray:
+        """The prompt a (re-)admission prefills: the original prompt
+        plus any tokens generated before a preemption — the continuation
+        prefill recomputes exactly the state the evicted slot held."""
+        resume = self._resume_of(req)
+        if not resume:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(resume, np.int32)])
+
+    def _plen(self, req: Request) -> int:
+        return len(req.prompt) + len(self._resume_of(req))
+
     def _padded_len(self, req: Request) -> int:
-        plen = max(len(req.prompt), 1)
+        plen = max(self._plen(req), 1)
         return -(-plen // self.prefill_bucket) * self.prefill_bucket
+
+    def _policy_ctx(self, now: Optional[float] = None,
+                    warm_cache: Optional[dict] = None) -> PolicyContext:
+        """Immutable decision-point snapshot for the scheduling policy.
+
+        warm_cache (rid -> bool) memoizes the sha256 warm-prefix probes
+        across the iterations of ONE admission pass: a request's answer
+        is stable within the pass (admissions only ADD warmth, and a
+        stale False merely falls back to arrival order), so the probe
+        cost is O(queue) per pass instead of O(queue x admissions)."""
+        warm = None
+        if self.paged and self.pool.maps:
+            def warm(req):
+                if warm_cache is not None and req.rid in warm_cache:
+                    return warm_cache[req.rid]
+                w = self.pool.prefix_warm(self._full_prompt(req),
+                                          self._plen(req),
+                                          self._padded_len(req))
+                if warm_cache is not None:
+                    warm_cache[req.rid] = w
+                return w
+        return PolicyContext(
+            now=time.perf_counter() if now is None else now,
+            admit_seq=self._admit_seq, admit_t=self._admit_time,
+            active=self.scheduler.active,
+            submit_t=lambda r: r.trace.submit_t, prefix_warm=warm)
 
     def _fits(self, req: Request, pending: dict):
         """Admission gate for the paged pool: would this request's block
-        chain fit next to the admissions already planned this pass? The
-        count assumes no sharing with the in-flight plans (conservative:
-        their prefix blocks are not registered yet), so a True can never
-        turn into an allocator failure."""
+        plan fit next to the admissions already planned this pass? Lazy
+        growth plans prompt blocks only; eager plans the whole chain.
+        Retained warm blocks count as available (they are reclaimed
+        under pressure) minus the growth watermark. The count assumes no
+        sharing with the in-flight plans (conservative: their prefix
+        blocks are not registered yet), so a True can never turn into an
+        allocator failure."""
         if not self.paged:
             return True, None
-        need = self.pool.blocks_needed(req.prompt, len(req.prompt),
-                                       self._padded_len(req),
-                                       req.max_new_tokens)
-        free = self.pool.free_blocks()
-        ok = all(n + pending.get(si, 0) <= free[si]
+        budget = req.max_new_tokens - len(self._resume_of(req))
+        need = self.pool.admission_plan(self._full_prompt(req),
+                                        self._plen(req),
+                                        self._padded_len(req), budget)
+        avail = self.pool.admissible_blocks()
+        ok = all(n + pending.get(si, 0) <= avail[si]
                  for si, n in need.items())
         return ok, need
 
     def _admit(self):
-        """Fill free slots from the queue: ONE batched prefill per padded-
-        length bucket covers every admitted request, then each cache row
-        is inserted into its slot. Runs between decode steps (and loops
-        when 1-token requests complete at admission, freeing slots)."""
+        """Fill free slots from the queue in POLICY order: ONE batched
+        prefill per padded-length bucket covers every admitted request
+        (group sizes padded to powers of two so prefill compile count is
+        O(log max_batch) per bucket), then each cache row is inserted
+        into its slot. Runs between decode steps (and loops when 1-token
+        requests complete at admission, freeing slots)."""
         while True:
-            pairs, pending = [], {}
+            pairs, pending, warm_cache = [], {}, {}
             while self.scheduler.free_slots and self.scheduler.queued:
-                req = self.scheduler.peek()
+                i = self.sched_policy.pick(
+                    self.scheduler.queue_items(),
+                    self._policy_ctx(warm_cache=warm_cache))
+                req = self.scheduler.peek(i)
                 ok, need = self._fits(req, pending)
                 if not ok:
-                    break          # FIFO head-of-line: wait for evictions
+                    break   # policy head-of-line: wait for evictions
                 for si, n in (need or {}).items():
                     pending[si] = pending.get(si, 0) + n
-                pairs.append(self.scheduler.assign_one())
+                pairs.append(self.scheduler.assign_at(i))
             if not pairs:
                 return
             groups: Dict[int, list] = {}
@@ -355,51 +476,135 @@ class ContinuousEngine:
                     (slot, req))
             failed = []
             for padded, grp in groups.items():
+                prompts = [self._full_prompt(r) for _, r in grp]
+                # pad the admission group to a power-of-two size by
+                # replicating the last request (valid compute, outputs
+                # discarded): prefill shapes per bucket become (2^k,
+                # padded) for k <= ceil(log2 max_batch) — a bounded
+                # compile set instead of one compile per group size
+                n = len(grp)
+                n_pad = 1 << (n - 1).bit_length()
+                pad_reqs = [r for _, r in grp] + [grp[-1][1]] * (n_pad - n)
                 tokens, positions, lens = pad_prompts(
-                    [r.prompt for _, r in grp], self.prefill_bucket,
-                    pad_len=padded)
+                    prompts + [prompts[-1]] * (n_pad - n),
+                    self.prefill_bucket, pad_len=padded)
                 logits, batch_cache = self._prefill(
                     self.params, jnp.asarray(tokens), jnp.asarray(positions))
                 first, rkeys = first_tokens(
                     self._first, self.sampler, self._wants_keys, logits,
-                    [req for _, req in grp])
+                    pad_reqs,
+                    token_idx=[len(self._resume_of(r)) for r in pad_reqs])
                 now = time.perf_counter()
                 for g, (slot, req) in enumerate(grp):
                     req_cache = _slice_request(batch_cache, g)
+                    resume = self._resume_of(req)
                     try:
                         if self.paged:
                             self.pool.insert(
-                                req_cache, slot, prompt=req.prompt,
-                                plen=len(req.prompt), padded_len=padded,
-                                budget=req.max_new_tokens)
+                                req_cache, slot, prompt=prompts[g],
+                                plen=len(prompts[g]), padded_len=padded,
+                                budget=req.max_new_tokens - len(resume))
                         else:
                             self.pool.insert(req_cache, slot)
                     except NoBlocksError:
                         # gate miscount cannot happen by construction, but
-                        # stay safe: put the request back, FIFO intact
-                        failed.append((slot, req))
+                        # stay safe: put the request back, arrival order
+                        # intact (the continuation state stays parked)
+                        failed.append(slot)
                         continue
+                    self._resume.pop(req.rid, None)
                     t0 = int(first[g])
-                    req.trace.admit_t = now
+                    if req.trace.admit_t is None:   # keep the FIRST
+                        req.trace.admit_t = now     # admission for TTFT
                     req.trace.mark_token(now)
-                    self._emitted[slot] = [t0]
+                    self._emitted[slot] = list(resume) + [t0]
                     self._tokens[slot, 0] = t0
                     self._positions[slot, 0] = int(lens[g])
+                    self._admit_counter += 1
+                    self._admit_seq[slot] = self._admit_counter
+                    self._admit_time[slot] = now
                     if rkeys is not None:
                         self._req_keys[slot] = rkeys[g]
                     if len(self._emitted[slot]) >= req.max_new_tokens:
-                        self._finish(slot)   # 1-token request: done now
-            for slot, req in reversed(failed):
+                        self._finish(slot)   # budget reached: done now
+            for slot in reversed(failed):
                 self.scheduler.requeue(slot)
             if failed:
                 return
 
+    def _preempt(self, slot: int):
+        """Evict a mid-decode victim: blocks freed, generated-so-far
+        tokens parked as continuation state, request requeued at its
+        arrival position. The next admission prefills prompt + generated
+        and keeps counting tokens where this slot stopped."""
+        req = self.scheduler.active[slot]
+        self._resume[req.rid] = self._emitted.pop(slot)
+        req.trace.preemptions += 1
+        self.preemptions += 1
+        self.pool.evict(slot)
+        self.scheduler.preempt(slot)
+        self._admit_seq.pop(slot, None)
+        self._admit_time.pop(slot, None)
+        self._positions[slot, 0] = -1
+        self._tokens[slot, 0] = 0
+
+    def _grow_active(self):
+        """Back every active slot's next decode write with a block (lazy
+        growth), preempting policy-chosen victims when the arena (free
+        list + reclaimable retained blocks) exhausts. Oldest admissions
+        grow first and the default victim is the youngest, so the oldest
+        request always makes progress — no livelock."""
+        for slot in sorted(self.scheduler.active,
+                           key=lambda s: self._admit_seq.get(s, 0)):
+            if slot not in self.scheduler.active:
+                continue            # preempted as a victim earlier in loop
+            row = int(self._positions[slot, 0])
+            while True:
+                try:
+                    self.pool.grow(slot, row)
+                    break
+                except NoBlocksError:
+                    if not self.preempt_enabled:
+                        raise RuntimeError(
+                            "paged arena exhausted mid-decode with "
+                            "preemption disabled: raise slots_budget / "
+                            "watermark, or enable preempt")
+                    candidates = sorted(self.scheduler.active)
+                    victim = self.sched_policy.victim(candidates,
+                                                      self._policy_ctx())
+                    if victim == slot and len(candidates) == 1:
+                        raise RuntimeError(
+                            "single active slot cannot grow: the arena "
+                            "is smaller than one request's chain (raise "
+                            "slots_budget)")
+                    self._preempt(victim)
+                    if victim == slot:
+                        break       # this slot was the sacrifice
+
+    def _evict_overdue(self):
+        """SLO eviction of stuck slots: any active request older (since
+        admission) than the policy's SLO is finished early with the
+        tokens it has, freeing the slot for queued work."""
+        if self.sched_policy.slo_s is None or not self.scheduler.active:
+            return
+        ctx = self._policy_ctx()
+        for slot in sorted(self.scheduler.active):
+            if self.sched_policy.overdue(slot, ctx):
+                self.scheduler.active[slot].trace.evicted_slo = True
+                self._finish(slot)
+
     def step(self) -> bool:
-        """One engine iteration: admissions, then one pooled decode step.
-        Returns False when no work remains."""
+        """One engine iteration: SLO evictions, admissions, lazy chain
+        growth (with preemption), then one pooled decode step. Returns
+        False when no work remains."""
+        self._evict_overdue()
         self._admit()
+        if self.paged and self.pool.growth == "lazy":
+            self._grow_active()
+            self.pool.flush_growth()
         active = sorted(self.scheduler.active)
         self.max_concurrent = max(self.max_concurrent, len(active))
+        self._depth.sample(self.scheduler.queued)
         if not active:
             if self.scheduler.queued:
                 req = self.scheduler.peek()
@@ -440,7 +645,8 @@ class ContinuousEngine:
                 self._finish(slot)
         if self.on_step is not None:
             self.on_step({"step": self.steps_run, "active": len(active),
-                          "queued": self.scheduler.queued})
+                          "queued": self.scheduler.queued,
+                          "preemptions": self.preemptions})
         return self.scheduler.has_work
 
     def run(self, requests: Optional[List[Request]] = None) -> List[Request]:
@@ -460,7 +666,8 @@ class ContinuousEngine:
     def report(self, wall_s: float) -> dict:
         """Aggregate throughput/latency stats for completed requests:
         tokens/s, TTFT/ITL percentiles, slot utilization, decode-step
-        count, peak concurrency, and (paged) shared-prefix block hits."""
+        count, peak concurrency, queue-depth stats, preemption count,
+        and (paged) shared/retained prefix block hits."""
         done = self.scheduler.completed
         stats = aggregate([r.trace for r in done], wall_s,
                           sum(len(r.generated) for r in done))
@@ -468,8 +675,13 @@ class ContinuousEngine:
         stats["slot_utilization"] = self.slot_steps / denom
         stats["decode_steps"] = self.steps_run
         stats["max_concurrent"] = self.max_concurrent
+        stats["preemptions"] = self.preemptions
+        stats["sched_policy"] = self.sched_policy.name
+        stats.update(self._depth.stats())
         if self.paged:
+            stats["growth"] = self.pool.growth
             stats["shared_block_hits"] = self.pool.shared_hits
+            stats["retained_block_hits"] = self.pool.retained_hits
         return stats
 
 

@@ -6,11 +6,20 @@ generated token. `aggregate()` folds a set of traces into the numbers a
 serving dashboard wants:
 
   tokens_per_s   generated tokens / wall
-  ttft_*_ms      time-to-first-token percentiles (submit -> first token)
+  ttft_*_ms      time-to-first-token percentiles (submit -> first token;
+                 includes queue wait, so under bursty arrivals this is
+                 the number scheduling policy changes move)
   itl_*_ms       inter-token latency percentiles (gaps between tokens of
                  the same request — the per-token latency of the decode
                  loop, which is what slot reuse and low-precision decode
                  are meant to shrink)
+
+The trace also counts scheduler interventions per request: `preemptions`
+(times the request was evicted mid-decode and requeued as a continuation
+prefill) and `evicted_slo` (the slot blew its SLO and was finished
+early with the tokens it had). `DepthTracker` folds per-step queue-depth
+samples into max/mean/p50 — the congestion signal the policy-driven
+scheduler reports next to TTFT.
 
 No jnp here: this is pure host bookkeeping and must stay off the decode
 hot path.
@@ -29,6 +38,8 @@ class RequestTrace:
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
     token_ts: List[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0        # mid-decode evict + continuation requeues
+    evicted_slo: bool = False   # finished early by SLO eviction
 
     def mark_submit(self, now=None):
         self.submit_t = time.perf_counter() if now is None else now
@@ -59,6 +70,41 @@ def percentile(xs: List[float], q: float) -> float:
     return xs[k]
 
 
+class DepthTracker:
+    """Folds per-step queue-depth samples into max/mean/p50 with O(1)
+    memory per sample: max/sum/count stream, and the p50 reads a
+    bounded ring of the most recent samples (a long-lived engine takes
+    one sample per decode step forever — an unbounded list would be a
+    slow leak, and recent depth is the operationally relevant median
+    anyway)."""
+
+    RING = 4096        # p50 window; max/mean remain exact over all time
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0
+        self.peak = 0
+        self._ring: List[int] = [0] * self.RING
+        self._i = 0
+
+    def sample(self, depth: int):
+        depth = int(depth)
+        self.count += 1
+        self.total += depth
+        if depth > self.peak:
+            self.peak = depth
+        self._ring[self._i % self.RING] = depth
+        self._i += 1
+
+    def stats(self, prefix: str = "queue_depth") -> Dict[str, float]:
+        recent = self._ring[:min(self.count, self.RING)]
+        return {
+            f"{prefix}_max": self.peak,
+            f"{prefix}_mean": self.total / self.count if self.count else 0.0,
+            f"{prefix}_p50": percentile([float(x) for x in recent], 50),
+        }
+
+
 def aggregate(traces: List[RequestTrace], wall_s: float,
               n_tokens: int) -> Dict[str, float]:
     ttfts = [t.ttft_s for t in traces if t.ttft_s is not None]
@@ -74,4 +120,6 @@ def aggregate(traces: List[RequestTrace], wall_s: float,
         "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
         "itl_p50_ms": percentile(itls, 50) * 1e3,
         "itl_p99_ms": percentile(itls, 99) * 1e3,
+        "preemptions": sum(t.preemptions for t in traces),
+        "slo_evictions": sum(1 for t in traces if t.evicted_slo),
     }

@@ -1,20 +1,53 @@
-"""Slot scheduler for the continuous-batching engine.
+"""Slot scheduler + scheduling policies for the continuous-batching engine.
 
-Host-side FIFO admission control over a fixed pool of decode slots. The
-scheduler owns the slot <-> request mapping and nothing else: no device
-state, no timing — which keeps its invariants (the ones the property tests
-check) easy to state:
+Host-side admission control over a fixed pool of decode slots, split in
+two layers:
+
+`Scheduler` owns the MECHANISM: the slot <-> request mapping, a ticketed
+admission queue, and the preempt/requeue path. No device state, no
+timing — which keeps its invariants (the ones the property tests check)
+easy to state:
 
   * a slot is either free or bound to exactly one in-flight request;
   * a request is queued, active in exactly one slot, or completed;
-  * admissions are FIFO: requests enter slots in submission order;
-  * completion frees the slot for the next queued request.
+  * every queued request keeps its original arrival ticket; preemption
+    and requeue re-insert BY TICKET, so arrival order is never lost no
+    matter how admission reorders departures from the queue;
+  * completion frees the slot for the next admitted request.
+
+`SchedulingPolicy` owns the POLICY: which queued request to admit next,
+which active slot to preempt when lazy growth exhausts the arena, and
+when an active slot has blown its SLO and should be evicted early.
+Policies see an immutable snapshot (the queue, plus a `PolicyContext` of
+admission times/order and a warm-prefix probe) and return indices — they
+never mutate scheduler state, so any policy composes with the same
+engine invariants:
+
+  fifo             admit in arrival order; preempt the youngest
+                   admission (it has the least work to redo).
+  arrival-deadline admit by earliest deadline (arrival + SLO); preempt
+                   the slot with the latest deadline. With a uniform SLO
+                   this is arrival-time-aware FIFO that also ranks
+                   preemption victims by arrival.
+  prefix-affinity  admit the first queued request whose leading prompt
+                   block is already resident (live or retained) in the
+                   paged pool — maximizing copy-free prefix reuse —
+                   falling back to arrival order; preempt the youngest.
+
+SLO eviction (`slo_s`) is orthogonal to the admission order: any policy
+evicts a slot whose request has been running longer than the SLO since
+admission (the engine finishes it early with the tokens it has, flagging
+`trace.evicted_slo`).
 """
 from __future__ import annotations
 
+import bisect
 import collections
+import copy
+import dataclasses
 import itertools
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 
 class SchedulerError(RuntimeError):
@@ -22,24 +55,30 @@ class SchedulerError(RuntimeError):
 
 
 class Scheduler:
-    """Fixed-capacity slot assignment with a FIFO admission queue."""
+    """Fixed-capacity slot assignment with a ticketed admission queue.
+
+    The queue holds (ticket, request) pairs; tickets are assigned once at
+    submit() and travel with the request through any number of
+    preempt()/requeue() round-trips, so "arrival order" stays a stable,
+    policy-independent notion."""
 
     def __init__(self, n_slots: int):
         if n_slots <= 0:
             raise ValueError(f"n_slots must be positive, got {n_slots}")
         self.n_slots = n_slots
         self._free: Deque[int] = collections.deque(range(n_slots))
-        self._queue: Deque[Any] = collections.deque()
+        self._queue: List[Tuple[int, Any]] = []   # sorted by ticket
         self.active: Dict[int, Any] = {}
         self.completed: List[Any] = []
         self._seq = itertools.count()
+        self._slot_ticket: Dict[int, int] = {}    # slot -> arrival ticket
 
     # ---------------- queue side ----------------
 
     def submit(self, request) -> int:
-        """Enqueue a request; returns its admission ticket (FIFO order)."""
+        """Enqueue a request; returns its arrival ticket (FIFO order)."""
         ticket = next(self._seq)
-        self._queue.append(request)
+        self._queue.append((ticket, request))
         return ticket
 
     @property
@@ -54,25 +93,36 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self._queue or self.active)
 
+    def queue_items(self) -> Sequence[Tuple[int, Any]]:
+        """Immutable snapshot of (ticket, request) pairs in arrival
+        order — what a SchedulingPolicy ranks for admission."""
+        return tuple(self._queue)
+
     # ---------------- slot side ----------------
 
-    def peek(self):
-        """Head of the admission queue (None when empty) — lets the
-        engine gate admission on cache-pool capacity without breaking
-        FIFO order."""
-        return self._queue[0] if self._queue else None
+    def peek(self, i: int = 0):
+        """The i-th queued request in arrival order (None when out of
+        range) — lets the engine gate admission on cache-pool capacity
+        without dequeuing."""
+        return self._queue[i][1] if 0 <= i < len(self._queue) else None
 
-    def assign_one(self) -> Optional[Tuple[int, Any]]:
-        """Bind the queue head to one free slot, or None if either side
-        is empty."""
-        if not (self._free and self._queue):
+    def assign_at(self, i: int) -> Optional[Tuple[int, Any]]:
+        """Bind the i-th queued request (arrival order; a policy's pick)
+        to one free slot, or None if either side is empty."""
+        if not self._free or not (0 <= i < len(self._queue)):
             return None
         slot = self._free.popleft()
         if slot in self.active:  # corrupted free list — refuse to reuse
             raise SchedulerError(f"slot {slot} free but active")
-        req = self._queue.popleft()
+        ticket, req = self._queue.pop(i)
         self.active[slot] = req
+        self._slot_ticket[slot] = ticket
         return slot, req
+
+    def assign_one(self) -> Optional[Tuple[int, Any]]:
+        """Bind the queue head to one free slot (FIFO), or None if
+        either side is empty."""
+        return self.assign_at(0)
 
     def assign(self) -> List[Tuple[int, Any]]:
         """Bind queued requests to free slots (FIFO). Returns the new
@@ -84,22 +134,40 @@ class Scheduler:
                 return pairs
             pairs.append(pair)
 
-    def requeue(self, slot: int):
-        """Undo an assignment (admission failed downstream, e.g. the
-        paged pool ran out of blocks): the request returns to the FRONT
-        of the queue — FIFO order is preserved — and the slot frees."""
+    def _reinsert(self, slot: int) -> Any:
         if slot not in self.active:
             raise SchedulerError(f"requeue() on inactive slot {slot}")
         req = self.active.pop(slot)
+        ticket = self._slot_ticket.pop(slot)
         self._free.append(slot)
-        self._queue.appendleft(req)
+        bisect.insort(self._queue, (ticket, req))
         return req
+
+    def requeue(self, slot: int):
+        """Undo an assignment (admission failed downstream, e.g. the
+        paged pool ran out of blocks): the request re-enters the queue
+        at its ARRIVAL-TICKET position — arrival order is preserved —
+        and the slot frees."""
+        return self._reinsert(slot)
+
+    def preempt(self, slot: int):
+        """Evict a mid-decode victim so its blocks can serve someone
+        else: same mechanics as requeue() (ticket-ordered re-entry), a
+        distinct name so call sites read as what they are. The ENGINE
+        owns the continuation state (generated-so-far tokens)."""
+        return self._reinsert(slot)
+
+    def admitted_order(self, slot: int) -> int:
+        """The active slot's arrival ticket (stable tie-break for
+        victim selection)."""
+        return self._slot_ticket[slot]
 
     def complete(self, slot: int):
         """Release a slot whose request finished; returns the request."""
         if slot not in self.active:
             raise SchedulerError(f"complete() on inactive slot {slot}")
         req = self.active.pop(slot)
+        self._slot_ticket.pop(slot, None)
         self._free.append(slot)
         self.completed.append(req)
         return req
@@ -113,3 +181,134 @@ class Scheduler:
         assert len(free) + len(self.active) == self.n_slots, (
             "slots leaked", free, list(self.active))
         assert all(0 <= s < self.n_slots for s in free + list(self.active))
+        assert set(self._slot_ticket) == set(self.active), (
+            "slot tickets out of sync with active slots")
+        tickets = [t for t, _ in self._queue]
+        assert tickets == sorted(tickets), "queue not in arrival order"
+        assert len(set(tickets)) == len(tickets), "duplicate tickets"
+
+
+# ---------------------------------------------------------------------------
+# scheduling policies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PolicyContext:
+    """Immutable view the engine hands a policy each decision point.
+
+    now: wall-clock seconds (time.perf_counter domain).
+    admit_seq: slot -> monotone admission sequence number (higher =
+        admitted later; survives slot reuse).
+    admit_t: slot -> admission wall-clock time (RESETS on every
+        re-admission of a preempted request — use submit_t for
+        arrival/deadline ranking, which a continuation keeps).
+    active: slot -> in-flight request (victim selection ranks these).
+    submit_t: callable(request) -> submission wall-clock time.
+    prefix_warm: callable(request) -> bool, True when the request's
+        leading prompt block is already resident in the paged pool
+        (None when the pool cannot answer, e.g. the dense pool).
+    """
+    now: float = 0.0
+    admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
+    admit_t: Dict[int, float] = dataclasses.field(default_factory=dict)
+    active: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    submit_t: Callable[[Any], float] = lambda req: 0.0
+    prefix_warm: Optional[Callable[[Any], bool]] = None
+
+
+class SchedulingPolicy:
+    """Base policy: FIFO admission, youngest-admission victim, SLO
+    eviction when `slo_s` is set. Subclasses override `pick` and/or
+    `victim`; `parse` maps the CLI spec strings."""
+
+    name = "fifo"
+
+    def __init__(self, slo_s: Optional[float] = None):
+        if slo_s is not None and slo_s <= 0:
+            raise ValueError(f"slo_s must be positive, got {slo_s}")
+        self.slo_s = slo_s
+
+    # -- admission: index into queue_items() to admit next ------------
+    def pick(self, queue: Sequence[Tuple[int, Any]],
+             ctx: PolicyContext) -> int:
+        return 0
+
+    # -- preemption: which active slot to sacrifice -------------------
+    def victim(self, slots: Sequence[int], ctx: PolicyContext) -> int:
+        """Default: the youngest admission — it has generated the least
+        (its continuation prefill redoes the least work) and preempting
+        it keeps arrival order intact when it re-enters the queue."""
+        return max(slots, key=lambda s: ctx.admit_seq.get(s, -1))
+
+    # -- SLO: should this active slot be evicted early? ---------------
+    def overdue(self, slot: int, ctx: PolicyContext) -> bool:
+        if self.slo_s is None:
+            return False
+        return ctx.now - ctx.admit_t.get(slot, ctx.now) > self.slo_s
+
+    @classmethod
+    def parse(cls, spec, slo_s: Optional[float] = None
+              ) -> "SchedulingPolicy":
+        """Policy instance from a spec: an existing policy passes
+        through — COPIED if an slo_s must be attached, so one policy
+        object shared across engines never inherits another engine's
+        SLO; a name in {fifo, arrival-deadline, prefix-affinity}
+        constructs one."""
+        if isinstance(spec, SchedulingPolicy):
+            if slo_s is not None and spec.slo_s is None:
+                spec = copy.copy(spec)
+                spec.slo_s = slo_s
+            return spec
+        if spec is None:
+            spec = "fifo"
+        policies = {p.name: p for p in
+                    (SchedulingPolicy, ArrivalDeadlinePolicy,
+                     PrefixAffinityPolicy)}
+        if spec not in policies:
+            raise ValueError(
+                f"unknown scheduling policy {spec!r}: "
+                f"expected one of {sorted(policies)}")
+        return policies[spec](slo_s=slo_s)
+
+
+class ArrivalDeadlinePolicy(SchedulingPolicy):
+    """Earliest-deadline-first admission over deadline = submit + SLO.
+
+    With one global SLO this equals arrival-time order — but unlike raw
+    FIFO it stays arrival-aware through preemption churn (a continuation
+    keeps its original submit time, hence its original deadline) and
+    ranks preemption victims by SLACK: the latest SUBMIT time (= latest
+    deadline) has the most room to absorb a requeue. Ranking by
+    admission time would invert this under churn — a re-admitted
+    continuation always carries the newest admit_t and would be
+    re-preempted forever."""
+
+    name = "arrival-deadline"
+
+    def pick(self, queue, ctx):
+        return min(range(len(queue)),
+                   key=lambda i: (ctx.submit_t(queue[i][1]), queue[i][0]))
+
+    def victim(self, slots, ctx):
+        def deadline(s):
+            req = ctx.active.get(s)
+            return (ctx.submit_t(req) if req is not None else 0.0,
+                    ctx.admit_seq.get(s, -1))
+        return max(slots, key=deadline)
+
+
+class PrefixAffinityPolicy(SchedulingPolicy):
+    """Admit the first queued request whose leading prompt block is
+    already resident in the paged pool (live shared or retained) —
+    turning warm prefixes into copy-free admissions while they are
+    still warm — falling back to arrival order when nothing is warm or
+    the pool cannot answer."""
+
+    name = "prefix-affinity"
+
+    def pick(self, queue, ctx):
+        if ctx.prefix_warm is not None:
+            for i, (_, req) in enumerate(queue):
+                if ctx.prefix_warm(req):
+                    return i
+        return 0

@@ -34,17 +34,36 @@ def setup_serving_arch(name):
     return _arch_cache[name]
 
 
-def make_serving_requests(arch, spec, seed=1, prefix=0):
-    """spec: list of (prompt_len, max_new_tokens). Prompts are a pure
-    function of (seed, index) so a request run solo is byte-identical to
-    the same request inside any batch; prefix > 0 prepends that many
-    COMMON tokens (the shared system prompt the paged pool dedups)."""
+def make_serving_requests(arch, spec, seed=1, prefix=0, max_new_tokens=None,
+                          prefix_seed=None):
+    """spec: list of (prompt_len, max_new_tokens) pairs, or of bare
+    prompt lengths with an EXPLICIT uniform `max_new_tokens` — every
+    request always carries an explicit finite budget, which is what the
+    lazy-growth differentials rely on (the budget IS the reservation /
+    growth horizon; an implicit default would silently change what the
+    allocator plans). Prompts are a pure function of (seed, index) so a
+    request run solo is byte-identical to the same request inside any
+    batch; prefix > 0 prepends that many COMMON tokens (the shared
+    system prompt the paged pool dedups). prefix_seed (default: seed)
+    decouples the prefix stream from the tails, so disjoint request
+    waves can carry the SAME system prompt — the retained-LRU tests'
+    across-wave revival shape."""
     from repro.serving import Request
-    rng = np.random.default_rng([seed, 999])
+    norm = []
+    for entry in spec:
+        if isinstance(entry, tuple):
+            norm.append(entry)
+        else:
+            if max_new_tokens is None:
+                raise ValueError(
+                    "bare prompt lengths need an explicit max_new_tokens")
+            norm.append((entry, max_new_tokens))
+    rng = np.random.default_rng(
+        [seed if prefix_seed is None else prefix_seed, 999])
     common = rng.integers(5, arch.cfg.vocab, size=prefix).astype(np.int32)
     return [Request(prompt=np.concatenate([
                         common,
                         np.random.default_rng([seed, i]).integers(
                             5, arch.cfg.vocab, size=n).astype(np.int32)]),
                     max_new_tokens=m)
-            for i, (n, m) in enumerate(spec)]
+            for i, (n, m) in enumerate(norm)]

@@ -52,6 +52,25 @@ def test_docs_exist_and_are_linked():
             f"README does not link docs/{name}")
 
 
+def test_serving_doc_covers_scheduler_contract():
+    """The lazy-growth/scheduling rewrite of docs/serving.md must keep
+    its section anchors AND runnable fences (the fences themselves are
+    smoke-checked by the dynamic tests below — this pins that they
+    exist, so a future edit cannot silently drop the examples)."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    for anchor in ("Lazy chain growth", "When preemption fires",
+                   "Retained prefixes survive refcount 0",
+                   "## Scheduling policies"):
+        assert anchor in text, f"serving.md lost its '{anchor}' section"
+    sched = text.split("## Scheduling policies", 1)[1]
+    sched = sched.split("## Differential guarantees", 1)[0]
+    path = ROOT / "docs" / "serving.md"
+    assert any(code in sched for _, code in _fences(path, "python")), (
+        "scheduling section lost its python example")
+    assert any(code in sched for _, code in _fences(path, "bash")), (
+        "scheduling section lost its bash example")
+
+
 @pytest.mark.parametrize("path,line,code", _cases("python"))
 def test_python_fences_parse(path, line, code):
     try:

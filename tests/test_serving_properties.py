@@ -50,7 +50,7 @@ def test_scheduler_invariants_under_random_schedules(n_slots, n_requests,
         sched.check_invariants()
         # a request is in at most one place
         states = (list(sched.active.values()) + sched.completed
-                  + list(sched._queue) + pending)
+                  + [r for _, r in sched.queue_items()] + pending)
         assert len(states) == n_requests
         assert len(set(states)) == n_requests
     # drain: everything submitted eventually completes, exactly once
@@ -167,6 +167,148 @@ def test_block_table_map_random_insert_evict_never_leaks(data, max_batch,
     m.check_invariants()
     assert m.alloc.n_free == n_blocks - 1 and m.alloc.n_live == 0
     assert m.n_shared == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_slots=st.integers(1, 4),
+       n_requests=st.integers(0, 12),
+       choices=st.lists(st.integers(0, 2 ** 16), min_size=0, max_size=120))
+def test_scheduler_preempt_requeue_preserves_arrival_order(n_slots,
+                                                           n_requests,
+                                                           choices):
+    """Random interleavings of submit/assign/PREEMPT/complete: a
+    preempted request re-enters the queue at its arrival-ticket
+    position, so the queue is always sorted by original submission
+    index no matter how many evict/requeue round-trips happen, and
+    draining completes every request exactly once."""
+    sched = Scheduler(n_slots)
+    pending = [f"r{i:04d}" for i in range(n_requests)]
+    it = iter(choices)
+    for c in it:
+        op = c % 4
+        if op == 0 and pending:
+            sched.submit(pending.pop(0))
+        elif op == 1:
+            sched.assign()
+        elif op == 2 and sched.active:
+            slots = sorted(sched.active)
+            sched.preempt(slots[next(it, 0) % len(slots)])
+        elif op == 3 and sched.active:
+            slots = sorted(sched.active)
+            sched.complete(slots[next(it, 0) % len(slots)])
+        sched.check_invariants()
+        queued = [r for _, r in sched.queue_items()]
+        assert queued == sorted(queued), (
+            "preempt/requeue broke arrival order", queued)
+    while pending:
+        sched.submit(pending.pop(0))
+    while sched.has_work:
+        sched.assign()
+        for slot in sorted(sched.active):
+            sched.complete(slot)
+        sched.check_invariants()
+    assert sorted(sched.completed) == [f"r{i:04d}" for i in range(n_requests)]
+
+
+@pytest.mark.paged
+@pytest.mark.sched
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(),
+       max_batch=st.integers(1, 4),
+       max_blocks=st.integers(1, 5),
+       extra_blocks=st.integers(0, 12),
+       retain_limit=st.integers(0, 4))
+def test_block_table_map_lazy_grow_preempt_retained_lru(data, max_batch,
+                                                        max_blocks,
+                                                        extra_blocks,
+                                                        retain_limit):
+    """The lazy-growth/retained-LRU contract under random interleavings
+    of lazy and eager inserts, on-demand grows, and evict-as-preempt:
+
+      * the admission accounting is exact: insert fails iff the plan
+        (fresh + retained hits) exceeds free + reclaimable-retained,
+        and failure rolls back completely;
+      * fresh placements + revivals always equal the plan (reclaim can
+        convert a retained hit to a miss mid-insert, but the total
+        block consumption is conversion-invariant);
+      * grow() only fails when free AND retained are both empty (the
+        engine's preemption trigger), and the machine recovers by
+        evicting a victim — no state corruption either way;
+      * check_invariants() holds THROUGHOUT: refcounts == table refs,
+        retained blocks are never table-aliased (so live writes cannot
+        touch them), and the LRU bound is respected;
+      * draining evicts returns every block: free + retained partition
+        the arena, nothing leaks, nothing double-frees.
+    """
+    bs = 4
+    ring = max_blocks * bs
+    n_blocks = 1 + max_batch + extra_blocks     # null + a scarce arena
+    m = BlockTableMap(max_batch, ring, bs, n_blocks,
+                      retain_limit=retain_limit)
+    live = {}                                   # slot -> (next_row, last_row)
+    for _ in range(data.draw(st.integers(0, 30), label="n_ops")):
+        ops = ["insert"] + (["grow", "grow", "evict"] if live else [])
+        op = data.draw(st.sampled_from(ops), label="op")
+        if op == "evict":
+            slot = data.draw(st.sampled_from(sorted(live)),
+                             label="evict_slot")
+            m.evict(slot)           # finish or preempt: map-identical
+            del live[slot]
+        elif op == "grow":
+            slot = data.draw(st.sampled_from(sorted(live)),
+                             label="grow_slot")
+            nxt, last = live[slot]
+            if nxt > last:
+                continue            # chain fully grown (or budget 1)
+            avail = m.alloc.n_free + m.alloc.n_retained
+            try:
+                b = m.grow(slot, nxt)
+            except NoBlocksError:
+                assert avail == 0, "grow failed with reclaimable blocks"
+                victim = data.draw(st.sampled_from(sorted(live)),
+                                   label="victim")
+                m.evict(victim)     # the engine's preempt path
+                del live[victim]
+            else:
+                if b is not None:
+                    assert m.alloc.ref[b] == 1   # exclusively owned
+                live[slot] = (nxt + 1, last)
+        else:
+            free_slots = sorted(set(range(max_batch)) - set(live))
+            if not free_slots:
+                continue
+            slot = data.draw(st.sampled_from(free_slots), label="slot")
+            plen = data.draw(st.integers(1, 2 * ring), label="plen")
+            padded = -(-plen // bs) * bs
+            budget = data.draw(st.integers(1, ring), label="budget")
+            lazy = data.draw(st.booleans(), label="lazy")
+            prompt = tuple(data.draw(
+                st.lists(st.integers(1, 2), min_size=plen, max_size=plen),
+                label="prompt"))
+            fresh, hits = m.admission_plan(prompt, plen, padded, budget,
+                                           lazy=lazy)
+            avail = m.alloc.n_free + m.alloc.n_retained
+            try:
+                placed = m.insert(slot, prompt, plen, padded, budget,
+                                  lazy=lazy)
+            except NoBlocksError:
+                assert fresh + hits > avail      # gate would have said no
+                assert not m.table[slot].any()   # full rollback
+                assert m.alloc.n_free + m.alloc.n_retained == avail
+            else:
+                assert fresh + hits <= avail
+                consumed = (sum(1 for p in placed if not p.shared)
+                            + sum(1 for p in placed if p.revived))
+                assert consumed == fresh + hits, (
+                    "plan not conversion-invariant", placed)
+                live[slot] = (plen, plen + budget - 2)
+        m.check_invariants()
+    for slot in sorted(live):
+        m.evict(slot)
+    m.check_invariants()
+    assert m.alloc.n_live == 0
+    assert m.alloc.n_free + m.alloc.n_retained == n_blocks - 1   # no leaks
+    assert m.n_retained <= retain_limit
 
 
 # --------------------------------------------------------------------------
