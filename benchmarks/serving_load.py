@@ -1,7 +1,7 @@
 """Serving load generator: paged vs dense pools, continuous vs static,
-lazy vs eager chain growth.
+lazy vs eager chain growth, chunked prefill under open-loop traffic.
 
-Three workloads:
+Four workloads:
 
   mixed          (default) heterogeneous prompt lengths and generation
                  budgets with NO common prefix — the traffic shape where
@@ -29,6 +29,22 @@ Three workloads:
                  retained-prefix revivals > 0 on the second wave: the
                  prefix blocks survive refcount 0 on the bounded LRU and
                  are reused copy-free across waves.
+  open-loop      mostly-short prompts with a long-prompt minority,
+                 arriving on a seeded Poisson clock that does NOT wait
+                 for the server (serving/traffic.py). Phase A re-checks
+                 token identity closed-loop: static == dense == paged ==
+                 CHUNKED-paged under greedy fp32, plus the same-layout
+                 bf16 pair (paged vs chunked-paged, tie-stable greedy).
+                 Phase B replays the same arrival schedule through an
+                 unchunked and a chunked engine (--chunk-budget) and
+                 gates GOODPUT — tokens/s of requests meeting their TTFT
+                 SLO and EVERY inter-token-gap ITL SLO: the unchunked
+                 baseline must violate the ITL SLO (whole-prompt prefill
+                 stalls every running stream), the chunked controller
+                 must win goodput and keep its ITL p99 <= --tail-ratio x
+                 its own p50. SLOs auto-calibrate from a WARM unchunked
+                 closed-loop pass (--itl-slo-mult x its ITL p50;
+                 override with --ttft-slo-ms / --itl-slo-ms).
 
 Every engine pair runs the byte-identical seeded workload and must emit
 identical tokens per request — scheduling, cache layout, growth mode and
@@ -63,7 +79,9 @@ tolerances); the step-count gate is exact. PASS (shared-prefix): paged
 peak concurrency >= 2x dense at equal arena memory, zero mismatches.
 PASS (bursty-long): lazy admitted concurrency >= --lazy-ratio x eager
 at equal arena memory, zero mismatches (preemption included), and
-wave-2 retained-prefix revivals > 0.
+wave-2 retained-prefix revivals > 0. PASS (open-loop): zero mismatches
+in both identity sets, chunked goodput >= --goodput-ratio x unchunked,
+unchunked ITL violations >= 1, chunked ITL p99 <= --tail-ratio x p50.
 """
 from __future__ import annotations
 
@@ -248,10 +266,151 @@ def run_bursty_long(arch, params, args, mk_workload, max_len):
     return results, gates
 
 
+def run_open_loop(arch, params, args, max_len):
+    """Chunked-prefill admission under open-loop Poisson traffic:
+    token identity first (closed loop), then goodput at a fixed
+    arrival rate (see module docstring, PASS (open-loop))."""
+    from repro.serving import (OpenLoopDriver, SLO, ContinuousEngine,
+                               bimodal_requests, poisson_arrivals,
+                               slo_report)
+    from repro.serving.metrics import percentile
+
+    def mk_reqs(seed):
+        return bimodal_requests(
+            args.requests, arch.cfg.vocab, short_len=args.prompt_len,
+            long_len=args.long_len, new_tokens=args.new_tokens,
+            long_frac=args.long_frac, seed=seed)
+
+    # ---- phase A: closed-loop token identity on the bimodal mix ------
+    # greedy fp32 quad: the chunked engine must emit the same tokens as
+    # every unchunked layout (chunk boundaries are invisible)
+    mk = (arch, params, lambda: mk_reqs(args.seed), args, max_len)
+    runners = {
+        "static": make_static(*mk),
+        "dense": make_continuous(*mk, cache="dense"),
+        "paged": make_continuous(*mk, cache="paged"),
+        "chunked": make_continuous(*mk, cache="paged",
+                                   chunk_budget=args.chunk_budget),
+    }
+    results, rep_outputs = measure_interleaved(runners, 1)
+    mismatch = sum(check_tokens(outs, "dense") for outs in rep_outputs)
+    print_stats(results)
+
+    # same-layout bf16 pair (paged vs chunked-paged): one-ulp logit ties
+    # are pinned by the tie-stable greedy argmax (--sampler ...,stable=1)
+    bf_args = argparse.Namespace(**{
+        **vars(args), "precision": "bf16",
+        "sampler": Sampler.parse("temperature=0,stable=1")})
+    mk_bf = (arch, params, lambda: mk_reqs(args.seed), bf_args, max_len)
+    bf_runners = {
+        "paged": make_continuous(*mk_bf, cache="paged"),
+        "chunked": make_continuous(*mk_bf, cache="paged",
+                                   chunk_budget=args.chunk_budget),
+    }
+    _, bf_outputs = measure_interleaved(bf_runners, 1)
+    bf_mismatch = sum(check_tokens(outs, "paged") for outs in bf_outputs)
+    print(f"bf16 paged/chunked pair: {bf_mismatch} token mismatches")
+
+    # ---- phase B: goodput at a fixed arrival rate --------------------
+    def open_engine(chunk_budget=None):
+        return ContinuousEngine(
+            arch, params, max_batch=args.max_batch, max_len=max_len,
+            policy=args.precision, prefill_bucket=args.prefill_bucket,
+            cache="paged", block_size=args.block_size,
+            slots_budget=args.max_batch, sampler=args.sampler,
+            chunk_budget=chunk_budget)
+
+    base_eng = open_engine()
+    chunk_eng = open_engine(chunk_budget=args.chunk_budget)
+    chunk_eng._admission.warmup()   # chunk sizes depend on runtime load
+    warm = {}
+    for name, eng in (("base", base_eng), ("chunked", chunk_eng)):
+        wreqs = mk_reqs(args.seed + 7)
+        eng.run(wreqs)              # compiles cached; traces collected
+        warm[name] = wreqs
+
+    # SLO calibration from the WARM unchunked pass: its ITL p50 is the
+    # undisturbed decode gap; whole-prompt prefill stalls sit far above
+    # --itl-slo-mult x that, metered chunks below it. TTFT stays
+    # deliberately loose — chunking trades a little TTFT for ITL, and
+    # this workload gates the ITL side.
+    base_itls = [g for r in warm["base"] for g in r.trace.inter_token_s]
+    itl_slo = args.itl_slo_ms or \
+        args.itl_slo_mult * percentile(base_itls, 50) * 1e3
+    ttft_slo = args.ttft_slo_ms or max(1000.0, 40 * itl_slo)
+    slo = SLO(ttft_ms=ttft_slo, itl_ms=itl_slo)
+    print(f"SLO (warm-calibrated): ttft <= {ttft_slo:.1f} ms, "
+          f"itl <= {itl_slo:.2f} ms")
+
+    arrivals = poisson_arrivals(args.requests, args.arrival_rate,
+                                seed=args.seed)
+
+    def measure(eng):               # identical requests + arrival clock
+        reqs = mk_reqs(args.seed)
+        wall = OpenLoopDriver(eng, reqs, arrivals).run()
+        return slo_report(reqs, slo, wall), reqs
+
+    def tail(rep):
+        return rep["itl_p99_ms"] / max(rep["itl_p50_ms"], 1e-9)
+
+    # --reps alternating passes per engine, best-of — the same CPU-noise
+    # filter measure_interleaved applies to the closed-loop numbers: a
+    # single OS scheduling spike lands directly in a p99 of ~350 gap
+    # samples. The baseline keeps its BEST goodput pass and its FEWEST
+    # ITL violations (conservative on both gates it feeds); the chunked
+    # engine keeps its best-tail pass. Token identity is checked on
+    # every pass.
+    open_mismatch = 0
+    base_rep = chunk_rep = None
+    base_viol = None
+    for _ in range(args.reps):
+        b, base_out = measure(base_eng)
+        c, chunk_out = measure(chunk_eng)
+        open_mismatch += sum(
+            not np.array_equal(x.generated, y.generated)
+            for x, y in zip(base_out, chunk_out))
+        if base_rep is None or b["goodput_tokens_per_s"] \
+                > base_rep["goodput_tokens_per_s"]:
+            base_rep = b
+        base_viol = b["itl_violations"] if base_viol is None \
+            else min(base_viol, b["itl_violations"])
+        if chunk_rep is None or tail(c) < tail(chunk_rep):
+            chunk_rep = c
+    for name, rep in (("unchunked", base_rep), ("chunked", chunk_rep)):
+        print(f"{name:>10}: goodput {rep['goodput_tokens_per_s']:7.1f} "
+              f"tok/s (raw {rep['tokens_per_s']:7.1f}) | attainment "
+              f"{rep['slo_attainment']:.2f} | itl p50 "
+              f"{rep['itl_p50_ms']:6.2f} ms p99 {rep['itl_p99_ms']:7.2f} "
+              f"ms | ttft viol {rep['ttft_violations']} itl viol "
+              f"{rep['itl_violations']}")
+
+    gates = {
+        "token_mismatches": gate(mismatch, 0, op="<="),
+        "bf16_token_mismatches": gate(bf_mismatch, 0, op="<="),
+        "open_loop_token_mismatches": gate(open_mismatch, 0, op="<="),
+        # ratio capped at 100: an unchunked baseline with ~zero goodput
+        # would otherwise print a meaningless astronomical number
+        "goodput_ratio": gate(
+            min(chunk_rep["goodput_tokens_per_s"]
+                / max(base_rep["goodput_tokens_per_s"], 1e-9), 100.0),
+            args.goodput_ratio),
+        "baseline_itl_violations": gate(base_viol, 1),
+        "chunked_itl_tail": gate(tail(chunk_rep), args.tail_ratio,
+                                 op="<="),
+    }
+    results["open_unchunked"] = base_rep
+    results["open_chunked"] = {**chunk_rep,
+                               **{k: chunk_eng.report(1.0)[k] for k in
+                                  ("chunk_steps", "chunk_tokens",
+                                   "chunk_budget")}}
+    return results, gates
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
-                    choices=["mixed", "shared-prefix", "bursty-long"],
+                    choices=["mixed", "shared-prefix", "bursty-long",
+                             "open-loop"],
                     default="mixed")
     ap.add_argument("--arch", default=None,
                     help="default: gemma2-2b (mixed) / qwen2.5-14b "
@@ -287,6 +446,32 @@ def main():
     ap.add_argument("--reps", type=int, default=5,
                     help="measured passes per engine (after warmup); the "
                          "fastest is reported")
+    ap.add_argument("--chunk-budget", type=int, default=12,
+                    help="open-loop: per-step token budget for the "
+                         "chunked-prefill engine (chunk + active decodes "
+                         "<= budget)")
+    ap.add_argument("--arrival-rate", type=float, default=10.0,
+                    help="open-loop: Poisson arrival rate in requests/s")
+    ap.add_argument("--long-len", type=int, default=512,
+                    help="open-loop: long-prompt mode of the bimodal mix "
+                         "(the admissions that stall unchunked decodes)")
+    ap.add_argument("--long-frac", type=float, default=0.5,
+                    help="open-loop: fraction of long-prompt requests")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="open-loop TTFT bound (default: auto, loose)")
+    ap.add_argument("--itl-slo-ms", type=float, default=None,
+                    help="open-loop ITL bound on every inter-token gap "
+                         "(default: --itl-slo-mult x warm unchunked p50)")
+    ap.add_argument("--itl-slo-mult", type=float, default=4.0,
+                    help="auto ITL SLO multiplier over the warm "
+                         "unchunked closed-loop ITL p50")
+    ap.add_argument("--goodput-ratio", type=float, default=1.1,
+                    help="open-loop PASS gate: chunked goodput >= ratio "
+                         "x unchunked goodput at the same arrival rate")
+    ap.add_argument("--tail-ratio", type=float, default=2.0,
+                    help="open-loop PASS gate: chunked ITL p99 <= ratio "
+                         "x chunked ITL p50 (metered prefill keeps the "
+                         "tail near the median)")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "bf16_compute", "fp16"])
     ap.add_argument("--sampler", default=None,
@@ -299,8 +484,10 @@ def main():
 
     shared = args.workload == "shared-prefix"
     bursty = args.workload == "bursty-long"
-    arch_name = args.arch or ("gemma2-2b" if args.workload == "mixed"
-                              else "qwen2.5-14b")
+    open_loop = args.workload == "open-loop"
+    arch_name = args.arch or (
+        "gemma2-2b" if args.workload in ("mixed", "open-loop")
+        else "qwen2.5-14b")
     arch = reduced_arch(arch_name)
     if arch.kind != "decoder":
         raise SystemExit(f"{arch_name} is {arch.kind}: no decode step")
@@ -308,6 +495,15 @@ def main():
 
     if shared:
         args.prompt_len, args.new_tokens = 8, 8
+    elif open_loop:
+        # mostly-short decode traffic + long-prompt stalls; modest
+        # request count keeps the open-loop replay to a few seconds,
+        # and >= 8 decode slots keep the decode half of a chunked step
+        # heavy enough that the chunk's extra dispatch stays inside the
+        # --tail-ratio envelope
+        args.requests = min(args.requests, 32)
+        args.max_batch = max(args.max_batch, 8)
+        args.prompt_len, args.new_tokens = 8, 12
     elif bursty:
         # budgets dwarf prompts: whole-chain reservation strands rows
         args.requests = min(args.requests, 16)
@@ -317,6 +513,8 @@ def main():
         + args.prefill_bucket
     if bursty:
         max_len += args.prefix_len     # wave phase prepends the prefix
+    if open_loop:                      # must hold the long-prompt mode
+        max_len = args.long_len + args.new_tokens + args.prefill_bucket
     max_len = -(-max_len // args.block_size) * args.block_size
 
     # bursty-long keeps budgets uniformly LONG (that is the stranding
@@ -335,6 +533,8 @@ def main():
     if bursty:
         results, gates = run_bursty_long(arch, params, args, mk_workload,
                                          max_len)
+    elif open_loop:
+        results, gates = run_open_loop(arch, params, args, max_len)
     else:
         mk = (arch, params, mk_workload(args.seed), args, max_len)
         if shared:

@@ -6,6 +6,7 @@
 #   scripts/run_tests.sh --all      # include the slow serving matrices
 #   scripts/run_tests.sh --paged    # only the paged-cache/allocator suite
 #   scripts/run_tests.sh --sched    # scheduler/lazy-growth/preemption suite
+#   scripts/run_tests.sh --chunked  # chunked-prefill admission + open-loop
 #   scripts/run_tests.sh --docs     # smoke-check docs/README code fences
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
@@ -26,6 +27,10 @@ fi
 if [[ "${1:-}" == "--sched" ]]; then
   shift
   exec python -m pytest -x -q -m "sched" "$@"
+fi
+if [[ "${1:-}" == "--chunked" ]]; then
+  shift
+  exec python -m pytest -x -q -m "chunked" "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
   shift

@@ -97,10 +97,12 @@ class Arch:
 
     # ---------------- serving ----------------
 
-    def init_cache(self, batch: int, max_len: int, *, per_slot: bool = False):
+    def init_cache(self, batch: int, max_len: int, *, per_slot: bool = False,
+                   clamp_window: bool = True):
         if self.kind == "decoder":
             return dec_lib.init_decoder_cache(self.cfg, batch, max_len,
-                                              per_slot=per_slot)
+                                              per_slot=per_slot,
+                                              clamp_window=clamp_window)
         if self.kind == "encdec":
             if per_slot:
                 raise NotImplementedError("pooled serving is decoder-only")

@@ -191,12 +191,22 @@ def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
     pool is updated in place instead of being double-buffered.
     """
     sampled = sampler is not None and not sampler.greedy
+    stable = (sampler is not None and sampler.greedy
+              and sampler.stable_tiebreak)
 
     if sampled:
         def step(params, tokens, positions, cache, keys):
             logits, new_cache = decode_fn(
                 params, {"tokens": tokens, "positions": positions}, cache)
             nxt = sampler.sample(logits[:, -1, :].astype(jnp.float32), keys)
+            return nxt, new_cache
+    elif stable:
+        # greedy with the bf16-ulp tie band (sampler.stable_argmax):
+        # cross-layout-invariant token picks for bf16 differentials
+        def step(params, tokens, positions, cache):
+            logits, new_cache = decode_fn(
+                params, {"tokens": tokens, "positions": positions}, cache)
+            nxt = sampler.sample(logits[:, -1, :].astype(jnp.float32), None)
             return nxt, new_cache
     else:
         def step(params, tokens, positions, cache):

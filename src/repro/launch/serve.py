@@ -18,10 +18,15 @@ policy-driven: --sched-policy picks the admission/preemption policy,
 --growth lazy (default) allocates decode blocks on demand (preempting a
 victim when the arena exhausts; --no-preempt turns that into an error),
 --retain-blocks keeps evicted prefix blocks warm on a bounded LRU, and
---slo-ms evicts slots that blow their SLO. --engine static runs the
-padded lockstep baseline instead. --metrics writes one JSONL record per
-decode step (active slots, queue depth, preemptions, step latency) plus
-a final summary record — the serving analogue of train.py's loss curve.
+--slo-ms evicts slots that blow their SLO. --chunk-budget N admits
+prompts chunk by chunk within a per-step token budget (chunked prefill;
+continuous+paged only). --arrival-rate R replays the request stream as
+seeded open-loop Poisson traffic at R req/s instead of submitting
+everything up front, and reports goodput against the --ttft-slo-ms /
+--itl-slo-ms bounds. --engine static runs the padded lockstep baseline
+instead. --metrics writes one JSONL record per decode step (active
+slots, queue depth, preemptions, step latency) plus a final summary
+record — the serving analogue of train.py's loss curve.
 """
 from __future__ import annotations
 
@@ -88,7 +93,8 @@ def main():
     ap.add_argument("--retain-blocks", type=int, default=None,
                     help="LRU bound on warm prefix blocks kept alive after "
                          "their last holder evicts, per attention slot-"
-                         "type (default: one request's worth; 0 disables)")
+                         "type (default: one batch's worth — covers a "
+                         "multi-tenant prefix working set; 0 disables)")
     ap.add_argument("--watermark", type=int, default=0,
                     help="free blocks admission holds back per slot-type "
                          "so in-flight slots can grow without preempting")
@@ -99,9 +105,28 @@ def main():
                          "kernel (token-identical; interpret mode off-TPU; "
                          "requires --cache paged). Default: adopt the "
                          "arch config (usually 'xla')")
+    ap.add_argument("--chunk-budget", type=int, default=None,
+                    help="per-step token budget for chunked-prefill "
+                         "admission: prompts prefill chunk by chunk in "
+                         "the decode loop's spare capacity instead of "
+                         "one whole-prompt stall (continuous engine + "
+                         "paged cache only; token-identical to whole-"
+                         "prompt prefill)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate in requests/s: "
+                         "submit on the arrival clock instead of all up "
+                         "front, and report goodput/SLO attainment "
+                         "(continuous engine only; default closed-loop)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=1000.0,
+                    help="open-loop TTFT bound (submit -> first token) "
+                         "a request must meet to count toward goodput")
+    ap.add_argument("--itl-slo-ms", type=float, default=200.0,
+                    help="open-loop bound on EVERY inter-token gap; one "
+                         "violation disqualifies the whole stream")
     ap.add_argument("--sampler", default="greedy",
                     help="'greedy' or 'temperature=0.8,top_k=40,"
-                         "top_p=0.95,seed=0' (temperature=0 == greedy)")
+                         "top_p=0.95,seed=0' (temperature=0 == greedy; "
+                         "add stable=1 for the bf16 tie-stable argmax)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="common system-prompt tokens prepended to every "
                          "request (exercises prefix sharing)")
@@ -145,9 +170,21 @@ def main():
             sampler=args.sampler, attn_kernel=args.attn_kernel,
             growth=args.growth or "lazy", sched_policy=args.sched_policy,
             slo_ms=args.slo_ms, preempt=args.preempt,
-            retain_blocks=args.retain_blocks, watermark=args.watermark)
-        engine.run(reqs)
-        stats = engine.report(time.perf_counter() - t0)
+            retain_blocks=args.retain_blocks, watermark=args.watermark,
+            chunk_budget=args.chunk_budget)
+        if args.arrival_rate is not None:
+            from repro.serving import (OpenLoopDriver, SLO, poisson_arrivals,
+                                       slo_report)
+            arrivals = poisson_arrivals(len(reqs), args.arrival_rate,
+                                        seed=args.seed)
+            t0 = time.perf_counter()
+            wall = OpenLoopDriver(engine, reqs, arrivals).run()
+            stats = engine.report(wall)
+            stats.update(slo_report(
+                reqs, SLO(args.ttft_slo_ms, args.itl_slo_ms), wall))
+        else:
+            engine.run(reqs)
+            stats = engine.report(time.perf_counter() - t0)
         attn_kernel = (engine.pool.attn_kernel
                        if args.cache == "paged" else "xla")
     else:
@@ -163,7 +200,9 @@ def main():
             ("--slo-ms", args.slo_ms is not None),
             ("--no-preempt", not args.preempt),
             ("--retain-blocks", args.retain_blocks is not None),
-            ("--watermark", args.watermark != 0)) if on]
+            ("--watermark", args.watermark != 0),
+            ("--chunk-budget", args.chunk_budget is not None),
+            ("--arrival-rate", args.arrival_rate is not None)) if on]
         if ignored:
             raise SystemExit(
                 f"{' '.join(ignored)} only apply to the continuous "

@@ -315,20 +315,29 @@ def _head_logits(params, cfg: DecoderConfig, x):
 
 
 def init_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
-                       dtype=jnp.bfloat16, *, per_slot: bool = False):
+                       dtype=jnp.bfloat16, *, per_slot: bool = False,
+                       clamp_window: bool = True):
     """Stacked per-slot caches. attn_local slots get ring buffers of the
     window size — the memory win that makes long_500k viable for gemma2.
 
     per_slot=True builds the pooled continuous-batching layout: the write
     cursor becomes (batch,) and KV positions (batch, L), so each batch slot
-    carries its own local timeline (see serving/cache_pool.py)."""
+    carries its own local timeline (see serving/cache_pool.py).
+
+    clamp_window=False gives attn_local slots the FULL max_len rows too —
+    the chunk-resumable prefill cache: every prompt chunk then lands in
+    attention's incremental write path (never the roll-on-overflow branch,
+    which assumes a from-scratch prefill and cannot resume), window
+    locality is enforced by the mask instead of the ring, and the
+    serving pool's insert picks the window tail out of the full-length
+    rows (see serving/admission.py)."""
     slots = []
     for mixer, _ in cfg.superblock:
         if mixer == "mamba":
             one = mamba_lib.init_mamba_cache(batch, cfg.mamba_cfg())
         else:
             L = max_len
-            if mixer == "attn_local" and cfg.sliding_window:
+            if clamp_window and mixer == "attn_local" and cfg.sliding_window:
                 L = min(max_len, cfg.sliding_window)
             one = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads,
                                          cfg.resolved_head_dim, dtype,

@@ -5,7 +5,8 @@ See serving/engine.py for the architecture overview. Public surface:
   ContinuousEngine   slot-pool continuous batching (paged cache default)
   ServeEngine        static-batch baseline (padded lockstep decode)
   Request            one prompt + generation budget (+ latency trace)
-  Sampler            temperature/top-k/top-p decode (per-slot PRNG keys)
+  Sampler            temperature/top-k/top-p decode (per-slot PRNG keys;
+                     greedy stable_tiebreak for bf16 differentials)
   throughput_probe   warmup-aware timed run -> tokens/s + percentiles
   Scheduler          ticketed slot admission (host-side, property-tested)
   SchedulingPolicy   admission/victim/SLO policy (fifo | arrival-deadline
@@ -15,7 +16,15 @@ See serving/engine.py for the architecture overview. Public surface:
                      lazy chain growth and a retained-prefix LRU
   BlockAllocator     refcounted free-list over arena blocks
   BlockTableMap      per-slot-type tables + prefix registry (host-side)
+  AdmissionController  chunked-prefill admission: one resumable prompt
+                     chunk per step, fused into the decode token budget
+  plan_chunk         the budget partition (size + active <= budget)
+  SLO / OpenLoopDriver / poisson_arrivals / slo_report
+                     open-loop traffic: seeded Poisson arrivals with
+                     TTFT/ITL SLOs and goodput accounting (traffic.py)
 """
+from repro.serving.admission import (AdmissionController, PrefillTask,
+                                     chunk_granularity, plan_chunk)
 from repro.serving.block_allocator import (BlockAllocator, BlockTableMap,
                                            NoBlocksError)
 from repro.serving.cache_pool import CachePool, PagedCachePool
@@ -25,19 +34,23 @@ from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
                                   prompt_granularity, synthetic_requests,
                                   throughput_probe)
 from repro.serving.metrics import (DepthTracker, RequestTrace, aggregate,
-                                   percentile)
-from repro.serving.sampler import Sampler, fold_keys
+                                   hit_rate, percentile)
+from repro.serving.sampler import Sampler, fold_keys, stable_argmax
 from repro.serving.scheduler import (ArrivalDeadlinePolicy, PolicyContext,
                                      PrefixAffinityPolicy, Scheduler,
                                      SchedulerError, SchedulingPolicy)
+from repro.serving.traffic import (SLO, OpenLoopDriver, bimodal_requests,
+                                   meets_slo, poisson_arrivals, slo_report)
 
 __all__ = [
-    "ArrivalDeadlinePolicy", "BlockAllocator", "BlockTableMap", "CachePool",
-    "ContinuousEngine", "DepthTracker", "NoBlocksError", "PagedCachePool",
-    "PolicyContext", "PrefixAffinityPolicy", "Request", "RequestTrace",
+    "AdmissionController", "ArrivalDeadlinePolicy", "BlockAllocator",
+    "BlockTableMap", "CachePool", "ContinuousEngine", "DepthTracker",
+    "NoBlocksError", "OpenLoopDriver", "PagedCachePool", "PolicyContext",
+    "PrefillTask", "PrefixAffinityPolicy", "Request", "RequestTrace", "SLO",
     "Sampler", "Scheduler", "SchedulerError", "SchedulingPolicy",
-    "ServeEngine", "aggregate", "apply_serving_policy",
-    "build_first_token_fn", "build_prefill_fn", "fold_keys", "pad_prompts",
-    "percentile", "prompt_granularity", "synthetic_requests",
-    "throughput_probe",
+    "ServeEngine", "aggregate", "apply_serving_policy", "bimodal_requests",
+    "build_first_token_fn", "build_prefill_fn", "chunk_granularity",
+    "fold_keys", "hit_rate", "meets_slo", "pad_prompts", "percentile",
+    "plan_chunk", "poisson_arrivals", "prompt_granularity", "slo_report",
+    "stable_argmax", "synthetic_requests", "throughput_probe",
 ]

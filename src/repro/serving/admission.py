@@ -1,0 +1,241 @@
+"""Chunked-prefill admission controller (Sarathi-style prefill/decode fusion).
+
+PRs 2-5 admit requests with WHOLE-PROMPT prefills: one long admission
+runs a full padded-prompt forward between two decode steps, so every
+running stream observes an inter-token gap the size of that prefill —
+ITL p99 is unprotected under mixed short/long traffic. This module
+meters prefill work instead: each engine step carries at most ONE
+prompt chunk, sized so that
+
+    chunk tokens + active decode tokens  <=  chunk_budget
+
+i.e. a per-step token budget is partitioned between the running decodes
+(one token each) and a single resumable prefill chunk riding in the
+step's spare capacity. The chunk advances a per-request prefill TASK
+whose KV/SSM cache state carries across steps; when the last chunk
+lands, the task's cache is inserted into the paged pool exactly like a
+whole-prompt prefill's and the slot joins the decode batch.
+
+Chunk-boundary exactness (the differential gate): a chunk is just
+`Arch.decode_step` over S prompt rows against the task's pooled cache,
+which is the SAME incremental cache-write path a whole-prompt prefill
+of a short prompt takes — rows land at the write cursor, positions are
+the request's local timeline (left-pads < 0 stay masked, the PR 2
+invariant), and attention/SSM read back the rows already written. Three
+properties make the chunk boundaries token-identical to one whole
+prefill:
+
+  * attention attends the CACHE (not in-flight k/v) in the incremental
+    branch, so every chunk sees exactly the rows earlier chunks wrote;
+    masked rows contribute exact zeros (NEG_INF -> exp == 0.0);
+  * the task cache is built with `clamp_window=False`: sliding-window
+    slot-types get full-length rows so chunks never hit attention's
+    roll-on-overflow branch (which assumes a from-scratch prefill and
+    cannot resume) — window locality is enforced by the (qp - kp) <
+    window mask instead of the ring, which masks the same keys;
+  * chunk sizes are multiples of `chunk_granularity(cfg)` — mamba's
+    chunked SSD scan requires S % mamba_chunk == 0 and carries its
+    inter-chunk state in fp32, so cfg-aligned boundaries are bit-exact;
+    the minimum is 2 even for pure-attention archs because an S == 1
+    step is the fp32-accumulated DECODE path, whose bf16 numerics
+    differ from prefill's.
+
+What is NOT preserved: the prefill's reduction shapes. A chunked
+prefill computes the same values through different einsum shapes, so
+its blocks are never content-addressed for prefix sharing (the engine
+inserts with share=False) — sharing blocks bit-for-bit with a
+whole-prefill peer would not be sound in bf16.
+
+The controller also closes two PR 5 follow-ups as inputs: the
+admission gate holds back a DYNAMIC watermark (one block per decoding
+slot, on top of the pool's static watermark) because chunked
+admissions consume their blocks only at finalize — many steps after
+the gate — while decoding slots keep growing; and preemption-victim
+selection becomes resume-cost-aware (PolicyContext.resume_cost): the
+victim whose continuation prefill re-chunks the fewest tokens loses
+the least budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def chunk_granularity(cfg) -> int:
+    """Smallest chunk length the arch supports, never below 2.
+
+    Mamba's chunked SSD scan asserts S % mamba_chunk == 0 (its fp32
+    inter-chunk state makes aligned boundaries bit-exact); attention
+    archs could take any S >= 2, but S == 1 is excluded: a single-row
+    cached step runs the fp32-accumulated decode attention path, whose
+    bf16 numerics differ from the prefill path a whole-prompt run uses.
+    """
+    from repro.serving.engine import prompt_granularity
+    return max(2, prompt_granularity(cfg))
+
+
+def plan_chunk(budget: int, n_active: int, granularity: int,
+               remaining: int) -> int:
+    """Tokens of prefill to fuse into this step: the budget partition.
+
+    Invariants (property-tested in tests/test_admission.py):
+      * size + n_active <= budget   (budget conservation: decodes are
+        never displaced — they always get their token first);
+      * size % granularity == 0 and size is granularity * 2^k (the
+        quantized size set keeps the jitted-chunk compile count at
+        log2(budget / granularity) + 1);
+      * size <= remaining, and remaining - size stays a granularity
+        multiple whenever remaining was one (no unreachable tail);
+      * size >= granularity whenever spare capacity allows — so a task
+        always progresses once decodes drain below the budget.
+    """
+    spare = budget - n_active
+    if remaining <= 0 or spare < granularity:
+        return 0
+    cap = min(spare, remaining)
+    size = granularity
+    while size * 2 <= cap:
+        size *= 2
+    return size
+
+
+@dataclasses.dataclass
+class PrefillTask:
+    """One in-flight chunked admission: a slot-bound prompt being
+    prefilled chunk by chunk into its own resumable pooled cache."""
+    req: object
+    slot: int
+    prompt: np.ndarray          # full unpadded prompt (+ continuation)
+    tokens: np.ndarray          # (1, padded_len) left-padded
+    positions: np.ndarray       # (1, padded_len) local timeline, pads < 0
+    plen: int
+    padded_len: int
+    resume_len: int             # tokens re-prefilled from a preemption
+    offset: int = 0             # padded rows already chunked
+    cache: Optional[dict] = None
+    last_logits: Optional[object] = None   # (1, 1, V) fp32 after last chunk
+    chunks_run: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.padded_len - self.offset
+
+    @property
+    def finished(self) -> bool:
+        return self.offset >= self.padded_len
+
+
+class AdmissionController:
+    """Runs at most one PrefillTask, one chunk per engine step.
+
+    The chunk forward is `arch.decode_step` jitted once per chunk size
+    (the quantized set from plan_chunk bounds that to
+    log2(budget / granularity) + 1 compiles); the task cache is donated
+    through each call, so chunking never double-buffers the KV rows.
+    """
+
+    def __init__(self, arch, params, *, chunk_budget: int,
+                 prefill_len: int):
+        self.arch = arch
+        self.params = params
+        self.granularity = chunk_granularity(arch.cfg)
+        if chunk_budget < self.granularity:
+            raise ValueError(
+                f"chunk_budget {chunk_budget} < chunk granularity "
+                f"{self.granularity} (mamba archs need chunks of "
+                f"cfg.mamba_chunk tokens; attention archs need >= 2)")
+        self.chunk_budget = chunk_budget
+        self.prefill_len = prefill_len
+        self.task: Optional[PrefillTask] = None
+        self._fns: Dict[int, Callable] = {}
+        self.chunks_run = 0          # lifetime chunk forwards
+        self.chunk_tokens = 0        # lifetime padded rows chunked
+
+    def sizes(self):
+        """Every chunk size plan_chunk can emit (warmup/compile set)."""
+        out, size = [], self.granularity
+        while size <= self.chunk_budget:
+            out.append(size)
+            size *= 2
+        return out
+
+    def _fn(self, size: int):
+        if size not in self._fns:
+            def chunk(params, tokens, positions, cache):
+                logits, new_cache = self.arch.decode_step(
+                    params, {"tokens": tokens, "positions": positions},
+                    cache)
+                return logits[:, -1:].astype(jnp.float32), new_cache
+            self._fns[size] = jax.jit(chunk, donate_argnums=(3,))
+        return self._fns[size]
+
+    def _fresh_cache(self):
+        # clamp_window=False: full-length rows for sliding-window
+        # slot-types keep every chunk on the resumable incremental
+        # write path (see module docstring).
+        return self.arch.init_cache(1, self.prefill_len, per_slot=True,
+                                    clamp_window=False)
+
+    def warmup(self):
+        """Compile every chunk size against a scratch cache so an
+        open-loop measurement never eats a mid-stream compile (chunk
+        sizes depend on the runtime decode count, so a closed-loop
+        warm run does not necessarily visit them all)."""
+        for size in self.sizes():
+            cache = self._fresh_cache()
+            tokens = jnp.zeros((1, size), jnp.int32)
+            positions = jnp.broadcast_to(
+                jnp.arange(size, dtype=jnp.int32), (1, size))
+            logits, _ = self._fn(size)(self.params, tokens, positions,
+                                       cache)
+            logits.block_until_ready()
+
+    def start(self, req, slot: int, tokens: np.ndarray,
+              positions: np.ndarray, *, plen: int, padded_len: int,
+              resume_len: int, prompt: np.ndarray):
+        if self.task is not None:
+            raise RuntimeError("a prefill task is already in flight")
+        if padded_len % self.granularity != 0:
+            raise ValueError(
+                f"padded prompt length {padded_len} not a multiple of "
+                f"chunk granularity {self.granularity}")
+        self.task = PrefillTask(req=req, slot=slot, prompt=prompt,
+                                tokens=tokens, positions=positions,
+                                plen=plen, padded_len=padded_len,
+                                resume_len=resume_len)
+
+    def advance(self, n_active: int) -> bool:
+        """Run this step's chunk (if the budget partition grants one).
+        Returns True when the task progressed. Check `task.finished`
+        afterwards; the engine finalizes (pool insert + first token)."""
+        task = self.task
+        if task is None:
+            return False
+        size = plan_chunk(self.chunk_budget, n_active, self.granularity,
+                          task.remaining)
+        if size == 0:
+            return False
+        if task.cache is None:
+            task.cache = self._fresh_cache()
+        logits, task.cache = self._fn(size)(
+            self.params,
+            jnp.asarray(task.tokens[:, task.offset:task.offset + size]),
+            jnp.asarray(task.positions[:, task.offset:task.offset + size]),
+            task.cache)
+        task.offset += size
+        task.chunks_run += 1
+        self.chunks_run += 1
+        self.chunk_tokens += size
+        if task.finished:
+            task.last_logits = logits
+        return True
+
+    def drop(self):
+        """Forget the current task (finalized, or requeued on a
+        NoBlocksError at insert — the continuation prefill re-chunks
+        identically, so dropping mid-task never loses exactness)."""
+        self.task = None

@@ -222,6 +222,7 @@ class BlockTableMap:
         self._retained: "collections.OrderedDict[bytes, int]" = \
             collections.OrderedDict()
         self.retained_hits = 0     # revived warm blocks (survived ref 0)
+        self.prefix_misses = 0     # registered prefix blocks written fresh
 
     # ---------------- planning ----------------
 
@@ -352,6 +353,7 @@ class BlockTableMap:
                     if key is not None:
                         self._registry[key] = b
                         self._block_key[b] = key
+                        self.prefix_misses += 1
         except NoBlocksError:
             self._rollback(placed)
             raise
@@ -377,6 +379,7 @@ class BlockTableMap:
                 key = self._block_key.pop(p.block, None)
                 if key is not None:
                     del self._registry[key]
+                    self.prefix_misses -= 1   # never materialized
                 self.alloc.release(p.block)
 
     def rollback_insert(self, slot: int, placed: List[Placement]):

@@ -330,14 +330,18 @@ class PagedCachePool:
     # ---------------- admission ----------------
 
     def admission_plan(self, prompt, plen: int, padded_len: int,
-                       budget: int) -> dict:
+                       budget: int, *, share: Optional[bool] = None) -> dict:
         """{slot-type: fresh blocks + retained revivals} an insert would
         consume from the (free + reclaimable-retained) pool — the
         engine's admission gate compares this against
         admissible_blocks(). Lazy growth counts only prompt-backed
-        positions; decode positions are grown (and accounted) later."""
+        positions; decode positions are grown (and accounted) later.
+        `share` overrides the pool-wide share_prefix for this plan
+        (chunked admissions pass share=False: see insert)."""
+        if share is None:
+            share = self.share_prefix
         return {si: sum(m.admission_plan(prompt, plen, padded_len, budget,
-                                         self.share_prefix,
+                                         share,
                                          lazy=self.growth == "lazy"))
                 for si, m in self.maps.items()}
 
@@ -359,20 +363,27 @@ class PagedCachePool:
                    for m in self.maps.values())
 
     def insert(self, request_cache: PyTree, slot: int, *, prompt,
-               plen: int, padded_len: int, budget: int):
+               plen: int, padded_len: int, budget: int,
+               share: Optional[bool] = None):
         """Admit a prefilled request: reserve its block chain (the whole
         prompt + decode budget under eager growth; prompt blocks only
         under lazy growth), write the fresh blocks, retain/revive shared
         prefix blocks without copying, and land the slot-resident state.
         Atomic: on NoBlocksError nothing is left allocated and the
-        device cache is untouched."""
+        device cache is untouched. `share` overrides the pool-wide
+        share_prefix for this insert — chunked prefills pass False (a
+        chunk schedule changes the reduction shapes, so their KV is not
+        guaranteed bit-identical to a whole prefill's and must never be
+        content-addressed for sharing)."""
         if not (0 <= slot < self.max_batch):
             raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        if share is None:
+            share = self.share_prefix
         placed = {}
         try:
             for si, m in self.maps.items():
                 placed[si] = m.insert(slot, prompt, plen, padded_len, budget,
-                                      self.share_prefix,
+                                      share,
                                       lazy=self.growth == "lazy")
         except NoBlocksError:
             # cross-map rollback: earlier slot-types' placements succeed
@@ -477,6 +488,21 @@ class PagedCachePool:
         """Warm prefix blocks revived from the retained LRU (content
         survived refcount 0) across all slot-types."""
         return sum(m.retained_hits for m in self.maps.values())
+
+    @property
+    def prefix_misses(self) -> int:
+        """Registered prefix blocks that had to be freshly written (no
+        live share, no warm revival) across all slot-types — the misses
+        to retained_hits' hits."""
+        return sum(m.prefix_misses for m in self.maps.values())
+
+    @property
+    def retained_hit_rate(self) -> float:
+        """retained_hits / (retained_hits + prefix_misses): the fraction
+        of shareable-prefix block demand the retained LRU served warm.
+        The retain_blocks sizing signal (docs/serving.md)."""
+        from repro.serving.metrics import hit_rate
+        return hit_rate(self.retained_hits, self.prefix_misses)
 
     def retained_blocks(self) -> dict:
         """Currently parked warm blocks per attention slot-type."""

@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.steps import build_serve_step, greedy_next
+from repro.serving.admission import AdmissionController, chunk_granularity
 from repro.serving.block_allocator import NoBlocksError
 from repro.serving.cache_pool import CachePool, PagedCachePool
 from repro.serving.metrics import DepthTracker, RequestTrace, aggregate
@@ -149,8 +150,13 @@ def build_prefill_fn(arch, max_len: int):
 
 def build_first_token_fn(sampler: Optional[Sampler]):
     """(jitted first-token fn, wants_keys). Greedy unless a non-greedy
-    sampler is given; the sampled variant takes (logits, keys (B, 2))."""
+    sampler is given; the sampled variant takes (logits, keys (B, 2)).
+    A greedy sampler with stable_tiebreak routes through the sampler's
+    one-ulp-band argmax (see serving/sampler.stable_argmax)."""
     if sampler is None or sampler.greedy:
+        if sampler is not None and sampler.greedy and sampler.stable_tiebreak:
+            return jax.jit(
+                lambda logits: sampler.sample(logits[:, -1, :], None)), False
         return jax.jit(greedy_next), False
     return jax.jit(
         lambda logits, keys: sampler.sample(logits[:, -1, :], keys)), True
@@ -242,7 +248,8 @@ class ContinuousEngine:
                  attn_kernel: Optional[str] = None,
                  growth: str = "lazy", sched_policy="fifo",
                  slo_ms: Optional[float] = None, preempt: bool = True,
-                 retain_blocks: Optional[int] = None, watermark: int = 0):
+                 retain_blocks: Optional[int] = None, watermark: int = 0,
+                 chunk_budget: Optional[int] = None):
         """See the class/module docstring for the serving model. Key args:
 
         max_batch: decode slot-pool size (the fixed step batch).
@@ -275,10 +282,24 @@ class ContinuousEngine:
             differential tests use this to pin lazy == eager output.
         retain_blocks: LRU bound (blocks per attention slot-type) for
             warm prefix blocks kept alive after their last holder
-            evicts. None sizes it to one request's worth of full-
-            attention blocks (max_len / block_size); 0 disables.
+            evicts. None sizes it to one BATCH's worth of full-
+            attention blocks (max_batch * max_len / block_size) —
+            enough to cover a multi-tenant working set of hot system
+            prompts, which one request's worth LRU-thrashes to a zero
+            hit rate; 0 disables.
         watermark: free blocks admission holds back per slot-type so
             in-flight slots can usually grow without preempting.
+        chunk_budget: per-step TOKEN budget for chunked-prefill
+            admission (serving/admission.py). When set, every admission
+            prefills chunk by chunk fused into the decode loop's spare
+            capacity (chunk tokens + active decodes <= chunk_budget, at
+            most one resumable chunk per step) instead of one whole-
+            prompt prefill between decode steps — token-identical
+            output, bounded ITL. Requires cache="paged" (the dense
+            pool's insert needs clamped-window cache shapes). None
+            keeps whole-prompt admission. chunk_budget >= max_batch - 1
+            + chunk granularity guarantees the prefill task progresses
+            every step even with a full decode batch.
         """
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
@@ -309,9 +330,30 @@ class ContinuousEngine:
         # prefills every same-bucket request in a single batched call.
         self.prefill_bucket = max(prefill_bucket,
                                   prompt_granularity(self.arch.cfg))
+        self.chunk_budget = chunk_budget
+        if chunk_budget is not None:
+            if not self.paged:
+                raise ValueError(
+                    "chunk_budget requires cache='paged': the chunked "
+                    "prefill cache is unclamped (full-length sliding-"
+                    "window rows) and only the paged insert can take "
+                    "its window tail")
+            # padded prompt lengths must divide into chunk-granularity
+            # multiples or the final chunk could be unreachable
+            g = chunk_granularity(self.arch.cfg)
+            self.prefill_bucket = -(-self.prefill_bucket // g) * g
         if self.paged:
             if retain_blocks is None:
-                retain_blocks = max(1, max_len // block_size)
+                # one BATCH's worth, not one request's: the bound must
+                # cover the sum of distinct hot prefixes or cyclic
+                # multi-tenant waves thrash the LRU to a ZERO hit rate
+                # (measured via retained_hit_rate: one request's worth
+                # scored 0.0 where one batch's worth scored 0.6 on a
+                # 3-tenant wave workload). Oversizing is cheap —
+                # retained blocks are reclaimed before any allocation
+                # fails, so the bound delays block reuse but never
+                # costs capacity.
+                retain_blocks = max(1, max_batch * (max_len // block_size))
             self.pool = PagedCachePool(
                 self.arch, max_batch, max_len, block_size=block_size,
                 slots_budget=slots_budget, share_prefix=share_prefix,
@@ -333,6 +375,11 @@ class ContinuousEngine:
                                       sampler=self.sampler)
         self._prefill = build_prefill_fn(self.arch, prefill_len)
         self._first, self._wants_keys = build_first_token_fn(self.sampler)
+        self._admission = None
+        if chunk_budget is not None:
+            self._admission = AdmissionController(
+                self.arch, self.params, chunk_budget=chunk_budget,
+                prefill_len=prefill_len)
 
         self._tokens = np.zeros((max_batch, 1), np.int32)
         self._positions = np.full((max_batch, 1), -1, np.int32)
@@ -402,6 +449,18 @@ class ContinuousEngine:
         plen = max(self._plen(req), 1)
         return -(-plen // self.prefill_bucket) * self.prefill_bucket
 
+    def _decode_slots(self) -> list:
+        """Active slots that DECODE this step — every scheduler-active
+        slot except the one bound to an in-flight chunked-prefill task
+        (it holds no pool blocks yet, its _positions row is -1, and it
+        must be invisible to growth, preemption and SLO eviction until
+        its insert finalizes). Without a controller this is exactly
+        sorted(scheduler.active)."""
+        skip = None
+        if self._admission is not None and self._admission.task is not None:
+            skip = self._admission.task.slot
+        return sorted(s for s in self.scheduler.active if s != skip)
+
     def _policy_ctx(self, now: Optional[float] = None,
                     warm_cache: Optional[dict] = None) -> PolicyContext:
         """Immutable decision-point snapshot for the scheduling policy.
@@ -422,11 +481,22 @@ class ContinuousEngine:
                 if warm_cache is not None:
                     warm_cache[req.rid] = w
                 return w
+        resume_cost = None
+        if self._admission is not None:
+            # chunked mode: a preemption's continuation prefill is
+            # metered chunk work — hand the policy its exact size so
+            # the base victim rule can minimize re-chunked tokens
+            def resume_cost(slot):
+                req = self.scheduler.active.get(slot)
+                if req is None:
+                    return 0
+                return len(req.prompt) + len(self._emitted.get(slot, ()))
         return PolicyContext(
             now=time.perf_counter() if now is None else now,
             admit_seq=self._admit_seq, admit_t=self._admit_time,
             active=self.scheduler.active,
-            submit_t=lambda r: r.trace.submit_t, prefix_warm=warm)
+            submit_t=lambda r: r.trace.submit_t, prefix_warm=warm,
+            resume_cost=resume_cost)
 
     def _fits(self, req: Request, pending: dict):
         """Admission gate for the paged pool: would this request's block
@@ -532,6 +602,92 @@ class ContinuousEngine:
             if failed:
                 return
 
+    # -- chunked admission (serving/admission.py) ---------------------
+
+    def _fits_chunked(self, req: Request) -> bool:
+        """Admission gate for a chunked prefill. Unlike _fits, the
+        blocks are consumed only at FINALIZE — many steps after this
+        decision, during which every decoding slot keeps growing — so
+        on top of the pool's static watermark the gate holds back a
+        DYNAMIC one: one block per decoding slot (the PR 5 watermark
+        follow-up, folded in as a controller input). Plans with
+        share=False: chunked blocks are never content-addressed (the
+        chunk schedule changes reduction shapes, so sharing would not
+        be bit-sound in bf16). A stale True still cannot corrupt
+        anything: finalize's NoBlocksError requeues the request and
+        the continuation prefill re-chunks identically."""
+        budget = req.max_new_tokens - len(self._resume_of(req))
+        need = self.pool.admission_plan(self._full_prompt(req),
+                                        self._plen(req),
+                                        self._padded_len(req), budget,
+                                        share=False)
+        hold = len(self._decode_slots())
+        avail = self.pool.admissible_blocks()
+        return all(n + hold <= avail[si] for si, n in need.items())
+
+    def _admit_chunked(self):
+        """Chunk-at-a-time admission: start at most one prefill TASK
+        (policy-picked, block-gated), advance it by one budget-sized
+        chunk, and on the final chunk insert its cache + emit the first
+        token — the same bookkeeping as _admit, one request at a time.
+        The task's slot joins the decode batch the step it finalizes."""
+        ctrl = self._admission
+        if ctrl.task is None and self.scheduler.free_slots \
+                and self.scheduler.queued:
+            i = self.sched_policy.pick(self.scheduler.queue_items(),
+                                       self._policy_ctx(warm_cache={}))
+            req = self.scheduler.peek(i)
+            if self._fits_chunked(req):
+                slot, req = self.scheduler.assign_at(i)
+                prompt = self._full_prompt(req)
+                padded = self._padded_len(req)
+                tokens, positions, _ = pad_prompts(
+                    [prompt], self.prefill_bucket, pad_len=padded)
+                ctrl.start(req, slot, tokens, positions,
+                           plen=len(prompt), padded_len=padded,
+                           resume_len=len(self._resume_of(req)),
+                           prompt=prompt)
+        task = ctrl.task
+        if task is None:
+            return
+        ctrl.advance(len(self._decode_slots()))
+        if not task.finished:
+            return
+        req, slot = task.req, task.slot
+        resume = self._resume_of(req)
+        try:
+            self.pool.insert(task.cache, slot, prompt=task.prompt,
+                             plen=task.plen, padded_len=task.padded_len,
+                             budget=req.max_new_tokens - len(resume),
+                             share=False)
+        except NoBlocksError:
+            # decoding slots grew past the gate's dynamic watermark:
+            # requeue at the arrival ticket, keep the continuation
+            # state parked — re-admission re-chunks exactly
+            self.scheduler.requeue(slot)
+            ctrl.drop()
+            return
+        first, rkeys = first_tokens(self._first, self.sampler,
+                                    self._wants_keys, task.last_logits,
+                                    [req], token_idx=[task.resume_len])
+        now = time.perf_counter()
+        self._resume.pop(req.rid, None)
+        t0 = int(first[0])
+        if req.trace.admit_t is None:   # keep the FIRST admission
+            req.trace.admit_t = now     # for TTFT
+        req.trace.mark_token(now)
+        self._emitted[slot] = list(resume) + [t0]
+        self._tokens[slot, 0] = t0
+        self._positions[slot, 0] = task.plen
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
+        self._admit_time[slot] = now
+        if rkeys is not None:
+            self._req_keys[slot] = rkeys[0]
+        ctrl.drop()
+        if len(self._emitted[slot]) >= req.max_new_tokens:
+            self._finish(slot)          # budget reached: done now
+
     def _preempt(self, slot: int):
         """Evict a mid-decode victim: blocks freed, generated-so-far
         tokens parked as continuation state, request requeued at its
@@ -554,7 +710,7 @@ class ContinuousEngine:
         list + reclaimable retained blocks) exhausts. Oldest admissions
         grow first and the default victim is the youngest, so the oldest
         request always makes progress — no livelock."""
-        for slot in sorted(self.scheduler.active,
+        for slot in sorted(self._decode_slots(),
                            key=lambda s: self._admit_seq.get(s, 0)):
             if slot not in self.scheduler.active:
                 continue            # preempted as a victim earlier in loop
@@ -569,7 +725,7 @@ class ContinuousEngine:
                             "paged arena exhausted mid-decode with "
                             "preemption disabled: raise slots_budget / "
                             "watermark, or enable preempt")
-                    candidates = sorted(self.scheduler.active)
+                    candidates = self._decode_slots()
                     victim = self.sched_policy.victim(candidates,
                                                       self._policy_ctx())
                     if victim == slot and len(candidates) == 1:
@@ -588,7 +744,7 @@ class ContinuousEngine:
         if self.sched_policy.slo_s is None or not self.scheduler.active:
             return
         ctx = self._policy_ctx()
-        for slot in sorted(self.scheduler.active):
+        for slot in self._decode_slots():
             if self.sched_policy.overdue(slot, ctx):
                 self.scheduler.active[slot].trace.evicted_slo = True
                 self._finish(slot)
@@ -598,15 +754,20 @@ class ContinuousEngine:
         growth (with preemption), then one pooled decode step. Returns
         False when no work remains."""
         self._evict_overdue()
-        self._admit()
+        if self._admission is not None:
+            self._admit_chunked()
+        else:
+            self._admit()
         if self.paged and self.pool.growth == "lazy":
             self._grow_active()
             self.pool.flush_growth()
-        active = sorted(self.scheduler.active)
+        active = self._decode_slots()
         self.max_concurrent = max(self.max_concurrent, len(active))
         self._depth.sample(self.scheduler.queued)
         if not active:
-            if self.scheduler.queued:
+            prefilling = (self._admission is not None
+                          and self._admission.task is not None)
+            if self.scheduler.queued and not prefilling:
                 req = self.scheduler.peek()
                 raise RuntimeError(
                     f"request rid={req.rid} (prompt {len(req.prompt)}, "
@@ -682,6 +843,12 @@ class ContinuousEngine:
             stats["growth"] = self.pool.growth
             stats["shared_block_hits"] = self.pool.shared_hits
             stats["retained_block_hits"] = self.pool.retained_hits
+            stats["prefix_misses"] = self.pool.prefix_misses
+            stats["retained_hit_rate"] = self.pool.retained_hit_rate
+        if self._admission is not None:
+            stats["chunk_budget"] = self.chunk_budget
+            stats["chunk_steps"] = self._admission.chunks_run
+            stats["chunk_tokens"] = self._admission.chunk_tokens
         return stats
 
 

@@ -70,6 +70,13 @@ def percentile(xs: List[float], q: float) -> float:
     return xs[k]
 
 
+def hit_rate(hits: int, misses: int) -> float:
+    """hits / (hits + misses); 0.0 when there was no demand at all.
+    Used for the retained-prefix LRU telemetry (cache_pool)."""
+    total = hits + misses
+    return hits / total if total > 0 else 0.0
+
+
 class DepthTracker:
     """Folds per-step queue-depth samples into max/mean/p50 with O(1)
     memory per sample: max/sum/count stream, and the p50 reads a

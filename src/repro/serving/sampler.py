@@ -18,6 +18,15 @@ byte-reproducible (asserted in tests/test_sampling.py).
 `temperature == 0` short-circuits to argmax — bit-exact greedy, the same
 computation `greedy_next` performs — so `--sampler temperature=0`
 degrades to the PR 2 greedy path by construction.
+
+`stable=1` arms a tie-tolerant greedy argmax for bf16 cross-layout
+differentials: two execution layouts (dense vs paged gather, chunked vs
+whole prefill) can legitimately round a logit one ulp apart, and when
+the two top logits sit within that ulp, plain argmax flips the token on
+layout alone. `stable_argmax` treats every logit within one bf16 ulp of
+the max as tied and picks the LOWEST index — the same winner under
+either rounding — so cross-layout differential gates can pin bf16 runs
+too (docs/serving.md).
 """
 from __future__ import annotations
 
@@ -25,6 +34,23 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+# one bf16 unit-in-last-place at magnitude ~1 (8-bit mantissa including
+# the hidden bit): the largest layout-induced wobble a single logit can
+# pick up from a bf16 rounding difference.
+BF16_EPS = 2.0 ** -7
+
+
+def stable_argmax(logits):
+    """(B, V) fp32 -> (B,) int32: lowest index within one bf16 ulp of
+    the row max. Ties broken by INDEX, not by sub-ulp noise, so the
+    winner is invariant to one-ulp cross-layout rounding differences."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    band = BF16_EPS * jnp.maximum(jnp.abs(m), 1.0)
+    tied = logits >= m - band
+    idx = jnp.arange(logits.shape[-1], dtype=jnp.int32)
+    v = jnp.int32(logits.shape[-1])
+    return jnp.min(jnp.where(tied, idx, v), axis=-1).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +60,7 @@ class Sampler:
     top_k: int = 0          # 0 disables
     top_p: float = 1.0      # 1.0 disables
     seed: int = 0
+    stable_tiebreak: bool = False   # greedy: bf16-ulp tie band, min index
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -49,8 +76,9 @@ class Sampler:
 
     @classmethod
     def parse(cls, spec) -> "Sampler":
-        """"greedy" | "k=v,..." with keys temperature/top_k/top_p/seed,
-        e.g. --sampler temperature=0.8,top_k=40,top_p=0.95,seed=1."""
+        """"greedy" | "k=v,..." with keys temperature/top_k/top_p/seed/
+        stable, e.g. --sampler temperature=0,stable=1 (greedy with the
+        bf16 tie-tolerant argmax)."""
         if spec is None or isinstance(spec, Sampler):
             return spec
         if spec == "greedy":
@@ -61,9 +89,12 @@ class Sampler:
             if not _:
                 raise ValueError(f"bad sampler spec item {part!r}")
             k = k.strip()
-            if k not in ("temperature", "top_k", "top_p", "seed"):
+            if k not in ("temperature", "top_k", "top_p", "seed", "stable"):
                 raise ValueError(f"unknown sampler key {k!r}")
-            kwargs[k] = int(v) if k in ("top_k", "seed") else float(v)
+            if k == "stable":
+                kwargs["stable_tiebreak"] = bool(int(v))
+            else:
+                kwargs[k] = int(v) if k in ("top_k", "seed") else float(v)
         return cls(**kwargs)
 
     def sample(self, logits, keys):
@@ -74,6 +105,8 @@ class Sampler:
         renormalized softmax over the kept set.
         """
         if self.greedy:
+            if self.stable_tiebreak:
+                return stable_argmax(logits)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         t = logits / jnp.float32(self.temperature)
         top_k = min(self.top_k, logits.shape[-1])  # k >= vocab: keep all

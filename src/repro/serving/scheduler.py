@@ -207,6 +207,13 @@ class PolicyContext:
     prefix_warm: callable(request) -> bool, True when the request's
         leading prompt block is already resident in the paged pool
         (None when the pool cannot answer, e.g. the dense pool).
+    resume_cost: callable(slot) -> tokens a preemption of that slot
+        would have to re-prefill (prompt + generated so far). Set only
+        by the CHUNKED admission controller, where re-prefilling is
+        metered chunk work competing with decodes for the step budget —
+        the base victim rule then minimizes it. None keeps the classic
+        youngest-admission victim (the PR 5 behaviour, which the
+        non-chunked differential tests pin).
     """
     now: float = 0.0
     admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -214,6 +221,7 @@ class PolicyContext:
     active: Dict[int, Any] = dataclasses.field(default_factory=dict)
     submit_t: Callable[[Any], float] = lambda req: 0.0
     prefix_warm: Optional[Callable[[Any], bool]] = None
+    resume_cost: Optional[Callable[[int], int]] = None
 
 
 class SchedulingPolicy:
@@ -237,7 +245,16 @@ class SchedulingPolicy:
     def victim(self, slots: Sequence[int], ctx: PolicyContext) -> int:
         """Default: the youngest admission — it has generated the least
         (its continuation prefill redoes the least work) and preempting
-        it keeps arrival order intact when it re-enters the queue."""
+        it keeps arrival order intact when it re-enters the queue.
+
+        When the context carries a resume_cost (chunked admission), the
+        proxy becomes exact: pick the slot whose continuation prefill
+        re-chunks the FEWEST tokens (prompt + generated), tie-broken by
+        youngest admission. A short-prompt late arrival no longer beats
+        a long-prompt one purely on admission order."""
+        if ctx.resume_cost is not None:
+            return min(slots, key=lambda s: (ctx.resume_cost(s),
+                                             -ctx.admit_seq.get(s, -1)))
         return max(slots, key=lambda s: ctx.admit_seq.get(s, -1))
 
     # -- SLO: should this active slot be evicted early? ---------------

@@ -1,0 +1,466 @@
+"""Chunked-prefill admission + open-loop traffic (serving/admission.py,
+serving/traffic.py).
+
+The load-bearing claims, each asserted here:
+
+  * BUDGET PARTITION: plan_chunk never displaces a decode (size +
+    n_active <= budget), emits only granularity * 2^k sizes (bounded
+    compile set), never overshoots the prompt, and always progresses
+    once spare capacity allows — property-tested as a hypothesis state
+    machine that drives one task to completion under adversarial
+    decode counts;
+  * CHUNK-BOUNDARY EXACTNESS (the differential): chunked admission is
+    token-identical to whole-prompt prefill — fp32 across ALL engine
+    layouts (static == dense == paged == chunked), bf16 within the
+    same layout (paged whole vs paged chunked, plain and tie-stable
+    greedy), and on a mamba-hybrid arch whose SSD scan dictates the
+    chunk granularity;
+  * the PR 5 follow-ups folded into the controller: preemption-victim
+    selection minimizes resume cost when the context carries one, and
+    the dynamic-watermark gate + finalize requeue keep a scarce arena
+    correct (preemption/requeue stays output-invisible);
+  * OPEN-LOOP: the driver submits on the arrival clock (fake-clock
+    deterministic test), SLO accounting flags exactly the violating
+    traces, and chunked vs unchunked open-loop replays of one arrival
+    schedule emit identical tokens;
+  * telemetry: retained-LRU hit rate + prefix-miss counters surface in
+    the report, and stable_argmax is one-ulp tie-invariant.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_serving_requests as make_requests
+from conftest import setup_serving_arch as setup_arch
+from repro.serving import (AdmissionController, ContinuousEngine,
+                           OpenLoopDriver, PolicyContext, SLO,
+                           Sampler, SchedulingPolicy, ServeEngine,
+                           bimodal_requests, chunk_granularity, hit_rate,
+                           meets_slo, plan_chunk, poisson_arrivals,
+                           slo_report, stable_argmax)
+from repro.serving.metrics import RequestTrace
+
+pytestmark = [pytest.mark.serving, pytest.mark.chunked]
+
+MAX_LEN = 48
+
+SPEC = [(7, 4), (23, 6), (5, 1), (17, 3), (11, 4)]
+
+
+def tokens_of(reqs):
+    return [list(r.generated) for r in reqs]
+
+
+# --------------------------------------------------------------------------
+# plan_chunk: the budget partition (pure host function)
+# --------------------------------------------------------------------------
+
+def test_plan_chunk_basics():
+    # spare = 8 - 3 = 5, remaining 32 -> largest gran*2^k <= 5 is 4
+    assert plan_chunk(8, 3, 2, 32) == 4
+    # full decode batch leaves no spare
+    assert plan_chunk(8, 8, 2, 32) == 0
+    # nothing left to chunk
+    assert plan_chunk(8, 0, 2, 0) == 0
+    # idle step: whole budget, quantized to a power of two
+    assert plan_chunk(12, 0, 2, 64) == 8
+    # final partial chunk is exactly what remains
+    assert plan_chunk(12, 0, 2, 4) == 4
+    # mamba-style granularity
+    assert plan_chunk(16, 3, 4, 64) == 8
+
+
+def test_plan_chunk_state_machine():
+    """Drive one prefill task to completion under adversarial decode
+    counts: the budget partition must conserve the budget every step,
+    quantize sizes, and finish the prompt with no unreachable tail."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import settings
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    st = hypothesis.strategies
+
+    class ChunkAccounting(RuleBasedStateMachine):
+        @initialize(gran=st.sampled_from([2, 4]), budget_mult=st.integers(1, 8),
+                    prompt_mult=st.integers(1, 24))
+        def setup(self, gran, budget_mult, prompt_mult):
+            self.gran = gran
+            self.budget = gran * budget_mult
+            self.padded = gran * prompt_mult
+            self.offset = 0
+            self.sizes = []
+
+        @rule(n_active=st.integers(0, 32))
+        def step(self, n_active):
+            remaining = self.padded - self.offset
+            size = plan_chunk(self.budget, n_active, self.gran, remaining)
+            if size:
+                # budget conservation: decodes always got their token
+                assert size + n_active <= self.budget
+                # quantized: granularity * 2^k exactly
+                q = size // self.gran
+                assert size % self.gran == 0 and q & (q - 1) == 0
+                assert size <= remaining
+            else:
+                # no progress only when genuinely impossible
+                assert remaining == 0 or \
+                    self.budget - n_active < self.gran
+            self.offset += size
+            self.sizes.append(size)
+
+        @invariant()
+        def aligned_and_bounded(self):
+            if not hasattr(self, "padded"):
+                return      # before initialize
+            assert 0 <= self.offset <= self.padded
+            assert self.offset % self.gran == 0
+            assert sum(self.sizes) == self.offset
+
+    ChunkAccounting.TestCase.settings = settings(
+        max_examples=60, deadline=None)
+    ChunkAccounting.TestCase().runTest()
+
+
+def test_controller_size_set_and_guards():
+    arch, params = setup_arch("gemma2-2b")
+    ctrl = AdmissionController(arch, params, chunk_budget=12,
+                               prefill_len=MAX_LEN)
+    # granularity * 2^k up to the budget: the whole compile set
+    g = chunk_granularity(arch.cfg)
+    assert ctrl.sizes() == [g * 2 ** k for k in range(4) if g * 2 ** k <= 12]
+    assert set(plan_chunk(12, a, g, 64) for a in range(13)) <= \
+        set(ctrl.sizes()) | {0}
+    with pytest.raises(ValueError, match="granularity"):
+        AdmissionController(arch, params, chunk_budget=1,
+                            prefill_len=MAX_LEN)
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                         cache="dense", chunk_budget=8)
+
+
+# --------------------------------------------------------------------------
+# the acceptance differential: chunked == whole-prompt prefill
+# --------------------------------------------------------------------------
+
+def _chunked_engine(arch, params, policy="fp32", sampler="greedy", **kw):
+    kw.setdefault("chunk_budget", 6)
+    return ContinuousEngine(arch, params, max_batch=3, max_len=MAX_LEN,
+                            policy=policy, cache="paged", block_size=8,
+                            prefill_bucket=8, sampler=sampler, **kw)
+
+
+def test_chunked_quad_identity_fp32():
+    """static == dense == paged == chunked, greedy fp32: chunk-resumable
+    prefill is token-identical to whole-prompt prefill across every
+    engine layout."""
+    arch, params = setup_arch("gemma2-2b")
+    outs = []
+    for build in (
+            lambda: ServeEngine(arch, params, max_len=MAX_LEN,
+                                policy="fp32"),
+            lambda: ContinuousEngine(arch, params, max_batch=2,
+                                     max_len=MAX_LEN, policy="fp32",
+                                     cache="dense", prefill_bucket=8),
+            lambda: ContinuousEngine(arch, params, max_batch=3,
+                                     max_len=MAX_LEN, policy="fp32",
+                                     cache="paged", block_size=8,
+                                     prefill_bucket=8),
+            lambda: _chunked_engine(arch, params)):
+        reqs = make_requests(arch, SPEC)
+        build().run_batch(reqs)
+        outs.append(tokens_of(reqs))
+    assert outs[0] == outs[1] == outs[2] == outs[3]
+
+
+def test_chunked_report_counters():
+    arch, params = setup_arch("gemma2-2b")
+    reqs = make_requests(arch, SPEC)
+    eng = _chunked_engine(arch, params)
+    eng.run_batch(reqs)
+    eng.pool.check_invariants()
+    stats = eng.report(1.0)
+    assert stats["chunk_budget"] == 6
+    # every admission was chunked: at least ceil(padded / budget-max)
+    assert stats["chunk_steps"] >= len(SPEC)
+    # padded rows chunked covers every prompt's padded length
+    assert stats["chunk_tokens"] >= sum(-(-n // 8) * 8 for n, _ in SPEC)
+    # share=False: chunked blocks are never content-addressed, so they
+    # neither hit nor miss the prefix registry
+    assert stats["prefix_misses"] == 0
+    assert 0.0 <= stats["retained_hit_rate"] <= 1.0
+
+
+@pytest.mark.paged
+def test_chunked_bf16_same_layout():
+    """Same-layout bf16 pair: paged whole-prefill vs paged chunked emit
+    identical tokens under plain greedy AND the tie-stable argmax (the
+    cross-layout bf16 caveat does not apply within one layout, and
+    stable=1 additionally pins one-ulp ties to the lowest index)."""
+    arch, params = setup_arch("qwen2.5-14b")
+    for sampler in ("greedy", "temperature=0,stable=1"):
+        outs = []
+        for build in (
+                lambda: ContinuousEngine(arch, params, max_batch=3,
+                                         max_len=MAX_LEN, policy="bf16",
+                                         cache="paged", block_size=8,
+                                         prefill_bucket=8, sampler=sampler),
+                lambda: _chunked_engine(arch, params, policy="bf16",
+                                        sampler=sampler)):
+            reqs = make_requests(arch, SPEC)
+            build().run_batch(reqs)
+            outs.append(tokens_of(reqs))
+        assert outs[0] == outs[1], f"sampler={sampler}"
+
+
+def test_chunked_mamba_granularity():
+    """Hybrid attention+mamba arch: chunk sizes must be multiples of the
+    SSD scan chunk, and chunked output still matches whole-prefill."""
+    arch, params = setup_arch("jamba-1.5-large-398b")
+    g = chunk_granularity(arch.cfg)
+    assert g % arch.cfg.mamba_chunk == 0 and g >= 2
+    outs = []
+    for build in (
+            lambda: ContinuousEngine(arch, params, max_batch=3,
+                                     max_len=MAX_LEN, policy="fp32",
+                                     cache="paged", block_size=8,
+                                     prefill_bucket=8),
+            lambda: _chunked_engine(arch, params, chunk_budget=4 * g)):
+        reqs = make_requests(arch, SPEC)
+        eng = build()
+        eng.run_batch(reqs)
+        outs.append(tokens_of(reqs))
+    assert outs[0] == outs[1]
+    # the engine rounded its prefill bucket up to a granularity multiple
+    assert _chunked_engine(arch, params,
+                           chunk_budget=4 * g).prefill_bucket % g == 0
+
+
+@pytest.mark.sched
+def test_chunked_scarce_arena_requeue_invisible():
+    """Dynamic watermark + finalize requeue under a scarce arena: long
+    budgets force growth preemptions around in-flight chunk tasks, and
+    the output still matches an unconstrained whole-prefill run —
+    preemption, requeue and re-chunking are output-invisible."""
+    arch, params = setup_arch("gemma2-2b")
+    spec = [(7, 10), (23, 10), (11, 10), (17, 10)]
+    reqs = make_requests(arch, spec)
+    ref = ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                           policy="fp32", cache="paged", block_size=8,
+                           prefill_bucket=8)
+    ref.run_batch(reqs)
+    want = tokens_of(reqs)
+    reqs = make_requests(arch, spec)
+    eng = _chunked_engine(arch, params, slots_budget=2)
+    eng.run_batch(reqs)
+    eng.pool.check_invariants()
+    assert tokens_of(reqs) == want
+
+
+def test_resume_cost_victim():
+    """Base victim rule: with resume_cost in the context pick the slot
+    whose continuation re-chunks the fewest tokens (tie: youngest
+    admission); without one, the classic youngest-admission victim."""
+    pol = SchedulingPolicy()
+    seq = {0: 1, 1: 2, 2: 3}
+    ctx = PolicyContext(admit_seq=seq,
+                        resume_cost=lambda s: {0: 40, 1: 8, 2: 16}[s])
+    assert pol.victim([0, 1, 2], ctx) == 1
+    tie = PolicyContext(admit_seq=seq,
+                        resume_cost=lambda s: {0: 8, 1: 8, 2: 16}[s])
+    assert pol.victim([0, 1, 2], tie) == 1    # tie -> youngest of the tied
+    classic = PolicyContext(admit_seq=seq)
+    assert pol.victim([0, 1, 2], classic) == 2
+
+
+# --------------------------------------------------------------------------
+# open-loop traffic
+# --------------------------------------------------------------------------
+
+def test_poisson_arrivals_seeded():
+    a = poisson_arrivals(64, 10.0, seed=3)
+    b = poisson_arrivals(64, 10.0, seed=3)
+    assert np.array_equal(a, b)
+    assert np.all(np.diff(a) > 0) and a[0] > 0
+    # mean inter-arrival ~ 1/rate (loose: seeded, so deterministic)
+    assert 0.05 < np.mean(np.diff(a)) < 0.2
+    with pytest.raises(ValueError):
+        poisson_arrivals(4, 0.0)
+
+
+def test_bimodal_requests_deterministic():
+    arch, _ = setup_arch("gemma2-2b")
+    a = bimodal_requests(16, arch.cfg.vocab, short_len=8, long_len=64,
+                         new_tokens=4, long_frac=0.5, seed=9)
+    b = bimodal_requests(16, arch.cfg.vocab, short_len=8, long_len=64,
+                         new_tokens=4, long_frac=0.5, seed=9)
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    lens = [len(r.prompt) for r in a]
+    assert any(n >= 48 for n in lens) and any(n <= 8 for n in lens)
+
+
+def _trace(submit, token_ts):
+    t = RequestTrace(submit_t=submit)
+    for ts in token_ts:
+        t.mark_token(ts)
+    return t
+
+
+def test_slo_accounting():
+    slo = SLO(ttft_ms=100.0, itl_ms=50.0)
+    good = _trace(0.0, [0.05, 0.08, 0.12])
+    late_first = _trace(0.0, [0.2, 0.22])           # TTFT 200ms
+    stalled = _trace(0.0, [0.05, 0.30])             # one 250ms gap
+    assert meets_slo(good, slo)
+    assert not meets_slo(late_first, slo)
+    assert not meets_slo(stalled, slo)              # ONE gap disqualifies
+
+    class R:
+        def __init__(self, trace, n):
+            self.trace, self.generated = trace, list(range(n))
+    reqs = [R(good, 3), R(late_first, 2), R(stalled, 2)]
+    rep = slo_report(reqs, slo, wall_s=1.0)
+    assert rep["goodput_tokens_per_s"] == 3.0       # only the good stream
+    assert rep["tokens_per_s"] == 7.0
+    assert rep["ttft_violations"] == 1 and rep["itl_violations"] == 1
+    assert rep["slo_attainment"] == pytest.approx(1 / 3)
+    with pytest.raises(ValueError):
+        SLO(ttft_ms=0.0, itl_ms=1.0)
+
+
+def test_open_loop_driver_fake_clock():
+    """Deterministic driver semantics on a fake clock: requests submit
+    at their arrival offsets (never early), the engine only steps when
+    it has work, and idle time sleeps to the next arrival."""
+    class FakeEngine:
+        def __init__(self):
+            self.log = []
+            self.pending = 0
+
+            class Sched:
+                has_work = property(lambda s: self.pending > 0)
+            self.scheduler = Sched()
+
+        def submit(self, req):
+            self.log.append(("submit", req, clock["t"]))
+            self.pending += 1
+
+        def step(self):
+            self.log.append(("step", None, clock["t"]))
+            clock["t"] += 0.01          # a step costs 10ms
+            self.pending -= 1           # one req finishes per step
+
+    clock = {"t": 5.0}                  # nonzero base: offsets, not epochs
+
+    def sleep(dt):
+        assert dt > 0
+        # a real sleep always lands past the deadline; a pure `+= dt`
+        # can round away below the clock's ulp and spin forever
+        clock["t"] += max(dt, 1e-6)
+
+    eng = FakeEngine()
+    arrivals = [0.02, 0.30, 0.30]       # a burst after an idle gap
+    drv = OpenLoopDriver(eng, ["a", "b", "c"], arrivals,
+                         time_fn=lambda: clock["t"], sleep_fn=sleep)
+    wall = drv.run()
+    subs = [(r, t - 5.0) for op, r, t in eng.log if op == "submit"]
+    # never submitted before its arrival offset
+    for (r, t), arr in zip(subs, arrivals):
+        assert t >= arr - 1e-9
+    assert [r for r, _ in subs] == ["a", "b", "c"]
+    assert sum(1 for op, _, _ in eng.log if op == "step") == 3
+    assert wall == pytest.approx(clock["t"] - 5.0)
+    with pytest.raises(ValueError):
+        OpenLoopDriver(eng, ["a"], [0.1, 0.2])
+
+
+def test_open_loop_replay_identity():
+    """Chunked vs unchunked engines driven by the SAME seeded arrival
+    schedule emit identical tokens — open-loop scheduling (arrival
+    timing, queue order, chunk sizes) never leaks into the output."""
+    arch, params = setup_arch("gemma2-2b")
+    arrivals = poisson_arrivals(6, 50.0, seed=2)
+    outs = []
+    for chunk_budget in (None, 6):
+        reqs = bimodal_requests(6, arch.cfg.vocab, short_len=5,
+                                long_len=24, new_tokens=4, long_frac=0.5,
+                                seed=4)
+        eng = ContinuousEngine(arch, params, max_batch=3, max_len=MAX_LEN,
+                               policy="fp32", cache="paged", block_size=8,
+                               prefill_bucket=8, chunk_budget=chunk_budget)
+        OpenLoopDriver(eng, reqs, arrivals).run()
+        assert all(r.generated is not None for r in reqs)
+        outs.append(tokens_of(reqs))
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------------------------------
+# telemetry + stable argmax
+# --------------------------------------------------------------------------
+
+def test_hit_rate_unit():
+    assert hit_rate(0, 0) == 0.0
+    assert hit_rate(3, 1) == 0.75
+    assert hit_rate(0, 5) == 0.0
+
+
+@pytest.mark.sched
+def test_retained_hit_rate_telemetry():
+    """Two waves sharing a system prompt: wave 2 revives wave 1's
+    retained prefix blocks, and the report's retained_hit_rate /
+    prefix_misses reflect exactly that."""
+    arch, params = setup_arch("gemma2-2b")
+    eng = ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                           policy="fp32", cache="paged", block_size=8,
+                           prefill_bucket=8, retain_blocks=8)
+    for seed in (1, 2):     # distinct tails, same prefix stream
+        eng.run_batch(make_requests(arch, [(5, 2), (7, 2)], seed=seed,
+                                    prefix=16, prefix_seed=1))
+    stats = eng.report(1.0)
+    assert stats["retained_block_hits"] >= 1
+    assert stats["prefix_misses"] >= 1
+    assert stats["retained_hit_rate"] == pytest.approx(
+        hit_rate(stats["retained_block_hits"], stats["prefix_misses"]))
+    assert stats["retained_hit_rate"] > 0.0
+
+
+@pytest.mark.sched
+def test_retain_blocks_default_covers_working_set():
+    """The evidence behind the retain_blocks default (one BATCH's worth,
+    max_batch * max_len / block_size): on cyclic multi-tenant waves the
+    old one-request's-worth bound LRU-thrashes to a zero hit rate, while
+    the default holds the whole working set warm."""
+    arch, params = setup_arch("gemma2-2b")
+
+    def run(retain_blocks):
+        eng = ContinuousEngine(arch, params, max_batch=3, max_len=64,
+                               policy="fp32", cache="paged", block_size=8,
+                               prefill_bucket=8,
+                               retain_blocks=retain_blocks)
+        for wave in range(3):
+            for tenant in range(3):    # per-tenant system prompt
+                eng.run_batch(make_requests(
+                    arch, [(5, 2), (9, 2)], seed=100 * wave + tenant,
+                    prefix=16, prefix_seed=tenant))
+        return eng.report(1.0)["retained_hit_rate"]
+
+    assert run(64 // 8) == 0.0          # one request's worth: thrash
+    assert run(None) > 0.5              # default (one batch's worth)
+
+
+def test_stable_argmax_tie_invariance():
+    import jax.numpy as jnp
+    from repro.serving.sampler import BF16_EPS
+    # a one-ulp tie: plain argmax picks whichever index holds the max
+    # bit pattern; stable_argmax picks the LOWEST tied index either way
+    row_a = jnp.asarray([[0.0, 1.0, 1.0 - BF16_EPS / 2, -3.0]])
+    row_b = jnp.asarray([[0.0, 1.0 - BF16_EPS / 2, 1.0, -3.0]])
+    assert int(stable_argmax(row_a)[0]) == 1
+    assert int(stable_argmax(row_b)[0]) == 1
+    # far-apart logits: degrades to plain argmax
+    clear = jnp.asarray([[0.0, 5.0, 1.0]])
+    assert int(stable_argmax(clear)[0]) == 1
+    # batch shape + dtype
+    out = stable_argmax(jnp.concatenate([row_a, row_b]))
+    assert out.shape == (2,) and out.dtype == jnp.int32
+    s = Sampler.parse("temperature=0,stable=1")
+    assert s.greedy and s.stable_tiebreak
+    assert int(s.sample(row_b, None)[0]) == 1

@@ -71,6 +71,31 @@ def test_serving_doc_covers_scheduler_contract():
         "scheduling section lost its bash example")
 
 
+def test_serving_doc_covers_chunked_prefill():
+    """The chunked-prefill/open-loop section of docs/serving.md must
+    keep its anchors and runnable fences: the budget partition, the
+    chunk-boundary exactness argument, the share=False rationale and
+    the SLO/goodput definitions are the contracts tests/test_admission.py
+    and the open-loop benchmark gate on."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    for anchor in ("## Chunked prefill and open-loop goodput",
+                   "Budget partition", "Chunk-boundary exactness",
+                   "share=False", "SLOs and goodput"):
+        assert anchor in text, f"serving.md lost its '{anchor}' anchor"
+    sect = text.split("## Chunked prefill and open-loop goodput", 1)[1]
+    sect = sect.split("## Flag map", 1)[0]
+    path = ROOT / "docs" / "serving.md"
+    assert any(code in sect for _, code in _fences(path, "python")), (
+        "chunked-prefill section lost its python example")
+    assert any(code in sect for _, code in _fences(path, "bash")), (
+        "chunked-prefill section lost its bash example")
+    for flag in ("--chunk-budget", "--arrival-rate", "--ttft-slo-ms",
+                 "--itl-slo-ms"):
+        assert flag in text, f"serving.md flag map lost {flag}"
+        assert flag in (ROOT / "README.md").read_text(), (
+            f"README flag table lost {flag}")
+
+
 @pytest.mark.parametrize("path,line,code", _cases("python"))
 def test_python_fences_parse(path, line, code):
     try:
