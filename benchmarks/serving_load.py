@@ -1,7 +1,8 @@
 """Serving load generator: paged vs dense pools, continuous vs static,
-lazy vs eager chain growth, chunked prefill under open-loop traffic.
+lazy vs eager chain growth, chunked prefill under open-loop traffic,
+speculative draft-verify decode on a low-entropy stream.
 
-Four workloads:
+Five workloads:
 
   mixed          (default) heterogeneous prompt lengths and generation
                  budgets with NO common prefix — the traffic shape where
@@ -29,6 +30,22 @@ Four workloads:
                  retained-prefix revivals > 0 on the second wave: the
                  prefix blocks survive refcount 0 on the bounded LRU and
                  are reused copy-free across waves.
+  low-entropy    speculative decoding's best case, constructed rather
+                 than sampled: make_spec_pair doctors the target so its
+                 upper periods are inert (output projections zeroed —
+                 identity residual blocks) and hands the bottom period
+                 to a one-period draft sharing the embedding and head,
+                 so the draft proposes EXACTLY what the target verifies
+                 and every round commits a full --spec-k block. At each
+                 batch size 1-4 a speculative engine races the plain
+                 paged engine on the same seeded stream: tokens must
+                 match bit-exactly (greedy fp32), acceptance must be
+                 1.0, spec ITL p50 must undercut plain by
+                 --spec-itl-ratio (a round stamps spec_k tokens per
+                 verify step), and the verify/draft steps must compile
+                 exactly once across admission/finish churn and the
+                 budget-truncated rollbacks at non-multiple-of-K
+                 budgets.
   open-loop      mostly-short prompts with a long-prompt minority,
                  arriving on a seeded Poisson clock that does NOT wait
                  for the server (serving/traffic.py). Phase A re-checks
@@ -82,6 +99,9 @@ at equal arena memory, zero mismatches (preemption included), and
 wave-2 retained-prefix revivals > 0. PASS (open-loop): zero mismatches
 in both identity sets, chunked goodput >= --goodput-ratio x unchunked,
 unchunked ITL violations >= 1, chunked ITL p99 <= --tail-ratio x p50.
+PASS (low-entropy): zero spec-vs-plain mismatches, acceptance >= 0.999,
+plain ITL p50 >= --spec-itl-ratio x spec ITL p50 at every batch size
+1-4, verify/draft `_cache_size() == 1`.
 """
 from __future__ import annotations
 
@@ -266,6 +286,86 @@ def run_bursty_long(arch, params, args, mk_workload, max_len):
     return results, gates
 
 
+def run_low_entropy(arch, params, args, max_len):
+    """Speculative decoding gate at batch 1..4 (see module docstring,
+    PASS (low-entropy)). The target/draft pair comes from
+    make_spec_pair: the target's upper periods are inert, the draft IS
+    the bottom period, so acceptance is 1.0 by construction and every
+    round commits a full spec_k block — isolating the mechanics
+    (draft micro-steps, S=K verify, rollback plumbing) from draft
+    quality. --spec-draft self swaps in the UNdoctored target as its
+    own draft: same tokens, still acceptance 1.0, but rounds cost full
+    target steps — the correctness soak, not the latency demo."""
+    from repro.serving import ContinuousEngine, make_spec_pair
+    if args.spec_draft == "truncated":
+        params, draft_arch, draft_params = make_spec_pair(arch, params)
+    else:                                  # self-draft soak
+        draft_arch, draft_params = arch, params
+
+    def mk_reqs():
+        return synthetic_requests(
+            args.requests, arch.cfg.vocab, prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens, seed=args.seed, min_new_frac=0.75)
+
+    results, gates = {}, {}
+    mismatch = 0
+    for mb in (1, 2, 3, 4):
+        engines = {}
+        for name, kw in (("plain", {}),
+                         ("spec", {"spec_draft": (draft_arch, draft_params),
+                                   "spec_k": args.spec_k})):
+            engines[name] = ContinuousEngine(
+                arch, params, max_batch=mb, max_len=max_len,
+                policy=args.precision, prefill_bucket=args.prefill_bucket,
+                cache="paged", block_size=args.block_size,
+                sampler=args.sampler, **kw)
+        best, outs = {}, {}
+        for rep in range(args.reps + 1):
+            for name, eng in engines.items():
+                reqs = mk_reqs()
+                t0 = time.perf_counter()
+                eng.run(reqs)
+                dt = time.perf_counter() - t0
+                outs[name] = reqs
+                if rep == 0:
+                    continue               # warmup: compiles cached
+                stats = aggregate([r.trace for r in reqs], dt,
+                                  sum(len(r.generated) for r in reqs))
+                if (name not in best or stats["tokens_per_s"]
+                        > best[name]["tokens_per_s"]):
+                    best[name] = stats
+            if rep > 0:
+                mismatch += check_tokens(outs, "plain")
+        spec_eng = engines["spec"]
+        rep_stats = spec_eng.report(1.0)
+        for name in best:
+            best[name]["decode_steps"] = engines[name].steps_run
+        best["spec"]["acceptance_rate"] = rep_stats["acceptance_rate"]
+        best["spec"]["spec_rounds"] = rep_stats["spec_rounds"]
+        print(f"--- batch {mb} (acceptance "
+              f"{rep_stats['acceptance_rate']:.3f}, "
+              f"{rep_stats['spec_rounds']} rounds) ---")
+        print_stats(best)
+        # a full-acceptance round commits spec_k tokens against ONE
+        # itl timestamp gap, so spec p50 collapses versus one-token
+        # rounds; cap the ratio like goodput_ratio does
+        ratio = min(best["plain"]["itl_p50_ms"]
+                    / max(best["spec"]["itl_p50_ms"], 1e-9), 100.0)
+        gates[f"itl_ratio_b{mb}"] = gate(ratio, args.spec_itl_ratio)
+        gates[f"acceptance_b{mb}"] = gate(
+            rep_stats["acceptance_rate"], 0.999)
+        # accept/finish churn must never retrace the verify or draft
+        # steps (the _cache_size()==1 claim of the rollback design)
+        gates[f"verify_compiles_b{mb}"] = gate(
+            spec_eng._verify._cache_size(), 1, op="<=")
+        gates[f"draft_compiles_b{mb}"] = gate(
+            spec_eng._draft_step._cache_size(), 1, op="<=")
+        results[f"plain_b{mb}"] = best["plain"]
+        results[f"spec_b{mb}"] = best["spec"]
+    gates["token_mismatches"] = gate(mismatch, 0, op="<=")
+    return results, gates
+
+
 def run_open_loop(arch, params, args, max_len):
     """Chunked-prefill admission under open-loop Poisson traffic:
     token identity first (closed loop), then goodput at a fixed
@@ -410,7 +510,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
                     choices=["mixed", "shared-prefix", "bursty-long",
-                             "open-loop"],
+                             "open-loop", "low-entropy"],
                     default="mixed")
     ap.add_argument("--arch", default=None,
                     help="default: gemma2-2b (mixed) / qwen2.5-14b "
@@ -472,6 +572,21 @@ def main():
                     help="open-loop PASS gate: chunked ITL p99 <= ratio "
                          "x chunked ITL p50 (metered prefill keeps the "
                          "tail near the median)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="low-entropy: draft tokens proposed/verified "
+                         "per speculative round")
+    ap.add_argument("--spec-draft", default="truncated",
+                    choices=["truncated", "self"],
+                    help="low-entropy draft source: 'truncated' = "
+                         "make_spec_pair's one-period draft under an "
+                         "inert-upper target (the latency demo); "
+                         "'self' = the target drafts for itself "
+                         "(correctness soak, no compute saving)")
+    ap.add_argument("--spec-itl-ratio", type=float, default=2.0,
+                    help="low-entropy PASS gate: non-spec ITL p50 >= "
+                         "ratio x spec ITL p50 at every batch size 1-4 "
+                         "(a full-acceptance round commits spec_k "
+                         "tokens per verify step)")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "bf16_compute", "fp16"])
     ap.add_argument("--sampler", default=None,
@@ -481,10 +596,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     args.sampler = Sampler.parse(args.sampler)
+    if args.sampler is None and args.precision.startswith("bf16"):
+        # identity gates under bf16 default to the tie-stable greedy
+        # argmax: cross-layout one-ulp logit ties no longer require
+        # pinning the benchmark to fp32
+        args.sampler = Sampler.parse("temperature=0,stable=1")
 
     shared = args.workload == "shared-prefix"
     bursty = args.workload == "bursty-long"
     open_loop = args.workload == "open-loop"
+    low_entropy = args.workload == "low-entropy"
     arch_name = args.arch or (
         "gemma2-2b" if args.workload in ("mixed", "open-loop")
         else "qwen2.5-14b")
@@ -508,6 +629,11 @@ def main():
         # budgets dwarf prompts: whole-chain reservation strands rows
         args.requests = min(args.requests, 16)
         args.prompt_len, args.new_tokens, args.prefix_len = 8, 32, 24
+    elif low_entropy:
+        # small request count: the gate sweeps batch sizes 1..4 and the
+        # batch-1 engine decodes every request serially
+        args.requests = min(args.requests, 8)
+        args.prompt_len, args.new_tokens = 8, 16
     prefix = args.prefix_len if shared else 0
     max_len = prefix + args.prompt_len + args.new_tokens \
         + args.prefill_bucket
@@ -535,6 +661,8 @@ def main():
                                          max_len)
     elif open_loop:
         results, gates = run_open_loop(arch, params, args, max_len)
+    elif low_entropy:
+        results, gates = run_low_entropy(arch, params, args, max_len)
     else:
         mk = (arch, params, mk_workload(args.seed), args, max_len)
         if shared:

@@ -7,6 +7,7 @@
 #   scripts/run_tests.sh --paged    # only the paged-cache/allocator suite
 #   scripts/run_tests.sh --sched    # scheduler/lazy-growth/preemption suite
 #   scripts/run_tests.sh --chunked  # chunked-prefill admission + open-loop
+#   scripts/run_tests.sh --spec     # speculative decode / rollback / wrap-COW
 #   scripts/run_tests.sh --docs     # smoke-check docs/README code fences
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
@@ -31,6 +32,10 @@ fi
 if [[ "${1:-}" == "--chunked" ]]; then
   shift
   exec python -m pytest -x -q -m "chunked" "$@"
+fi
+if [[ "${1:-}" == "--spec" ]]; then
+  shift
+  exec python -m pytest -x -q -m "spec" "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
   shift

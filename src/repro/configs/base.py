@@ -110,23 +110,27 @@ class Arch:
         raise ValueError(f"{self.kind} has no decode cache")
 
     def init_paged_cache(self, batch: int, max_len: int, *,
-                         block_size: int = 16, n_blocks=None):
+                         block_size: int = 16, n_blocks=None,
+                         row_margin: int = 0):
         """Paged (block-arena) serving cache — decoder-only.
 
         n_blocks defaults to the dense-equivalent budget: `batch` slots'
         worth of blocks per attention slot-type (ring length // block
         size each), so a no-sharing workload fits exactly as many slots
         as the dense pool while shared prompt prefixes fit more.
+        row_margin widens sliding-window rings for speculative K-row
+        verify bursts — see models/decoder.paged_layout.
         """
         if self.kind != "decoder":
             raise NotImplementedError("paged serving is decoder-only")
         if n_blocks is None:
-            layout = dec_lib.paged_layout(self.cfg, max_len, block_size)
+            layout = dec_lib.paged_layout(self.cfg, max_len, block_size,
+                                          row_margin)
             n_blocks = {si: batch * (ring // block_size)
                         for si, ring in filter(None, layout)}
         return dec_lib.init_paged_decoder_cache(
             self.cfg, batch, max_len, block_size=block_size,
-            n_blocks=n_blocks)
+            n_blocks=n_blocks, row_margin=row_margin)
 
     def paged_cache_specs(self, shape_name: str, *, block_size: int = 16):
         """Abstract paged cache for the dry-run decode shapes — the HLO

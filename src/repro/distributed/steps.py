@@ -243,6 +243,65 @@ def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
     )
 
 
+def build_verify_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
+                      sampler=None, donate_cache=True):
+    """Build the jitted speculative-verify step: K tokens per slot in one
+    forward against the pooled/paged cache.
+
+    decode_fn(params, batch, cache) -> (logits (B, K, V), new_cache).
+    Returns a jitted
+
+        step(params, tokens (B, K), positions (B, K), cache)
+            -> (tokens (B, K) int32, new_cache)
+
+    or, with a non-greedy sampler,
+
+        step(params, tokens, positions, cache, keys (B, K, 2) uint32)
+            -> (tokens (B, K) int32, new_cache)
+
+    Output row (b, i) is the target model's pick for the position AFTER
+    positions[b, i] — i.e. it verifies draft token i+1 and, when every
+    draft is accepted, row K-1 is the bonus next token. Each row is
+    sampled exactly as build_serve_step samples its single row (same
+    fp32 cast, same per-row key), which is what makes a speculative
+    stream bit-identical to the non-spec stream: token t of slot b is
+    picked from the same logits row with the same
+    fold(request_key, t) key regardless of which verify round emitted
+    it. Compiled once per (B, K, cache shape); block tables / cursors
+    are cache VALUES, so accept/reject churn never recompiles.
+    """
+    sampled = sampler is not None and not sampler.greedy
+    stable = (sampler is not None and sampler.greedy
+              and sampler.stable_tiebreak)
+
+    if sampled:
+        def step(params, tokens, positions, cache, keys):
+            logits, new_cache = decode_fn(
+                params, {"tokens": tokens, "positions": positions}, cache)
+            B, K, V = logits.shape
+            flat = sampler.sample(logits.reshape(B * K, V).astype(
+                jnp.float32), keys.reshape(B * K, 2))
+            return flat.reshape(B, K), new_cache
+    elif stable:
+        def step(params, tokens, positions, cache):
+            logits, new_cache = decode_fn(
+                params, {"tokens": tokens, "positions": positions}, cache)
+            B, K, V = logits.shape
+            flat = sampler.sample(
+                logits.reshape(B * K, V).astype(jnp.float32), None)
+            return flat.reshape(B, K), new_cache
+    else:
+        def step(params, tokens, positions, cache):
+            logits, new_cache = decode_fn(
+                params, {"tokens": tokens, "positions": positions}, cache)
+            nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+            return nxt.astype(jnp.int32), new_cache
+
+    del mesh  # single-program path; the sharded engine lane is dryrun-only
+    donate = (3,) if donate_cache else ()
+    return jax.jit(step, donate_argnums=donate)
+
+
 def greedy_next(logits):
     """(B, 1, V) -> (B,) int32 greedy sample."""
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

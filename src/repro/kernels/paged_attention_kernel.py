@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused paged-attention for single-token decode.
+"""Pallas TPU kernel: fused paged-attention decode (S=1 or small-S).
 
 The serving decode step stores attention KV in block ARENAS of
 (n_blocks, block_size, n_kv, head_dim) addressed through per-slot block
@@ -19,7 +19,11 @@ accumulator. Nothing of size (B, ring_len, ...) ever exists.
 Grid: (B, max_blocks), sequential on TPU — the per-slot running state
 (m, l, acc) lives in VMEM scratch, initialised at j == 0 and written to
 the output block at j == max_blocks - 1 (the same revisited-output
-idiom as the lans reduction kernels).
+idiom as the lans reduction kernels). The query block is (S, h, hd)
+with S >= 1: speculative verify feeds the K draft tokens of a slot as
+S = K query rows sharing one HBM sweep of the slot's K/V blocks, each
+row causally masked against its own position (q_pos is (B, S)). S = 1
+is the plain decode special case — same kernel, same numerics.
 
 Masking happens ON-CHIP from the streamed position block: position -1
 rows (the reserved null block, unwritten ring rows, evicted slots) drop
@@ -71,54 +75,63 @@ def _paged_attn_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)           # (h, hd)
+    q = q_ref[0].astype(jnp.float32)           # (S, h, hd)
     k = k_ref[0].astype(jnp.float32)           # (bs, n_kv, hd)
     pos = pos_ref[...]                         # (1, bs) int32
-    h, hd = q.shape
+    S, h, hd = q.shape
     g = h // n_kv
 
     # GQA without materializing repeated heads: head r = kv*g + i reads
     # kv head r // g — the same layout jnp.repeat(k, g, axis=2) yields.
+    # The S query rows batch through the same contraction: regroup
+    # (S, h, hd) -> (n_kv, S*g, hd) so n_kv stays the dot batch dim.
     logits = jax.lax.dot_general(
-        q.reshape(n_kv, g, hd), k,
+        q.reshape(S, n_kv, g, hd).swapaxes(0, 1).reshape(n_kv, S * g, hd),
+        k,
         dimension_numbers=(((2,), (2,)), ((0,), (1,))),
-        preferred_element_type=jnp.float32,    # (n_kv, g, bs)
-    ).reshape(h, -1) * scale
+        preferred_element_type=jnp.float32,    # (n_kv, S*g, bs)
+    ).reshape(n_kv, S, g, -1).swapaxes(0, 1).reshape(S, h, -1) * scale
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
 
-    ok = pos >= 0                              # (1, bs): null/unwritten rows
-    if causal:
-        ok = ok & (pos <= qpos_ref[b])
+    qp = qpos_ref[b]                           # (S,) this slot's positions
+    ok = jnp.broadcast_to(pos >= 0, (S, pos.shape[1]))
+    if causal:                                 # row s masks against ITS pos
+        ok = ok & (pos <= qp[:, None])
     if window is not None:
-        ok = ok & ((qpos_ref[b] - pos) < window)
-    logits = jnp.where(ok, logits, NEG_INF)
+        ok = ok & ((qp[:, None] - pos) < window)
+    logits = jnp.where(ok[:, None, :], logits, NEG_INF)
 
-    m_prev = m_ref[...][:, 0]                  # (h,)
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    m_prev = m_ref[...].reshape(S, h)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=2))
     # A fully-masked prefix keeps m at NEG_INF; shift by 0 there so the
     # masked exp still underflows to exactly 0 instead of exp(0) == 1.
     m_safe = jnp.where(m_new > _VALID_FLOOR, m_new, 0.0)
     alpha = jnp.exp(m_prev - m_safe)           # 0 when m_prev is NEG_INF
-    e = jnp.exp(logits - m_safe[:, None])      # masked entries -> exactly 0
+    e = jnp.exp(logits - m_safe[:, :, None])   # masked entries -> exactly 0
 
     v = v_ref[0].astype(jnp.float32)           # (bs, n_kv, hd)
     pv = jax.lax.dot_general(
-        e.reshape(n_kv, g, -1), v,
+        e.reshape(S, n_kv, g, -1).swapaxes(0, 1).reshape(n_kv, S * g, -1),
+        v,
         dimension_numbers=(((2,), (0,)), ((0,), (1,))),
-        preferred_element_type=jnp.float32,    # (n_kv, g, hd)
-    ).reshape(h, hd)
+        preferred_element_type=jnp.float32,    # (n_kv, S*g, hd)
+    ).reshape(n_kv, S, g, hd).swapaxes(0, 1).reshape(S, h, hd)
 
-    m_ref[...] = m_new[:, None]
-    l_ref[...] = (alpha * l_ref[...][:, 0] + jnp.sum(e, axis=1))[:, None]
-    acc_ref[...] = alpha[:, None] * acc_ref[...] + pv
+    m_ref[...] = m_new.reshape(S * h, 1)
+    l_ref[...] = (alpha * l_ref[...].reshape(S, h)
+                  + jnp.sum(e, axis=2)).reshape(S * h, 1)
+    acc_ref[...] = (alpha.reshape(S * h, 1) * acc_ref[...]
+                    + pv.reshape(S * h, hd))
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _finish():
-        lsum = l_ref[...][:, 0]
-        live = lsum > 0.0                      # False only for dead slots
-        out = acc_ref[...] / jnp.where(live, lsum, 1.0)[:, None]
-        out_ref[0] = jnp.where(live[:, None], out, 0.0).astype(out_ref.dtype)
+        lsum = l_ref[...].reshape(S, h)
+        live = lsum > 0.0                      # False only for dead rows
+        out = (acc_ref[...].reshape(S, h, hd)
+               / jnp.where(live, lsum, 1.0)[:, :, None])
+        out_ref[0] = jnp.where(live[:, :, None], out,
+                               0.0).astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -127,29 +140,37 @@ def _paged_attn_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref,
 def paged_attention(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
                     scale, causal=True, window=None, softcap=None,
                     interpret=None):
-    """Fused paged decode attention: out (B, h, head_dim) fp32.
+    """Fused paged decode attention, S=1 or a small-S query block.
 
     Args:
-      q: (B, h, head_dim) query for the single decode token, any float
-        dtype (upcast to fp32 on-chip).
+      q: (B, h, head_dim) query for the single decode token, or
+        (B, S, h, head_dim) for an S-token speculative-verify block;
+        any float dtype (upcast to fp32 on-chip).
       k_arena / v_arena: (n_blocks, block_size, n_kv, head_dim) block
-        arenas, POST-scatter (the decode token's K/V already written).
+        arenas, POST-scatter (the decode tokens' K/V already written).
       pos_arena: (n_blocks, block_size) int32 absolute key positions;
         -1 marks invalid rows (null block, unwritten ring slots) and is
         masked unconditionally.
       tables: (B, max_blocks) int32 arena indices, 0 = the null block.
-      q_pos: (B,) int32 absolute query positions (for causal / window).
+      q_pos: (B,) — or (B, S) matching a 4-D q — int32 absolute query
+        positions; with S > 1 each query row is masked causally against
+        its OWN position, so one kernel launch verifies all S draft
+        tokens per slot.
       scale / causal / window / softcap: static attention config,
         matching models/attention.AttnConfig semantics.
       interpret: Pallas interpret mode; None = auto (True off-TPU).
 
-    Slots whose table references no valid key (inactive decode slots)
-    return exactly 0 — see kernels/ref.py:paged_attention_ref, the
-    oracle that pins this contract.
+    Returns (B, h, head_dim) or (B, S, h, head_dim) fp32, matching q.
+    Query rows whose table references no valid key (inactive decode
+    slots) return exactly 0 — see kernels/ref.py:paged_attention_ref,
+    the oracle that pins this contract.
     """
     if interpret is None:
         interpret = default_interpret()
-    B, h, hd = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q, q_pos = q[:, None], q_pos[:, None]
+    B, S, h, hd = q.shape
     _, bs, n_kv, _ = k_arena.shape
     nb = tables.shape[1]
     if h % n_kv:
@@ -159,27 +180,29 @@ def paged_attention(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
         num_scalar_prefetch=2,                 # tables, q_pos
         grid=(B, nb),
         in_specs=[
-            pl.BlockSpec((1, h, hd), lambda b, j, tbl, qp: (b, 0, 0)),
+            pl.BlockSpec((1, S, h, hd), lambda b, j, tbl, qp: (b, 0, 0, 0)),
             pl.BlockSpec((1, bs, n_kv, hd),
                          lambda b, j, tbl, qp: (tbl[b, j], 0, 0, 0)),
             pl.BlockSpec((1, bs, n_kv, hd),
                          lambda b, j, tbl, qp: (tbl[b, j], 0, 0, 0)),
             pl.BlockSpec((1, bs), lambda b, j, tbl, qp: (tbl[b, j], 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, hd), lambda b, j, tbl, qp: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, S, h, hd),
+                               lambda b, j, tbl, qp: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((h, 1), jnp.float32),   # running max m
-            pltpu.VMEM((h, 1), jnp.float32),   # running normalizer l
-            pltpu.VMEM((h, hd), jnp.float32),  # unnormalized output acc
+            pltpu.VMEM((S * h, 1), jnp.float32),   # running max m
+            pltpu.VMEM((S * h, 1), jnp.float32),   # running normalizer l
+            pltpu.VMEM((S * h, hd), jnp.float32),  # unnormalized out acc
         ],
     )
     kern = functools.partial(
         _paged_attn_kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, n_kv=n_kv)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, h, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, S, h, hd), jnp.float32),
         interpret=interpret,
     )(tables.astype(jnp.int32), q_pos.astype(jnp.int32),
       q, k_arena, v_arena, pos_arena)
+    return out[:, 0] if squeeze else out

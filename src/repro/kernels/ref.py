@@ -103,15 +103,23 @@ def paged_attention_ref(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
     Materializes `arena[tables]` into the (B, ring_len, ...) copy the
     XLA path pays for, then runs masked softmax attention with the same
     fp32 accumulation as models/attention.py's kernel="xla" decode
-    branch. Shapes/semantics as paged_attention_kernel.paged_attention.
+    branch. Shapes/semantics as paged_attention_kernel.paged_attention:
+    q is (B, h, hd) with q_pos (B,) for single-token decode, or
+    (B, S, h, hd) with q_pos (B, S) for a speculative-verify query
+    block (each of the S query rows is masked against ITS OWN position,
+    so row s attends to keys at positions <= q_pos[b, s]).
 
-    Dead slots (no valid key: all positions -1) return exactly 0 — a
-    contract of the KERNEL/ORACLE pair only. The XLA branch instead
-    yields the uniform-softmax mean of the gathered V for such rows;
-    the engine discards dead-slot outputs either way, which is why the
-    two implementations still emit identical tokens.
+    Dead query rows (q_pos such that no key is valid — inactive slots
+    carry all-(-1) positions) return exactly 0 — a contract of the
+    KERNEL/ORACLE pair only. The XLA branch instead yields the
+    uniform-softmax mean of the gathered V for such rows; the engine
+    discards dead-slot outputs either way, which is why the two
+    implementations still emit identical tokens.
     """
-    B, h, hd = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q, q_pos = q[:, None], q_pos[:, None]
+    B, S, h, hd = q.shape
     n_kv = k_arena.shape[2]
     ring = tables.shape[1] * k_arena.shape[1]
     k = k_arena[tables].reshape(B, ring, n_kv, hd)
@@ -120,18 +128,19 @@ def paged_attention_ref(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
     if n_kv != h:
         k = jnp.repeat(k, h // n_kv, axis=2)
         v = jnp.repeat(v, h // n_kv, axis=2)
-    logits = jnp.einsum("bhd,bkhd->bhk", q, k,
+    logits = jnp.einsum("bshd,bkhd->bshk", q, k,
                         preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
-    ok = kp >= 0
+    ok = jnp.broadcast_to((kp >= 0)[:, None, :], (B, S, ring))
     if causal:
-        ok = ok & (kp <= q_pos[:, None])
+        ok = ok & (kp[:, None, :] <= q_pos[:, :, None])
     if window is not None:
-        ok = ok & ((q_pos[:, None] - kp) < window)
-    logits = jnp.where(ok[:, None, :], logits, NEG_INF)
+        ok = ok & ((q_pos[:, :, None] - kp[:, None, :]) < window)
+    logits = jnp.where(ok[:, :, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhk,bkhd->bhd", probs, v,
+    out = jnp.einsum("bshk,bkhd->bshd", probs, v,
                      preferred_element_type=jnp.float32)
-    live = jnp.any(ok, axis=1)                 # (B,): slot has a valid key
-    return jnp.where(live[:, None, None], out, 0.0)
+    live = jnp.any(ok, axis=2)                 # (B, S): row has a valid key
+    out = jnp.where(live[:, :, None, None], out, 0.0)
+    return out[:, 0] if squeeze else out

@@ -20,7 +20,11 @@ victim when the arena exhausts; --no-preempt turns that into an error),
 --retain-blocks keeps evicted prefix blocks warm on a bounded LRU, and
 --slo-ms evicts slots that blow their SLO. --chunk-budget N admits
 prompts chunk by chunk within a per-step token budget (chunked prefill;
-continuous+paged only). --arrival-rate R replays the request stream as
+continuous+paged only). --spec-draft arms speculative draft-verify
+decode: --spec-k draft tokens are proposed per slot and verified in one
+batched step ('self' drafts with the target itself, 'truncated' builds
+the make_spec_pair one-period draft whose proposals the doctored target
+always accepts); the report gains acceptance-rate telemetry. --arrival-rate R replays the request stream as
 seeded open-loop Poisson traffic at R req/s instead of submitting
 everything up front, and reports goodput against the --ttft-slo-ms /
 --itl-slo-ms bounds. --engine static runs the padded lockstep baseline
@@ -112,6 +116,18 @@ def main():
                          "one whole-prompt stall (continuous engine + "
                          "paged cache only; token-identical to whole-"
                          "prompt prefill)")
+    ap.add_argument("--spec-draft", default="none",
+                    choices=["none", "self", "truncated"],
+                    help="speculative draft-verify decode: 'self' drafts "
+                         "with the target model itself (exact-match "
+                         "greedy proposals, acceptance ~1.0); "
+                         "'truncated' doctors the target's upper "
+                         "periods inert and drafts with its first "
+                         "period (make_spec_pair; acceptance exactly "
+                         "1.0). Continuous engine + paged cache only")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed and verified per "
+                         "speculative round (>= 2)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="open-loop Poisson arrival rate in requests/s: "
                          "submit on the arrival clock instead of all up "
@@ -151,6 +167,15 @@ def main():
         max_len = -(-max_len // args.block_size) * args.block_size
     log = MetricsLogger(args.metrics)
 
+    spec_kw = {}
+    if args.spec_draft == "self":
+        spec_kw = dict(spec_draft=(arch, params), spec_k=args.spec_k)
+    elif args.spec_draft == "truncated":
+        from repro.serving import make_spec_pair
+        params, draft_arch, draft_params = make_spec_pair(arch, params)
+        spec_kw = dict(spec_draft=(draft_arch, draft_params),
+                       spec_k=args.spec_k)
+
     t0 = time.perf_counter()
     if args.engine == "continuous":
         last = {"t": t0}
@@ -171,7 +196,7 @@ def main():
             growth=args.growth or "lazy", sched_policy=args.sched_policy,
             slo_ms=args.slo_ms, preempt=args.preempt,
             retain_blocks=args.retain_blocks, watermark=args.watermark,
-            chunk_budget=args.chunk_budget)
+            chunk_budget=args.chunk_budget, **spec_kw)
         if args.arrival_rate is not None:
             from repro.serving import (OpenLoopDriver, SLO, poisson_arrivals,
                                        slo_report)
@@ -202,6 +227,7 @@ def main():
             ("--retain-blocks", args.retain_blocks is not None),
             ("--watermark", args.watermark != 0),
             ("--chunk-budget", args.chunk_budget is not None),
+            ("--spec-draft", args.spec_draft != "none"),
             ("--arrival-rate", args.arrival_rate is not None)) if on]
         if ignored:
             raise SystemExit(

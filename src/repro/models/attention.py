@@ -134,7 +134,8 @@ def attn_apply(
     # block ARENAS shared by every slot, and "table" maps each slot's
     # logical rows onto arena blocks.
     pooled = cache is not None and jnp.ndim(cache["index"]) == 1
-    if cache is not None and "table" in cache:
+    paged = cache is not None and "table" in cache
+    if paged:
         # Paged decode (serving/cache_pool.PagedCachePool): cache k/v are
         # (n_blocks, block_size, kv, hd) arenas, pos is (n_blocks,
         # block_size), table is (B, max_blocks) int32 arena indices with 0
@@ -147,29 +148,39 @@ def attn_apply(
         # path), so the scatter below cannot race between slots —
         # inactive slots all write the null block with position -1, which
         # keeps it invalid. Everything is a fixed-shape gather/scatter:
-        # the jitted step never recompiles as blocks churn.
-        if S != 1:
-            raise NotImplementedError(
-                "paged cache only serves single-token decode; prefill "
-                "runs against a dense per-request cache")
+        # the jitted step never recompiles as blocks churn. S > 1 is the
+        # speculative-verify step: the S draft tokens of slot b land at
+        # logical rows cursor..cursor+S-1 (lazy growth backs them before
+        # the step; rejected rows are invalidated by a pos scatter after).
         idx = cache["index"]                       # (B,) local cursors
         tbl = cache["table"]                       # (B, max_blocks)
         bsz = cache["k"].shape[1]
         ring_len = tbl.shape[1] * bsz
-        r = jax.lax.rem(idx, ring_len)
-        blk = jnp.take_along_axis(tbl, (r // bsz)[:, None], axis=1)[:, 0]
+        r = jax.lax.rem(idx[:, None] + jnp.arange(S, dtype=jnp.int32),
+                        ring_len)                  # (B, S) logical rows
+        blk = jnp.take_along_axis(tbl, r // bsz, axis=1)
         off = jax.lax.rem(r, bsz)
         k_new = maybe_constrain(k.astype(cache["k"].dtype),
-                                "data", None, None, "model")[:, 0]
+                                "data", None, None, "model")
         v_new = maybe_constrain(v.astype(cache["v"].dtype),
-                                "data", None, None, "model")[:, 0]
+                                "data", None, None, "model")
         q_pos = (positions if positions.ndim == 2
                  else jnp.broadcast_to(positions, (B, S))).astype(jnp.int32)
+        # Rows with a negative feed position (inactive slots; the padding
+        # rows of a budget-truncated verify block) are routed to the null
+        # block BY THE SCATTER, not just by their table being empty: a
+        # truncated verify block's pad rows sit past the slot's live
+        # chain, where the ring may map them onto real blocks — shared
+        # prompt blocks included — that growth never COWed because no
+        # real write ever reaches them. The null block's row 0 takes all
+        # such writes, value -1, and stays invalid.
+        blk = jnp.where(q_pos >= 0, blk, 0)
+        off = jnp.where(q_pos >= 0, off, 0)
         k_arena = cache["k"].at[blk, off].set(k_new)
         v_arena = cache["v"].at[blk, off].set(v_new)
-        pos_arena = cache["pos"].at[blk, off].set(q_pos[:, 0])
+        pos_arena = cache["pos"].at[blk, off].set(q_pos)
         new_cache = {"k": k_arena, "v": v_arena, "pos": pos_arena,
-                     "index": idx + 1}
+                     "index": idx + S}
         q = maybe_constrain(q, "data", None, None, "model")
         if cfg.decode_kernel == "paged":
             # Fused Pallas path: the block table rides into the kernel as
@@ -182,10 +193,10 @@ def attn_apply(
                     "kv_valid_len is unsupported on the paged kernel path")
             from repro.kernels.paged_attention_kernel import paged_attention
             out = paged_attention(
-                q[:, 0], k_arena, v_arena, pos_arena, tbl, q_pos[:, 0],
+                q, k_arena, v_arena, pos_arena, tbl, q_pos,
                 scale=scale, causal=cfg.causal, window=cfg.sliding_window,
                 softcap=cfg.logit_softcap).astype(compute_dtype)
-            out = maybe_constrain(out[:, None], "data", None, None, "model")
+            out = maybe_constrain(out, "data", None, None, "model")
             out = out.reshape(B, S, h * hd)
             return dense_apply(p["wo"], out, compute_dtype), new_cache
         if cfg.decode_kernel != "xla":
@@ -283,8 +294,11 @@ def attn_apply(
     # rounds to compute_dtype: the pools lay the same keys out at
     # different cache rows, and that single rounding is what absorbs the
     # sub-ulp fp32 summation-order differences so static == dense ==
-    # paged stays token-exact across layouts.
-    decode = attend_cached and S == 1
+    # paged stays token-exact across layouts. The paged branch gets fp32
+    # at ANY S: its S > 1 case is the speculative-verify block, which must
+    # stay token-comparable to the Pallas kernel exactly like S == 1
+    # (other S > 1 paths are prefill, where bf16 probs are the contract).
+    decode = attend_cached and (S == 1 or paged)
     acc_dtype = jnp.float32 if decode else None
     probs_dtype = jnp.float32 if decode else compute_dtype
 

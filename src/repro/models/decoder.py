@@ -351,7 +351,8 @@ def init_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
     return {"slots": tuple(slots), "index": index}
 
 
-def paged_layout(cfg: DecoderConfig, max_len: int, block_size: int):
+def paged_layout(cfg: DecoderConfig, max_len: int, block_size: int,
+                 row_margin: int = 0):
     """Per-superblock-slot paged layout: [(slot_idx, ring_len) | None].
 
     Attention slots page their KV through a block arena; the entry gives
@@ -359,15 +360,26 @@ def paged_layout(cfg: DecoderConfig, max_len: int, block_size: int):
     "attn_local" slots). Mamba slots return None: their state is O(1) per
     slot (a fixed SSM tensor + conv tail), so paging buys nothing and
     they stay slot-resident (see init_paged_decoder_cache).
+
+    row_margin > 0 widens EVERY attention ring by that many rows
+    (rounded up to whole blocks): the speculative verify step scatters
+    its K rows BEFORE attention runs, so the ring must hold K - 1 rows
+    beyond what any live query still attends to. Sliding-window rings
+    need window + K - 1 or the burst overwrites in-window keys of
+    earlier query rows; full rings need max_len + K - 1 because a
+    budget-truncated final round still scatters (position -1) rows up to
+    cursor + K - 1, which a bare max_len ring would wrap onto the
+    slot's first prompt blocks mid-verify.
     """
+    margin = -(-row_margin // block_size) * block_size if row_margin else 0
     out = []
     for si, (mixer, _) in enumerate(cfg.superblock):
         if mixer == "mamba":
             out.append(None)
             continue
-        L = max_len
+        L = max_len + margin
         if mixer == "attn_local" and cfg.sliding_window:
-            L = min(max_len, cfg.sliding_window)
+            L = min(max_len, cfg.sliding_window) + margin
         if L % block_size != 0:
             raise ValueError(
                 f"slot {si} ({mixer}): cache length {L} not a multiple of "
@@ -378,7 +390,7 @@ def paged_layout(cfg: DecoderConfig, max_len: int, block_size: int):
 
 def init_paged_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
                              *, block_size: int, n_blocks,
-                             dtype=jnp.bfloat16):
+                             dtype=jnp.bfloat16, row_margin: int = 0):
     """Paged continuous-batching cache: block arenas + per-slot tables.
 
     Layout (vs the dense per_slot layout of init_decoder_cache):
@@ -396,7 +408,7 @@ def init_paged_decoder_cache(cfg: DecoderConfig, batch: int, max_len: int,
     attention slot-type) or a dict {slot_idx: int}. One extra null block
     is always added.
     """
-    layouts = paged_layout(cfg, max_len, block_size)
+    layouts = paged_layout(cfg, max_len, block_size, row_margin)
     slots, tables = [], []
     for si, (mixer, _) in enumerate(cfg.superblock):
         layout = layouts[si]

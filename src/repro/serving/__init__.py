@@ -2,7 +2,11 @@
 
 See serving/engine.py for the architecture overview. Public surface:
 
-  ContinuousEngine   slot-pool continuous batching (paged cache default)
+  ContinuousEngine   slot-pool continuous batching (paged cache default;
+                     spec_draft=(arch, params) enables draft-verify
+                     speculative decoding, spec_k tokens per round)
+  make_spec_pair     acceptance-1.0 speculative fixture: inert upper
+                     periods + one-period draft sharing embed/head
   ServeEngine        static-batch baseline (padded lockstep decode)
   Request            one prompt + generation budget (+ latency trace)
   Sampler            temperature/top-k/top-p decode (per-slot PRNG keys;
@@ -30,9 +34,9 @@ from repro.serving.block_allocator import (BlockAllocator, BlockTableMap,
 from repro.serving.cache_pool import CachePool, PagedCachePool
 from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
                                   apply_serving_policy, build_first_token_fn,
-                                  build_prefill_fn, pad_prompts,
-                                  prompt_granularity, synthetic_requests,
-                                  throughput_probe)
+                                  build_prefill_fn, make_spec_pair,
+                                  pad_prompts, prompt_granularity,
+                                  synthetic_requests, throughput_probe)
 from repro.serving.metrics import (DepthTracker, RequestTrace, aggregate,
                                    hit_rate, percentile)
 from repro.serving.sampler import Sampler, fold_keys, stable_argmax
@@ -50,7 +54,8 @@ __all__ = [
     "Sampler", "Scheduler", "SchedulerError", "SchedulingPolicy",
     "ServeEngine", "aggregate", "apply_serving_policy", "bimodal_requests",
     "build_first_token_fn", "build_prefill_fn", "chunk_granularity",
-    "fold_keys", "hit_rate", "meets_slo", "pad_prompts", "percentile",
+    "fold_keys", "hit_rate", "make_spec_pair", "meets_slo", "pad_prompts",
+    "percentile",
     "plan_chunk", "poisson_arrivals", "prompt_granularity", "slo_report",
     "stable_argmax", "synthetic_requests", "throughput_probe",
 ]

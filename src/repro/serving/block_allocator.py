@@ -31,10 +31,23 @@ block at a time — so registry keys are O(1) bytes each instead of O(plen)
 token tuples and a 32k-token system prompt does not hold megabytes of
 boxed ints live. The padded length is part of the key because the
 prefill's reduction shapes depend on it — two requests only share blocks
-their own prefill would have filled with identical values. Blocks that
-decode will later overwrite (ring-buffer wrap on sliding-window layers)
-are never shared, so copy-on-write is not needed: every block a slot
-writes is exclusively owned from admission.
+their own prefill would have filled with identical values.
+
+Ring wrap vs sharing (sliding-window layers): under EAGER inserts,
+blocks that decode will later overwrite are simply never shared — every
+block a slot writes is exclusively owned from admission, no
+copy-on-write needed. Under LAZY growth the same rule used to turn the
+whole prompt prefix unshareable the moment any slot's budget could wrap
+the ring, permanently disabling prefix sharing for long generations.
+Lazy inserts therefore DO share fully-prompt blocks that decode may
+later overwrite, and `grow()` copy-on-writes at wrap time: when the
+cursor crosses into a chain position backed by a REGISTERED block, the
+slot gets a fresh private block, the (src, dst) pair is queued on
+`_pending_cow` for the pool to copy arena content device-side, and the
+slot's reference on the shared block is released — the pre-wrap prefix
+stays registered (live for other holders, or parked on the retained
+LRU) and later waves keep hitting it. Unregistered private blocks
+still wrap in place, copy-free.
 
 Retained prefixes (`retain_limit > 0`): when the LAST holder of a
 registered prefix block evicts, the block moves to a bounded LRU
@@ -50,9 +63,8 @@ have had.
 Chain growth (`lazy=True` inserts + `grow()`): admission allocates only
 the chain positions the PROMPT occupies; decode-budget positions stay
 NULL in the table and are allocated one block at a time as the write
-cursor crosses block boundaries. Sharing eligibility is still computed
-against the full budget (a block decode may ever overwrite is never
-shared or retained), so growth never needs copy-on-write either.
+cursor crosses block boundaries — or copy-on-written when the ring
+wraps onto a shared prompt block (see above).
 """
 from __future__ import annotations
 
@@ -199,11 +211,18 @@ class BlockTableMap:
     `retain_limit` bounds the retained-LRU list (0 disables retention:
     the PR 3 free-on-last-release behaviour). `watermark` is forwarded
     to the allocator and only affects `admissible()`.
+
+    `src_len` is the PREFILL window this map's inserts are backed from
+    (defaults to ring_len). The speculative row_margin widens ring_len
+    past the attention window while prefill caches stay window-sized, so
+    the rolled-layout sharing exclusion keys off src_len — "can the
+    prefill cache still back every prompt row of a full block" — not the
+    widened ring.
     """
 
     def __init__(self, max_batch: int, ring_len: int, block_size: int,
                  n_blocks: int, *, retain_limit: int = 0,
-                 watermark: int = 0):
+                 watermark: int = 0, src_len: Optional[int] = None):
         if ring_len % block_size != 0:
             raise ValueError(
                 f"cache length {ring_len} not a multiple of block_size "
@@ -212,6 +231,7 @@ class BlockTableMap:
             raise ValueError(f"retain_limit must be >= 0, got {retain_limit}")
         self.block_size = block_size
         self.ring_len = ring_len
+        self.src_len = src_len if src_len is not None else ring_len
         self.max_blocks = ring_len // block_size
         self.retain_limit = retain_limit
         self.table = np.zeros((max_batch, self.max_blocks), np.int32)
@@ -223,25 +243,35 @@ class BlockTableMap:
             collections.OrderedDict()
         self.retained_hits = 0     # revived warm blocks (survived ref 0)
         self.prefix_misses = 0     # registered prefix blocks written fresh
+        # wrap-time copy-on-write: (src, dst) arena copies grow() queued;
+        # the pool drains this and copies block content device-side
+        # BEFORE the next decode write lands in dst.
+        self._pending_cow: List[Tuple[int, int]] = []
 
     # ---------------- planning ----------------
 
     def _chain(self, prompt_key, plen: int, padded_len: int, budget: int,
-               share: bool) -> List[Tuple[int, Optional[bytes], bool]]:
+               share: bool,
+               lazy: bool = False) -> List[Tuple[int, Optional[bytes], bool]]:
         """(chain_pos, sharing key | None, prompt_backed) for every block
         the slot's full chain covers.
 
         Rows the slot touches: prompt rows 0..plen-1 plus decode writes at
         rows plen..plen+budget-2 (the final sampled token is never fed
-        back). Ring wrap maps row r to r % ring_len; chain positions that
-        decode will overwrite are excluded from sharing, as is the whole
-        insert when the prefill stored a rolled ring layout
-        (padded_len > ring_len) whose rows are not content-addressable.
-        `prompt_backed` marks positions holding at least one prompt row —
-        the ones a LAZY insert must allocate at admission (the rest grow
-        on demand as the write cursor reaches them).
-        Keys are snapshots of one sha256 chain over (block_size,
-        padded_len, prompt tokens so far) — O(1) bytes per block.
+        back). Ring wrap maps row r to r % ring_len. Under EAGER inserts
+        chain positions that decode will overwrite are excluded from
+        sharing (the slot writes them in place, so they must be
+        exclusively owned); under LAZY inserts they stay shareable —
+        grow() copy-on-writes the position at wrap time, so the shared
+        content is never clobbered. A rolled prefill layout
+        (padded_len > src_len: the prefill cache no longer backs every
+        prompt row) is never content-addressable and excludes the whole
+        insert either way. `prompt_backed` marks positions
+        holding at least one prompt row — the ones a LAZY insert must
+        allocate at admission (the rest grow on demand as the write
+        cursor reaches them). Keys are snapshots of one sha256 chain over
+        (block_size, padded_len, prompt tokens so far) — O(1) bytes per
+        block.
         """
         bs, L = self.block_size, self.ring_len
         total_rows = plen + max(budget - 1, 0)
@@ -249,7 +279,7 @@ class BlockTableMap:
         chain_len = self.max_blocks if wrap else -(-total_rows // bs)
         overwritten = {(r % L) // bs for r in range(plen, total_rows)}
         prompt_backed = {(r % L) // bs for r in range(plen)}
-        rolled = padded_len > L
+        rolled = padded_len > self.src_len
         toks = np.asarray(prompt_key, np.int64)
         h = hashlib.sha256(np.array([bs, padded_len], np.int64).tobytes())
         out = []
@@ -257,7 +287,7 @@ class BlockTableMap:
             key = None
             if (j + 1) * bs <= plen:          # entirely prompt-backed
                 h.update(toks[j * bs:(j + 1) * bs].tobytes())
-                if share and not rolled and j not in overwritten:
+                if share and not rolled and (lazy or j not in overwritten):
                     key = h.digest()
             out.append((j, key, j in prompt_backed))
         return out
@@ -276,7 +306,8 @@ class BlockTableMap:
         """
         fresh = hits = 0
         for _, key, prompt_backed in self._chain(prompt_key, plen,
-                                                 padded_len, budget, share):
+                                                 padded_len, budget, share,
+                                                 lazy):
             if lazy and not prompt_backed:
                 continue
             if key is not None and key in self._registry:
@@ -334,7 +365,7 @@ class BlockTableMap:
         try:
             for j, key, prompt_backed in self._chain(prompt_key, plen,
                                                      padded_len, budget,
-                                                     share):
+                                                     share, lazy):
                 if lazy and not prompt_backed:
                     continue
                 if key is not None and key in self._registry:
@@ -395,17 +426,45 @@ class BlockTableMap:
 
     def grow(self, slot: int, row: int) -> Optional[int]:
         """Back the chain position covering logical `row` (the next
-        decode write) with a block, allocating on demand.
+        decode write) with an exclusively-owned block.
 
-        Returns the newly allocated block id, or None when the position
-        is already backed (a whole-chain insert, a previous grow, or a
-        ring wrap onto an exclusively-owned prompt block). Raises
-        NoBlocksError when free list AND retained LRU are both empty —
-        the engine's preemption path. Grown blocks hold decode writes
-        only: they are never registered, shared, or retained."""
+        Three cases:
+          * position unbacked -> allocate a fresh block (plain growth);
+          * position backed by an unregistered private block -> None
+            (a whole-chain insert, a previous grow, or a ring wrap onto
+            content nobody else can reference: write in place);
+          * position backed by a REGISTERED prefix block (lazy sharing
+            + ring wrap) -> copy-on-write: allocate a private dst,
+            queue (src, dst) on `_pending_cow` for the pool's arena
+            copy, and release this slot's reference on src — the prefix
+            stays registered (live for other holders or parked on the
+            retained LRU) and later waves keep sharing it. A sole
+            holder with retention off skips the copy: the block is
+            simply unregistered and written in place.
+
+        Returns the newly allocated block id (ref 1, exclusively owned)
+        or None when the slot writes in place. Raises NoBlocksError when
+        free list AND retained LRU are both empty — the engine's
+        preemption path; no state is mutated in that case. Grown/COW'd
+        blocks hold decode writes only: never registered, shared, or
+        retained."""
         j = (row % self.ring_len) // self.block_size
-        if self.table[slot, j] != NULL_BLOCK:
-            return None
+        src = int(self.table[slot, j])
+        if src != NULL_BLOCK:
+            key = self._block_key.get(src)
+            if key is None:
+                return None                    # private block: wrap in place
+            if self.alloc.ref[src] == 1 and self.retain_limit == 0:
+                # sole holder, no retention: nobody can ever hit the
+                # registration again once we write — drop it, skip the copy
+                del self._registry[key]
+                del self._block_key[src]
+                return None
+            dst = self._alloc_block()
+            self.table[slot, j] = dst
+            self._pending_cow.append((src, dst))
+            self._release(src)
+            return dst
         b = self._alloc_block()
         self.table[slot, j] = b
         return b
@@ -464,7 +523,7 @@ class BlockTableMap:
         (live or retained)? The prefix-affinity scheduling policy's
         admission signal — cheap: one sha256 over block_size tokens."""
         bs = self.block_size
-        if plen < bs or padded_len > self.ring_len:
+        if plen < bs or padded_len > self.src_len:
             return False
         h = hashlib.sha256(np.array([bs, padded_len], np.int64).tobytes())
         h.update(np.asarray(prompt_key, np.int64)[:bs].tobytes())

@@ -28,12 +28,28 @@ written instead of budgets promised — when budgets exceed typical
 outputs the same arena admits far more concurrent requests. Growth can
 exhaust the arena mid-decode; the ENGINE handles that by preempting a
 victim slot (blocks freed, request requeued with its generated tokens
-as a continuation prefill). Either way copy-on-write never exists:
-sharing eligibility is computed against the full budget, so every block
-a slot writes is exclusively owned from the moment its table entry
-appears (blocks a ring wrap may overwrite are simply never shared).
-SSM/conv state is O(1) per slot and stays slot-resident (the mamba
-leaves keep the dense layout).
+as a continuation prefill). Writes still only ever land in exclusively
+owned blocks, but exclusivity is established at WRITE time, not
+admission time: under lazy growth a sliding-window slot may share a
+prompt block that its ring wrap later overwrites, and grow() resolves
+the conflict with a wrap-time copy-on-write — the slot gets a fresh
+block, the arena content is copied by flush_growth(), and the shared
+source stays intact for its other holders / the retained LRU. (Eager
+growth keeps the PR 3 rule: blocks the budgeted chain would overwrite
+are simply never shared, so eager never copies.) SSM/conv state is O(1)
+per slot and stays slot-resident (the mamba leaves keep the dense
+layout).
+
+Speculative decoding (engine `spec_draft`): the verify step scatters
+K > 1 rows per slot per step, so (a) grow() runs for each of the K rows
+(several fresh blocks per slot-type per step — flush_growth pads its
+scatter to a multiple of max_batch), (b) sliding-window rings carry a
+`row_margin` of K - 1 extra rows (models/decoder.paged_layout) so the
+write burst — which lands BEFORE attention runs — cannot overwrite a
+key an earlier query row of the same block still needs, and (c)
+rejected rows roll back by rewinding the cursor and min-scattering
+position -1 over the stale rows (rollback_rows) — never by copying or
+moving a block.
 
 Retained prefixes (`retain_blocks > 0`): a registered prefix block whose
 last holder evicts parks on a bounded LRU list with its arena content
@@ -89,6 +105,7 @@ class CachePool:
         # donate the old pool: the row update happens in place instead of
         # double-buffering max_batch * max_len of KV per admission.
         self._insert = jax.jit(_insert_row, donate_argnums=0)
+        self._rollback = jax.jit(_pos_rollback, donate_argnums=0)
 
     def insert(self, request_cache: PyTree, slot: int):
         """Admit a prefilled request's cache into `slot`."""
@@ -107,21 +124,65 @@ class CachePool:
         """Per-slot write cursors (host array) — diagnostic only."""
         return np.asarray(self.cache["index"])
 
+    def rollback_rows(self, rows: dict, new_index, capacity: int):
+        """Rewind after a speculative round (this pool holds the DRAFT
+        model's cache): min-scatter position -1 over each slot's stale
+        STORAGE rows — cursor-relative, taken modulo each slot-type's own
+        cache length, which differs between full and sliding-window
+        layers — and replace the write cursors wholesale. Attention-only:
+        the engine gates spec_draft to attention-only archs (SSM state
+        accumulates in place and cannot rewind). Padding entries carry
+        val == INT32_MAX, a min() no-op against any resident position, so
+        the op is fixed-shape and compiles once per capacity."""
+        total = sum(len(r) for r in rows.values())
+        assert total <= capacity, (total, capacity)
+        slots = list(self.cache["slots"])
+        for si, leaf in enumerate(slots):
+            if not (isinstance(leaf, dict) and "pos" in leaf):
+                raise NotImplementedError(
+                    "speculative rollback needs attention-only caches "
+                    f"(superblock slot {si} has no position rows)")
+            L = leaf["pos"].shape[2]
+            bvec = np.zeros(capacity, np.int32)
+            rvec = np.zeros(capacity, np.int32)
+            vals = np.full(capacity, np.iinfo(np.int32).max, np.int32)
+            n = 0
+            for slot, rws in rows.items():
+                for r in rws:
+                    bvec[n] = slot
+                    rvec[n] = r % L
+                    vals[n] = -1
+                    n += 1
+            slots[si] = {**leaf, "pos": self._rollback(
+                leaf["pos"], jnp.asarray(bvec), jnp.asarray(rvec),
+                jnp.asarray(vals))}
+        self.cache = {"slots": tuple(slots),
+                      "index": jnp.asarray(np.asarray(new_index, np.int32))}
 
-def _arena_insert(arena: PyTree, req: PyTree, src_rows, dst_blocks) -> PyTree:
+
+def _arena_insert(arena: PyTree, req: PyTree, src_rows, dst_blocks,
+                  row_valid) -> PyTree:
     """Scatter a prefilled request's cache rows into arena blocks.
 
     arena: {"k","v","pos"} with leading (n_periods, n_blocks) dims.
     req:   the same slot-type's subtree from a dense batch-1 prefill cache,
            leading dims (n_periods, 1, cache_len).
     src_rows (ring_len,): request-cache row feeding each logical row; rows
-           of skipped chain positions point at a guaranteed pos==-1 row.
+           of skipped chain positions point at a guaranteed in-bounds row.
     dst_blocks (max_blocks,): arena block per chain position, NULL (0) for
            positions that must not be written (shared blocks, unused tail)
            — their writes land in the null block carrying pos -1, which
            keeps it invalid. The allocator guarantees every non-null dst
            is exclusively owned, so duplicate-index races cannot happen
            outside the null block.
+    row_valid (ring_len,) bool: ring rows actually backed by a prompt row
+           of the request cache. Unbacked rows of WRITTEN blocks — and
+           every null-routed row — get position -1 unconditionally: with
+           a row_margin the ring can be longer than the request cache's
+           window, so a written boundary block may mix backed and
+           unbacked rows, and a fully-rolled zero-pad prefill cache has
+           no pos==-1 filler row to route the unbacked ones through
+           (garbage K/V there is harmless once the positions are masked).
     """
     nbk = dst_blocks.shape[0]
     bs = arena["k"].shape[2]
@@ -130,13 +191,8 @@ def _arena_insert(arena: PyTree, req: PyTree, src_rows, dst_blocks) -> PyTree:
         g = x[:, 0][:, src_rows]              # (n_periods, ring_len, ...)
         return g.reshape(g.shape[0], nbk, bs, *g.shape[2:]).astype(dtype)
 
-    # null-routed chain positions write position -1 UNCONDITIONALLY: the
-    # null block's invalidity must never depend on which filler row the
-    # source mapping picked (a fully-rolled zero-pad prefill cache has no
-    # pos==-1 row at all — review finding), and garbage K/V there is
-    # harmless once the positions are masked.
-    pos = jnp.where((dst_blocks != 0)[None, :, None],
-                    blocks_of(req["pos"], arena["pos"].dtype), -1)
+    ok = (dst_blocks != 0)[None, :, None] & row_valid.reshape(1, nbk, bs)
+    pos = jnp.where(ok, blocks_of(req["pos"], arena["pos"].dtype), -1)
     return {"k": arena["k"].at[:, dst_blocks].set(
                 blocks_of(req["k"], arena["k"].dtype)),
             "v": arena["v"].at[:, dst_blocks].set(
@@ -155,6 +211,27 @@ def _pos_invalidate(pos: PyTree, blocks) -> PyTree:
     the decode step gathers it (the step then writes the cursor row with
     a live position, leaving the rest masked)."""
     return pos.at[:, blocks].set(-1)
+
+
+def _cow_copy(arena: PyTree, srcs, dsts) -> PyTree:
+    """Copy whole arena blocks src -> dst (k, v, AND positions): the
+    wrap-time copy-on-write resolved by flush_growth. srcs/dsts are
+    fixed-shape int32 vectors padded with the null block on both sides —
+    the padded entries copy the null block onto itself (pos stays -1),
+    so padding is a no-op and the op never retraces."""
+    return {"k": arena["k"].at[:, dsts].set(arena["k"][:, srcs]),
+            "v": arena["v"].at[:, dsts].set(arena["v"][:, srcs]),
+            "pos": arena["pos"].at[:, dsts].set(arena["pos"][:, srcs])}
+
+
+def _pos_rollback(pos: PyTree, blocks, offsets, vals) -> PyTree:
+    """Min-scatter over individual arena rows: the speculative-rejection
+    rollback. Real entries carry val == -1 (min(pos, -1) forces the row
+    invalid); padding carries (null block, offset 0, INT32_MAX) — a
+    min() no-op against the null block's resident -1 — so the vectors
+    are fixed-shape and duplicates among the pads are harmless (scatter-
+    min is commutative)."""
+    return pos.at[:, blocks, offsets].min(vals)
 
 
 def _state_insert(state: PyTree, req_state: PyTree, slot, new_index) -> PyTree:
@@ -185,7 +262,7 @@ class PagedCachePool:
                  block_size: int = 16, slots_budget: Optional[int] = None,
                  share_prefix: bool = True, attn_kernel: Optional[str] = None,
                  growth: str = "eager", retain_blocks: int = 0,
-                 watermark: int = 0):
+                 watermark: int = 0, row_margin: int = 0):
         """Args:
           arch: decoder Arch (paged serving is decoder-only).
           max_batch: number of decode slots (block-table rows).
@@ -214,6 +291,10 @@ class PagedCachePool:
           watermark: free blocks the ADMISSION accounting holds back per
             slot-type so in-flight slots can usually grow without
             preempting (growth itself ignores it).
+          row_margin: extra rows (rounded up to blocks) on sliding-window
+            rings so a speculative K-row verify burst cannot wrap onto
+            in-window keys; pass spec_k - 1. 0 (non-speculative) keeps
+            the exact PR 4-6 layout.
         """
         if arch.kind != "decoder":
             raise NotImplementedError("paged serving is decoder-only")
@@ -233,10 +314,13 @@ class PagedCachePool:
         self.share_prefix = share_prefix
         self.growth = growth
         budget = slots_budget if slots_budget is not None else max_batch
-        layout = dec_lib.paged_layout(arch.cfg, max_len, block_size)
+        self.row_margin = row_margin
+        layout = dec_lib.paged_layout(arch.cfg, max_len, block_size,
+                                      row_margin)
+        base = dec_lib.paged_layout(arch.cfg, max_len, block_size)
         self.maps = {}
         n_blocks = {}
-        for entry in layout:
+        for entry, base_entry in zip(layout, base):
             if entry is None:
                 continue
             si, ring = entry
@@ -244,10 +328,12 @@ class PagedCachePool:
             self.maps[si] = BlockTableMap(
                 max_batch, ring, block_size, n_blocks[si] + 1,
                 retain_limit=min(retain_blocks, max(n_blocks[si] - 1, 0)),
-                watermark=min(watermark, max(n_blocks[si] - 1, 0)))
+                watermark=min(watermark, max(n_blocks[si] - 1, 0)),
+                src_len=base_entry[1])
         full = arch.init_paged_cache(max_batch, max_len,
                                      block_size=block_size,
-                                     n_blocks=n_blocks)
+                                     n_blocks=n_blocks,
+                                     row_margin=row_margin)
         full.pop("tables")          # host-owned: see device_tables()
         self.cache = full
         self._mamba_slots = tuple(si for si, e in enumerate(layout)
@@ -255,6 +341,8 @@ class PagedCachePool:
         self._insert_arena = jax.jit(_arena_insert, donate_argnums=0)
         self._insert_state = jax.jit(_state_insert, donate_argnums=0)
         self._invalidate = jax.jit(_pos_invalidate, donate_argnums=0)
+        self._copy_blocks = jax.jit(_cow_copy, donate_argnums=0)
+        self._rollback = jax.jit(_pos_rollback, donate_argnums=0)
         self._pending_grown = {si: [] for si in self.maps}
         # blank batch-1 state used on eviction (hygiene + lengths() diag)
         blank = arch.init_cache(1, max_len, per_slot=True)
@@ -299,33 +387,33 @@ class PagedCachePool:
 
     def _src_rows(self, ring: int, cache_len: int, plen: int,
                   padded_len: int):
-        """(request-cache row backing each logical ring row, invalid
-        filler row) — see _arena_insert. `rolled` mirrors attention's
-        prefill roll branch (padded_len >= the request cache's row count —
-        only sliding-window slot-types, whose request cache is
-        ring-sized)."""
+        """(request-cache row backing each logical ring row, backed-row
+        mask) — see _arena_insert. `rolled` mirrors attention's prefill
+        roll branch (padded_len >= the request cache's row count — only
+        sliding-window slot-types, whose request cache is window-sized).
+        Rows the request cache cannot back — skipped chain positions,
+        and with a row_margin the ring rows beyond the prefill window —
+        point at an arbitrary in-bounds filler row and are reported
+        unbacked; _arena_insert forces their positions to -1."""
         pad = padded_len - plen
         rolled = padded_len >= cache_len
-        # The filler row only has to carry pos == -1 for rows of WRITTEN
-        # blocks (a tail block's rows past the prompt); null-routed rows
-        # get their positions forced to -1 in _arena_insert regardless.
         if rolled:
             # rows hold the last `cache_len` padded positions, rolled so
-            # that storage row == (position + pad) % cache_len. Whenever a
-            # ring row is unbacked (plen < ring), position -1 exists in
-            # that window and its row carries pos == -1 — the filler. With
-            # zero pad every ring row is prompt-backed, so written blocks
-            # have no unmapped rows and the filler value is never read
-            # into a live block.
-            invalid = (pad - 1) % cache_len
+            # that storage row == (position + pad) % cache_len.
+            filler = (pad - 1) % cache_len
         else:
-            invalid = cache_len - 1   # never written: engine keeps
+            filler = cache_len - 1    # never written: engine keeps
             #                           padded_len < cache_len (slack row)
-        src = np.full(ring, invalid, np.int32)
-        ps = np.arange(max(0, plen - ring), plen)
+        src = np.full(ring, filler, np.int32)
+        backed = np.zeros(ring, bool)
+        # the prefill cache retains at most its own row count of prompt
+        # rows; a margin-widened ring (ring > cache_len) cannot be backed
+        # past that window.
+        ps = np.arange(max(0, plen - min(ring, cache_len)), plen)
         rows = (pad + ps) % cache_len if rolled else pad + ps
         src[ps % ring] = rows
-        return src, invalid
+        backed[ps % ring] = True
+        return src, backed
 
     # ---------------- admission ----------------
 
@@ -403,19 +491,14 @@ class PagedCachePool:
         for si, m in self.maps.items():
             ring = m.ring_len
             cache_len = request_cache["slots"][si]["k"].shape[2]
-            src, invalid = self._src_rows(ring, cache_len, plen, padded_len)
+            src, backed = self._src_rows(ring, cache_len, plen, padded_len)
             dst = np.zeros(m.max_blocks, np.int32)
             for p in placed[si]:
                 if not p.shared:
                     dst[p.chain_pos] = p.block
-            # rows of unwritten chain positions (shared blocks, unused
-            # tail) scatter into the null block and must carry pos -1:
-            # route them through the invalid filler row
-            written = dst[np.arange(ring) // self.block_size] != 0
-            src = np.where(written, src, invalid).astype(np.int32)
             slots[si] = self._insert_arena(
                 slots[si], request_cache["slots"][si],
-                jnp.asarray(src), jnp.asarray(dst))
+                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(backed))
         self.cache = {"slots": tuple(slots), "index": self.cache["index"]}
         req_state = {"slots": {si: request_cache["slots"][si]
                                for si in self._mamba_slots},
@@ -444,44 +527,111 @@ class PagedCachePool:
         """Back logical `row` (the slot's next decode write) with a
         block in every attention slot-type, allocating on demand.
 
-        Returns True when any map allocated a fresh block (its stale
-        positions are buffered for flush_growth(), which MUST run before
-        the next decode step). Raises NoBlocksError when some slot-type
-        cannot allocate even after reclaiming retained blocks — the
-        engine preempts a victim and retries; blocks grown by the
-        partial attempt stay in the table (eviction returns them).
-        Whole-chain (eager) slots always return False: every position is
-        already backed."""
+        Returns True when any map changed its table — a fresh block was
+        allocated (its stale positions are buffered for invalidation) or
+        a shared block was copy-on-write replaced at a ring wrap (the
+        src -> dst content copy is buffered on the map's _pending_cow).
+        flush_growth() MUST run before the next decode step either way.
+        Raises NoBlocksError when some slot-type cannot allocate even
+        after reclaiming retained blocks — the engine preempts a victim
+        and retries; blocks grown by the partial attempt stay in the
+        table (eviction returns them). Whole-chain (eager) slots always
+        return False: every position is already backed."""
         grew = False
         for si, m in self.maps.items():
+            n_cow = len(m._pending_cow)
             b = m.grow(slot, row)
-            if b is not None:
+            if len(m._pending_cow) != n_cow:
+                grew = True       # COW: dst gets its pos FROM the copy —
+                #                   it must NOT be invalidated
+            elif b is not None:
                 self._pending_grown[si].append(b)
                 grew = True
         return grew
 
     def flush_growth(self):
-        """Invalidate the positions of every block grown since the last
-        flush (stale rows from previous occupants must read pos == -1)
-        and re-upload the changed block tables. One fixed-shape jitted
-        scatter per slot-type — (max_batch,) block ids padded with the
-        null block — so growth never retraces the decode step."""
-        if not any(self._pending_grown.values()):
+        """Apply every table change grow() buffered since the last flush,
+        then re-upload the changed block tables. Two fixed-shape jitted
+        ops per slot-type, in this order:
+
+        1. wrap-COW content copies (src -> dst over k/v/pos) — the dst
+           block inherits the shared prompt rows it is about to start
+           overwriting, so it must be populated BEFORE any invalidation
+           and never position-invalidated itself;
+        2. position invalidation of plainly-grown blocks (stale rows
+           from previous occupants must read pos == -1).
+
+        Vectors are padded with the null block to a multiple of
+        max_batch: one grown block per slot per step is the non-
+        speculative common case (compiled once), and a speculative
+        K-row burst tops out at a small fixed number of shapes."""
+        pending_cow = any(m._pending_cow for m in self.maps.values())
+        if not pending_cow and not any(self._pending_grown.values()):
             return
         self._dev_tables = None          # host tables changed: re-upload
         slots = list(self.cache["slots"])
-        for si, grown in self._pending_grown.items():
-            if not grown:
-                continue
-            assert len(grown) <= self.max_batch, (
-                "more than one grown block per slot per step", grown)
-            vec = np.zeros(self.max_batch, np.int32)
-            vec[:len(grown)] = grown
-            slots[si] = {**slots[si],
-                         "pos": self._invalidate(slots[si]["pos"],
-                                                 jnp.asarray(vec))}
-            self._pending_grown[si] = []
+        for si, m in self.maps.items():
+            if m._pending_cow:
+                srcs, dsts = map(list, zip(*m._pending_cow))
+                m._pending_cow.clear()
+                n = -(-len(srcs) // self.max_batch) * self.max_batch
+                sv = np.zeros(n, np.int32)
+                dv = np.zeros(n, np.int32)
+                sv[:len(srcs)] = srcs
+                dv[:len(dsts)] = dsts
+                slots[si] = {**slots[si], **self._copy_blocks(
+                    {k: slots[si][k] for k in ("k", "v", "pos")},
+                    jnp.asarray(sv), jnp.asarray(dv))}
+            grown = self._pending_grown[si]
+            if grown:
+                n = -(-len(grown) // self.max_batch) * self.max_batch
+                vec = np.zeros(n, np.int32)
+                vec[:len(grown)] = grown
+                slots[si] = {**slots[si],
+                             "pos": self._invalidate(slots[si]["pos"],
+                                                     jnp.asarray(vec))}
+                self._pending_grown[si] = []
         self.cache = {"slots": tuple(slots), "index": self.cache["index"]}
+
+    # ---------------- speculative rollback ----------------
+
+    def rollback_rows(self, rows: dict, new_index, capacity: int):
+        """Rewind after a speculative verify round: min-scatter position
+        -1 over each slot's stale logical rows and replace the write
+        cursors wholesale.
+
+        rows: {slot: iterable of stale LOCAL row indices} — the rows the
+          verify scatter wrote beyond the accepted prefix (q + n_emit ..
+          q + K - 1). Rolling back is ONLY an invalidation: with the
+          row_margin in place no future query row can still need the
+          content those writes overwrote, so no block is copied or moved
+          and sharing state is untouched.
+        new_index: (max_batch,) host int32 — every slot's rewound cursor
+          (q + n_emit for round participants, unchanged elsewhere). The
+          device cursor advanced by K inside the verify step, so it is
+          replaced even for slots whose rows all landed.
+        capacity: fixed scatter width (>= total stale rows; the engine
+          passes max_batch * spec_k) so the op compiles once."""
+        total = sum(len(r) for r in rows.values())
+        assert total <= capacity, (total, capacity)
+        slots = list(self.cache["slots"])
+        for si, m in self.maps.items():
+            blks = np.zeros(capacity, np.int32)
+            offs = np.zeros(capacity, np.int32)
+            vals = np.full(capacity, np.iinfo(np.int32).max, np.int32)
+            n = 0
+            for slot, rws in rows.items():
+                for r in rws:
+                    rr = r % m.ring_len
+                    blks[n] = m.table[slot, rr // m.block_size]
+                    offs[n] = rr % m.block_size
+                    vals[n] = -1
+                    n += 1
+            slots[si] = {**slots[si], "pos": self._rollback(
+                slots[si]["pos"], jnp.asarray(blks), jnp.asarray(offs),
+                jnp.asarray(vals))}
+        self.cache = {"slots": tuple(slots),
+                      "index": jnp.asarray(np.asarray(new_index, np.int32))}
 
     @property
     def retained_hits(self) -> int:

@@ -60,6 +60,27 @@ independent of slot placement, admission order and batch composition —
 the property that keeps the engines differential under sampling.
 temperature=0 is bit-exact greedy. Sampling always reads fp32 logits.
 
+Speculative decoding (`spec_draft=(draft_arch, draft_params)`,
+`spec_k=K`): every decode iteration becomes a DRAFT-VERIFY round. A
+small draft model (its own dense CachePool, prefilled at admission
+alongside the target) runs K cheap sequential micro-steps proposing
+d_1..d_K, then the target verifies all K in ONE batched step — the
+verify feeds [t0, d_1..d_{K-1}] as an S=K query block (the S>1 paged
+kernel / XLA path, each row causally masked at its own position) and
+emits y_1..y_K. The leading run of a agreements (d_i == y_i) yields
+n_emit = min(a+1, K, budget) tokens per slot per round: every emitted
+token is the TARGET's pick for its position given an all-accepted
+context, so the spec stream is bit-identical to the non-spec stream —
+greedy trivially, sampled because row i draws with the same
+fold(request_key, emitted+i) key the non-spec step would use at that
+token index. Rejection rolls back by rewinding cursors and
+min-scattering position -1 over the stale rows (target pool AND draft
+pool) — never copying a block; sliding-window rings carry a K-1 row
+margin so the verify burst cannot overwrite in-window keys
+(models/decoder.paged_layout). Requires cache="paged" and
+attention-only superblocks on both models (SSM state cannot rewind);
+mutually exclusive with chunk_budget.
+
 Precision: pass `policy` (name or `repro.precision.Policy`) — parameters
 are cast once at engine construction (bf16/fp16 model copy with fp32
 LN/bias overrides, matching training's inference-side policy) and matmuls
@@ -78,7 +99,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.steps import build_serve_step, greedy_next
+from repro.distributed.steps import (build_serve_step, build_verify_step,
+                                     greedy_next)
 from repro.serving.admission import AdmissionController, chunk_granularity
 from repro.serving.block_allocator import NoBlocksError
 from repro.serving.cache_pool import CachePool, PagedCachePool
@@ -208,6 +230,58 @@ def synthetic_requests(n: int, vocab: int, *, prompt_len: int,
     return reqs
 
 
+def make_spec_pair(arch, params):
+    """Benchmark/test fixture for speculative decoding with acceptance
+    rate 1.0 BY CONSTRUCTION: returns (target_params, draft_arch,
+    draft_params) where
+
+      * target_params are `params` with every period ABOVE the first
+        made inert — the attention out-projection (wo) and MLP
+        down-projection zeroed, so both residual branches contribute
+        exactly 0 and x + 0 == x in every dtype (the upper periods
+        become identity blocks without changing shapes or compile
+        signatures);
+      * draft_arch is the same config truncated to ONE period, and
+        draft_params share the embedding / final norm / head with the
+        target plus the bottom period's weights verbatim.
+
+    The doctored target therefore computes exactly the draft's function,
+    the draft proposes exactly what verify picks, and every speculative
+    round emits the full spec_k block — the workload that isolates the
+    mechanical cost/benefit of draft-verify from draft quality. Only
+    attention(+local)/MLP superblocks are supported (the spec engine
+    rejects mamba anyway, and MoE down-projections live elsewhere)."""
+    cfg = arch.cfg
+    if cfg.n_periods < 2:
+        raise ValueError(f"need >= 2 periods to truncate, got "
+                         f"{cfg.n_periods}")
+    for mixer, ffn in cfg.superblock:
+        if mixer not in ("attn", "attn_local") or ffn != "mlp":
+            raise ValueError(f"make_spec_pair supports attn/mlp "
+                             f"superblocks only, got ({mixer}, {ffn})")
+
+    def inert_upper(sub):      # zero periods 1.. of an output projection
+        return jax.tree_util.tree_map(lambda a: a.at[1:].set(0), sub)
+
+    target_params = dict(params)
+    draft_params = {"embed": params["embed"],
+                    "final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        draft_params["lm_head"] = params["lm_head"]
+    for si in range(len(cfg.superblock)):
+        slot = dict(params[f"slot{si}"])
+        slot["mixer"] = {**slot["mixer"],
+                         "wo": inert_upper(slot["mixer"]["wo"])}
+        slot["ffn"] = {**slot["ffn"],
+                       "down": inert_upper(slot["ffn"]["down"])}
+        target_params[f"slot{si}"] = slot
+        draft_params[f"slot{si}"] = jax.tree_util.tree_map(
+            lambda a: a[:1], params[f"slot{si}"])
+    draft_arch = dataclasses.replace(
+        arch, cfg=dataclasses.replace(cfg, n_layers=len(cfg.superblock)))
+    return target_params, draft_arch, draft_params
+
+
 def pad_prompts(prompts: List[np.ndarray], granularity: int = 1,
                 pad_len: Optional[int] = None):
     """Left-pad to a common length; returns (tokens, positions, lengths).
@@ -249,7 +323,8 @@ class ContinuousEngine:
                  growth: str = "lazy", sched_policy="fifo",
                  slo_ms: Optional[float] = None, preempt: bool = True,
                  retain_blocks: Optional[int] = None, watermark: int = 0,
-                 chunk_budget: Optional[int] = None):
+                 chunk_budget: Optional[int] = None,
+                 spec_draft=None, spec_k: int = 4):
         """See the class/module docstring for the serving model. Key args:
 
         max_batch: decode slot-pool size (the fixed step batch).
@@ -300,6 +375,14 @@ class ContinuousEngine:
             keeps whole-prompt admission. chunk_budget >= max_batch - 1
             + chunk granularity guarantees the prefill task progresses
             every step even with a full decode batch.
+        spec_draft: (draft_arch, draft_params) enabling speculative
+            draft-verify decode (see the module docstring). The draft is
+            cast with the same precision policy as the target. Requires
+            cache="paged", attention-only superblocks on both models,
+            and a shared vocab; mutually exclusive with chunk_budget.
+        spec_k: tokens proposed/verified per round (>= 2). Sliding-
+            window rings gain a spec_k - 1 row margin; everything else
+            is exactly the non-speculative layout.
         """
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
@@ -315,6 +398,29 @@ class ContinuousEngine:
         if attn_kernel == "paged" and cache != "paged":
             raise ValueError("attn_kernel='paged' requires cache='paged' "
                              "(the dense pool has no block tables)")
+        self.spec = spec_draft is not None
+        if self.spec:
+            if spec_k < 2:
+                raise ValueError(f"spec_k must be >= 2, got {spec_k}")
+            if cache != "paged":
+                raise ValueError(
+                    "speculative decoding requires cache='paged' "
+                    "(rollback and the row margin are paged-pool features)")
+            if chunk_budget is not None:
+                raise ValueError("speculative decoding and chunked "
+                                 "prefill are mutually exclusive")
+            draft_arch, draft_params = spec_draft
+            for who, a in (("target", arch), ("draft", draft_arch)):
+                if any(m == "mamba" for m, _ in a.cfg.superblock):
+                    raise ValueError(
+                        f"speculative decoding needs an attention-only "
+                        f"{who}: SSM state cannot be stepped S=K "
+                        f"(target) or rewound on rejection (draft)")
+            if draft_arch.cfg.vocab != arch.cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_arch.cfg.vocab} != target "
+                    f"vocab {arch.cfg.vocab}")
+        self.spec_k = spec_k if self.spec else 1
         self.arch, self.params = apply_serving_policy(arch, params, policy)
         if attn_kernel != self.arch.cfg.attn_kernel:
             self.arch = dataclasses.replace(
@@ -358,7 +464,8 @@ class ContinuousEngine:
                 self.arch, max_batch, max_len, block_size=block_size,
                 slots_budget=slots_budget, share_prefix=share_prefix,
                 attn_kernel=attn_kernel, growth=growth,
-                retain_blocks=retain_blocks, watermark=watermark)
+                retain_blocks=retain_blocks, watermark=watermark,
+                row_margin=self.spec_k - 1)
             # slack rows so the padded prompt never reaches the request
             # cache's last row, which stays pos=-1 (the insert's invalid
             # filler — see PagedCachePool._src_rows)
@@ -380,6 +487,22 @@ class ContinuousEngine:
             self._admission = AdmissionController(
                 self.arch, self.params, chunk_budget=chunk_budget,
                 prefill_len=prefill_len)
+        if self.spec:
+            self.draft_arch, self.draft_params = apply_serving_policy(
+                draft_arch, draft_params, policy)
+            self.draft_pool = CachePool(self.draft_arch, max_batch, max_len)
+            self._draft_prefill = build_prefill_fn(self.draft_arch, max_len)
+            self._draft_step = build_serve_step(
+                self.draft_arch.decode_step, mesh, sampler=self.sampler)
+            self._verify = build_verify_step(self.arch.decode_step, mesh,
+                                             sampler=self.sampler)
+            # host mirror of the draft pool's write cursors (PADDED
+            # storage rows, unlike _positions' local timeline: the dense
+            # pool counts left-pad rows)
+            self._draft_rows = np.zeros(max_batch, np.int64)
+            self.spec_rounds = 0
+            self.drafted_tokens = 0     # proposals verified (fl per slot)
+            self.accepted_tokens = 0    # proposals the target agreed with
 
         self._tokens = np.zeros((max_batch, 1), np.int32)
         self._positions = np.full((max_batch, 1), -1, np.int32)
@@ -418,6 +541,9 @@ class ContinuousEngine:
         req.generated = np.array(self._emitted.pop(slot), np.int32)
         req.trace.done_t = time.perf_counter()
         self.pool.evict(slot)
+        if self.spec:
+            self.draft_pool.evict(slot)
+            self._draft_rows[slot] = 0
         self._admit_seq.pop(slot, None)
         self._admit_time.pop(slot, None)
         # position -1 marks the slot inactive: its (ignored) decode writes
@@ -560,6 +686,15 @@ class ContinuousEngine:
                     self.prefill_bucket, pad_len=padded)
                 logits, batch_cache = self._prefill(
                     self.params, jnp.asarray(tokens), jnp.asarray(positions))
+                draft_cache = None
+                if self.spec:
+                    # the draft prefills the SAME padded group: its slot
+                    # state must encode exactly the prompt (+ resume)
+                    # context the target slot holds, or round-1 proposals
+                    # would be conditioned on a different prefix
+                    _, draft_cache = self._draft_prefill(
+                        self.draft_params, jnp.asarray(tokens),
+                        jnp.asarray(positions))
                 first, rkeys = first_tokens(
                     self._first, self.sampler, self._wants_keys, logits,
                     pad_reqs,
@@ -582,6 +717,11 @@ class ContinuousEngine:
                         # intact (the continuation state stays parked)
                         failed.append(slot)
                         continue
+                    if self.spec:
+                        self.draft_pool.insert(
+                            _slice_request(draft_cache, g), slot)
+                        # dense-pool cursor == PADDED rows written
+                        self._draft_rows[slot] = padded
                     self._resume.pop(req.rid, None)
                     t0 = int(first[g])
                     if req.trace.admit_t is None:   # keep the FIRST
@@ -698,6 +838,9 @@ class ContinuousEngine:
         req.trace.preemptions += 1
         self.preemptions += 1
         self.pool.evict(slot)
+        if self.spec:
+            self.draft_pool.evict(slot)
+            self._draft_rows[slot] = 0
         self.scheduler.preempt(slot)
         self._admit_seq.pop(slot, None)
         self._admit_time.pop(slot, None)
@@ -715,27 +858,39 @@ class ContinuousEngine:
             if slot not in self.scheduler.active:
                 continue            # preempted as a victim earlier in loop
             row = int(self._positions[slot, 0])
-            while True:
-                try:
-                    self.pool.grow(slot, row)
-                    break
-                except NoBlocksError:
-                    if not self.preempt_enabled:
-                        raise RuntimeError(
-                            "paged arena exhausted mid-decode with "
-                            "preemption disabled: raise slots_budget / "
-                            "watermark, or enable preempt")
-                    candidates = self._decode_slots()
-                    victim = self.sched_policy.victim(candidates,
-                                                      self._policy_ctx())
-                    if victim == slot and len(candidates) == 1:
-                        raise RuntimeError(
-                            "single active slot cannot grow: the arena "
-                            "is smaller than one request's chain (raise "
-                            "slots_budget)")
-                    self._preempt(victim)
-                    if victim == slot:
-                        break       # this slot was the sacrifice
+            n_rows = 1
+            if self.spec:
+                # back every REAL verify row (q..q+fl-1); the block-pad
+                # rows beyond the remaining budget carry position -1 and
+                # are scatter-routed to the null block, so they need no
+                # backing (models/attention.py paged branch)
+                req = self.scheduler.active[slot]
+                n_rows = min(self.spec_k,
+                             req.max_new_tokens - len(self._emitted[slot]))
+            for r in range(row, row + n_rows):
+                if slot not in self.scheduler.active:
+                    break           # became the sacrifice below
+                while True:
+                    try:
+                        self.pool.grow(slot, r)
+                        break
+                    except NoBlocksError:
+                        if not self.preempt_enabled:
+                            raise RuntimeError(
+                                "paged arena exhausted mid-decode with "
+                                "preemption disabled: raise slots_budget "
+                                "/ watermark, or enable preempt")
+                        candidates = self._decode_slots()
+                        victim = self.sched_policy.victim(candidates,
+                                                          self._policy_ctx())
+                        if victim == slot and len(candidates) == 1:
+                            raise RuntimeError(
+                                "single active slot cannot grow: the "
+                                "arena is smaller than one request's "
+                                "chain (raise slots_budget)")
+                        self._preempt(victim)
+                        if victim == slot:
+                            break   # this slot was the sacrifice
 
     def _evict_overdue(self):
         """SLO eviction of stuck slots: any active request older (since
@@ -774,41 +929,170 @@ class ContinuousEngine:
                     f"budget {req.max_new_tokens}) cannot fit an empty "
                     f"paged arena: raise slots_budget or max_len")
             return self.scheduler.has_work
-        cache = self.pool.cache
-        if self.paged:
-            cache = {**cache, "tables": self.pool.device_tables()}
-        args = (self.params, jnp.asarray(self._tokens),
-                jnp.asarray(self._positions), cache)
-        if self._wants_keys:
-            tvec = np.zeros(self.max_batch, np.int32)
+        if self.spec:
+            self._spec_round(active)
+        else:
+            cache = self.pool.cache
+            if self.paged:
+                cache = {**cache, "tables": self.pool.device_tables()}
+            args = (self.params, jnp.asarray(self._tokens),
+                    jnp.asarray(self._positions), cache)
+            if self._wants_keys:
+                tvec = np.zeros(self.max_batch, np.int32)
+                for slot in active:
+                    tvec[slot] = len(self._emitted[slot])
+                args += (fold_keys(jnp.asarray(self._req_keys),
+                                   jnp.asarray(tvec)),)
+            nxt, new_cache = self._step(*args)
+            self.pool.cache = {"slots": new_cache["slots"],
+                               "index": new_cache["index"]}
+            if self.paged:
+                # reuse the pass-through table outputs next step: zero
+                # table uploads while no admission/eviction churns the
+                # block maps
+                self.pool.put_device_tables(new_cache["tables"])
+            nxt = np.asarray(nxt)        # host sync: tokens feed next step
+            now = time.perf_counter()
+            self.steps_run += 1
+            self.slot_steps += len(active)
             for slot in active:
-                tvec[slot] = len(self._emitted[slot])
-            args += (fold_keys(jnp.asarray(self._req_keys),
-                               jnp.asarray(tvec)),)
-        nxt, new_cache = self._step(*args)
+                req = self.scheduler.active[slot]
+                self._emitted[slot].append(int(nxt[slot]))
+                req.trace.mark_token(now)
+                self._tokens[slot, 0] = int(nxt[slot])
+                self._positions[slot, 0] += 1
+                if len(self._emitted[slot]) >= req.max_new_tokens:
+                    self._finish(slot)
+        if self.on_step is not None:
+            info = {"step": self.steps_run, "active": len(active),
+                    "queued": self.scheduler.queued,
+                    "preemptions": self.preemptions}
+            if self.spec:
+                info.update(spec_rounds=self.spec_rounds,
+                            drafted_tokens=self.drafted_tokens,
+                            accepted_tokens=self.accepted_tokens)
+            self.on_step(info)
+        return self.scheduler.has_work
+
+    def _spec_round(self, active):
+        """One draft-verify round over the active decode slots.
+
+        Per slot with remaining budget `rem` and cursor position p:
+          1. K draft micro-steps (S=1, the draft's dense pool) propose
+             d_1..d_K with per-token keys fold(rkey, emitted + i) — the
+             SAME keys the target uses, so a draft whose logits match
+             the target's proposes exactly what verify picks.
+          2. One target verify step feeds [t0, d_1..d_{K-1}] at
+             positions p..p+fl-1 (fl = min(K, rem); block-pad rows
+             carry position -1 and scatter into the null block) and
+             emits y_1..y_K, row i sampled exactly as the non-spec step
+             samples token emitted+i.
+          3. The leading agreement run a (d_i == y_i) emits y_1..y_n,
+             n = min(a+1, fl): a accepted draft tokens plus the
+             target's correction (or, at a == fl, the full block). Every
+             emitted token saw an all-accepted context, so the stream
+             is bit-identical to non-speculative decode.
+          4. If any slot stopped short of K, BOTH pools roll back:
+             cursors rewind to q + n and the stale rows' positions
+             min-scatter to -1 (fixed capacity max_batch * K, compiled
+             once). A full-acceptance round skips rollback entirely —
+             the device cursors already sit at q + K.
+        """
+        K = self.spec_k
+        B = self.max_batch
+        tvec = np.zeros(B, np.int32)
+        feed_len = np.zeros(B, np.int32)
+        for slot in active:
+            req = self.scheduler.active[slot]
+            tvec[slot] = len(self._emitted[slot])
+            feed_len[slot] = min(K, req.max_new_tokens
+                                 - len(self._emitted[slot]))
+
+        # ---- 1. draft micro-steps ----------------------------------
+        fed = np.zeros((B, K), np.int32)       # d_0..d_{K-1} (d_0 = t0)
+        props = np.zeros((B, K), np.int32)     # d_1..d_K
+        tok = self._tokens.copy()
+        pos = self._positions.copy()
+        live = pos[:, 0] >= 0
+        for i in range(K):
+            fed[:, i] = tok[:, 0]
+            args = (self.draft_params, jnp.asarray(tok), jnp.asarray(pos),
+                    self.draft_pool.cache)
+            if self._wants_keys:
+                args += (fold_keys(jnp.asarray(self._req_keys),
+                                   jnp.asarray(tvec + i)),)
+            nxt, dcache = self._draft_step(*args)
+            self.draft_pool.cache = dcache
+            nxt = np.asarray(nxt)
+            props[:, i] = nxt
+            tok[:, 0] = np.where(live, nxt, 0)
+            pos[:, 0] = np.where(live, pos[:, 0] + 1, -1)
+
+        # ---- 2. target verify --------------------------------------
+        vpos = np.full((B, K), -1, np.int32)
+        for slot in active:
+            fl = int(feed_len[slot])
+            vpos[slot, :fl] = (int(self._positions[slot, 0])
+                               + np.arange(fl, dtype=np.int32))
+        cache = {**self.pool.cache, "tables": self.pool.device_tables()}
+        args = (self.params, jnp.asarray(fed), jnp.asarray(vpos), cache)
+        if self._wants_keys:
+            ti = tvec[:, None] + np.arange(K, dtype=np.int32)[None, :]
+            flat = fold_keys(
+                jnp.asarray(np.repeat(self._req_keys, K, axis=0)),
+                jnp.asarray(ti.reshape(-1)))
+            args += (flat.reshape(B, K, 2),)
+        ys, new_cache = self._verify(*args)
         self.pool.cache = {"slots": new_cache["slots"],
                            "index": new_cache["index"]}
-        if self.paged:
-            # reuse the pass-through table outputs next step: zero table
-            # uploads while no admission/eviction churns the block maps
-            self.pool.put_device_tables(new_cache["tables"])
-        nxt = np.asarray(nxt)            # host sync: tokens feed next step
+        self.pool.put_device_tables(new_cache["tables"])
+        ys = np.asarray(ys)
         now = time.perf_counter()
         self.steps_run += 1
         self.slot_steps += len(active)
+        self.spec_rounds += 1
+
+        # ---- 3. acceptance -----------------------------------------
+        emits = {}
         for slot in active:
+            fl = int(feed_len[slot])
+            prop = props[slot, :fl]            # d_1..d_fl
+            tgt = ys[slot, :fl]                # y_1..y_fl
+            neq = np.nonzero(prop != tgt)[0]
+            a = int(neq[0]) if len(neq) else fl
+            n_emit = min(a + 1, fl)
+            emits[slot] = (n_emit, tgt[:n_emit])
+            self.drafted_tokens += fl
+            self.accepted_tokens += min(a, n_emit)
+
+        # ---- 4. rollback (reject or budget-truncated rounds) -------
+        if any(ne != K for ne, _ in emits.values()):
+            stale_t, stale_d = {}, {}
+            new_ti = np.zeros(B, np.int32)
+            new_di = np.zeros(B, np.int32)
+            for slot in active:
+                ne = emits[slot][0]
+                q = int(self._positions[slot, 0])
+                c = int(self._draft_rows[slot])
+                stale_t[slot] = range(q + ne, q + K)
+                stale_d[slot] = range(c + ne, c + K)
+                new_ti[slot] = q + ne
+                new_di[slot] = c + ne
+            self.pool.rollback_rows(stale_t, new_ti, B * K)
+            self.draft_pool.rollback_rows(stale_d, new_di, B * K)
+
+        # ---- bookkeeping (mirrors the non-spec step) ---------------
+        for slot in active:
+            ne, toks = emits[slot]
             req = self.scheduler.active[slot]
-            self._emitted[slot].append(int(nxt[slot]))
-            req.trace.mark_token(now)
-            self._tokens[slot, 0] = int(nxt[slot])
-            self._positions[slot, 0] += 1
+            self._emitted[slot].extend(int(t) for t in toks)
+            for _ in range(ne):
+                req.trace.mark_token(now)
+            self._tokens[slot, 0] = int(toks[-1])
+            self._positions[slot, 0] += ne
+            self._draft_rows[slot] += ne
             if len(self._emitted[slot]) >= req.max_new_tokens:
                 self._finish(slot)
-        if self.on_step is not None:
-            self.on_step({"step": self.steps_run, "active": len(active),
-                          "queued": self.scheduler.queued,
-                          "preemptions": self.preemptions})
-        return self.scheduler.has_work
 
     def run(self, requests: Optional[List[Request]] = None) -> List[Request]:
         """Drain: submit `requests` (if given) and step until idle."""
@@ -849,6 +1133,13 @@ class ContinuousEngine:
             stats["chunk_budget"] = self.chunk_budget
             stats["chunk_steps"] = self._admission.chunks_run
             stats["chunk_tokens"] = self._admission.chunk_tokens
+        if self.spec:
+            stats["spec_k"] = self.spec_k
+            stats["spec_rounds"] = self.spec_rounds
+            stats["drafted_tokens"] = self.drafted_tokens
+            stats["accepted_tokens"] = self.accepted_tokens
+            stats["acceptance_rate"] = (self.accepted_tokens
+                                        / max(1, self.drafted_tokens))
         return stats
 
 

@@ -96,6 +96,40 @@ def test_serving_doc_covers_chunked_prefill():
             f"README flag table lost {flag}")
 
 
+def test_serving_doc_covers_speculative_decoding():
+    """The speculative-decoding + wrap-COW rewrite must keep its
+    anchors: the spec invariants section (rewind, acceptance exactness,
+    draft lifecycle) with runnable fences, the wrap-COW contract that
+    REPLACED the no-COW-ever rule, the stable-argmax-by-default bf16
+    differential story, the kernels.md S>1 worked example, and the
+    `--spec-draft` / `--spec-k` flag rows in both flag tables."""
+    serving = (ROOT / "docs" / "serving.md").read_text()
+    for anchor in ("## Speculative decoding",
+                   "Rollback is a rewind",
+                   "Acceptance sampling is exact",
+                   "Draft-slot lifecycle",
+                   "at the ring wrap",
+                   "stable_argmax"):
+        assert anchor in serving, f"serving.md lost its '{anchor}' anchor"
+    assert "No copy-on-write, ever" not in serving, (
+        "the no-COW-ever rule is dead: grow() copy-on-writes at the "
+        "ring wrap so wrapped prefixes stay shared")
+    sect = serving.split("## Speculative decoding", 1)[1]
+    sect = sect.split("## Flag map", 1)[0]
+    path = ROOT / "docs" / "serving.md"
+    assert any(code in sect for _, code in _fences(path, "python")), (
+        "speculative section lost its python example")
+    assert any(code in sect for _, code in _fences(path, "bash")), (
+        "speculative section lost its bash example")
+    kernels = (ROOT / "docs" / "kernels.md").read_text()
+    assert "Small-S query blocks" in kernels, (
+        "kernels.md lost the S>1 query-block worked example")
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--spec-draft", "--spec-k"):
+        assert flag in serving, f"serving.md flag map lost {flag}"
+        assert flag in readme, f"README flag table lost {flag}"
+
+
 @pytest.mark.parametrize("path,line,code", _cases("python"))
 def test_python_fences_parse(path, line, code):
     try:

@@ -281,30 +281,36 @@ def test_pallas_kernel_token_identical_to_xla_gather(policy):
     ep.pool.check_invariants()
 
 
-def test_pallas_kernel_four_way_differential():
+@pytest.mark.parametrize("policy", ["fp32", "bf16"])
+def test_pallas_kernel_four_way_differential(policy):
     """Acceptance chain: static == dense == paged-xla == paged-pallas.
     qwen2.5-14b exercises the plain full-attention ring (no window).
 
-    Runs under the fp32 policy: the four implementations lay the same
-    keys out at different cache rows, so under bf16 compute a one-ulp
-    rounding difference can legitimately break an argmax tie differently
-    ACROSS LAYOUTS (pre-existing: HEAD's dense-vs-paged already flips on
-    this workload). Full-fp32 compute keeps cross-layout noise at 1e-7
-    where greedy decode is deterministic. Same-LAYOUT bf16 equality —
-    the kernel's own claim — is pinned by the pair test above."""
+    The four implementations lay the same keys out at different cache
+    rows, so under bf16 compute a one-ulp rounding difference can break
+    a RAW argmax tie differently across layouts (this workload ties on
+    request 1). The bf16 leg therefore runs the tie-stable greedy
+    argmax — logits snapped to bf16 resolution before the index
+    tiebreak — which makes the chain hold at every precision; the
+    fp32-only restriction this differential carried since PR 4 is
+    gone."""
     from repro.serving import ServeEngine
     arch, params = setup_arch("qwen2.5-14b")
+    sampler = None if policy == "fp32" else "temperature=0,stable=1"
     builders = [
-        lambda: ServeEngine(arch, params, max_len=MAX_LEN, policy="fp32"),
+        lambda: ServeEngine(arch, params, max_len=MAX_LEN, policy=policy,
+                            sampler=sampler),
         lambda: ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
                                  cache="dense", prefill_bucket=8,
-                                 policy="fp32"),
+                                 policy=policy, sampler=sampler),
         lambda: ContinuousEngine(arch, params, max_batch=3, max_len=MAX_LEN,
-                                 cache="paged", block_size=8, policy="fp32",
-                                 prefill_bucket=8, attn_kernel="xla"),
+                                 cache="paged", block_size=8, policy=policy,
+                                 prefill_bucket=8, attn_kernel="xla",
+                                 sampler=sampler),
         lambda: ContinuousEngine(arch, params, max_batch=3, max_len=MAX_LEN,
-                                 cache="paged", block_size=8, policy="fp32",
-                                 prefill_bucket=8, attn_kernel="paged"),
+                                 cache="paged", block_size=8, policy=policy,
+                                 prefill_bucket=8, attn_kernel="paged",
+                                 sampler=sampler),
     ]
     all_reqs = []
     for build in builders:

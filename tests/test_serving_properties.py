@@ -373,3 +373,160 @@ def test_unscale_divides_float_leaves_exactly(scale_pow, seed):
     out = unscale_grads(scaled, state)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
     assert out["step"].dtype == jnp.int32 and int(out["step"]) == 7
+
+
+# --------------------------------------------------------------------------
+# speculative accept-then-rollback against the REAL device pool
+# --------------------------------------------------------------------------
+
+_spec_pool_fixture = {}
+
+
+def _spec_pool_arch():
+    """Reduced gemma2 (sliding window 16: chains wrap, wrap-COW fires)
+    + one memoized 8-token prefill cache — the hypothesis loop reuses
+    both; only host bookkeeping and small device scatters vary."""
+    if not _spec_pool_fixture:
+        from conftest import setup_serving_arch
+        arch, params = setup_serving_arch("gemma2-2b")
+        _, req_cache = arch.prefill(
+            params, {"tokens": np.arange(5, 13, dtype=np.int32)[None]},
+            cache_len=32, per_slot=True,
+            positions=np.arange(8, dtype=np.int32)[None])
+        _spec_pool_fixture["arch"] = arch
+        _spec_pool_fixture["req"] = req_cache
+    return _spec_pool_fixture["arch"], _spec_pool_fixture["req"]
+
+
+@pytest.mark.paged
+@pytest.mark.spec
+@settings(max_examples=12, deadline=None)
+@given(data=st.data(), retain_limit=st.integers(0, 3))
+def test_paged_pool_accept_rollback_state_machine(data, retain_limit):
+    """Random speculative rounds (grow K rows -> write positions ->
+    accept a prefix -> roll back the rest) interleaved with admissions
+    and evictions against a REAL PagedCachePool, mirroring exactly what
+    ContinuousEngine._spec_round does:
+
+      * rollback is ONLY a min-scatter + cursor replace: the rolled-back
+        rows' positions read -1 from every layer afterwards (no stale
+        pos visible to the kernel) while accepted rows keep theirs;
+      * grow() hands the writer exclusively-owned blocks even when the
+        chain wraps onto SHARED prompt blocks (wrap-COW) — so the
+        simulated verify writes never touch another holder's content,
+        and COW composes with a rollback in the same round;
+      * check_invariants() holds throughout (refcount == table refs,
+        retained blocks never table-aliased, free/live/retained
+        partition) and draining evicts leaks nothing.
+    """
+    from repro.serving import NoBlocksError, PagedCachePool
+
+    arch, req_cache = _spec_pool_arch()
+    K = 4
+    max_batch = 3
+    pool = PagedCachePool(arch, max_batch, max_len=24, block_size=4,
+                          growth="lazy", retain_blocks=retain_limit,
+                          row_margin=K - 1)
+    n_blocks = {si: m.alloc.n_blocks for si, m in pool.maps.items()}
+    live = {}                      # slot -> {"cursor": int, "end": int}
+    cursors = np.zeros(max_batch, np.int32)
+
+    def write_rows(slot, rows):
+        """Simulate the verify scatter: pos[row] = row at each grown
+        row's (block, offset) — only ever into exclusive blocks."""
+        slots = list(pool.cache["slots"])
+        for si, m in pool.maps.items():
+            pos = slots[si]["pos"]
+            for r in rows:
+                rr = r % m.ring_len
+                blk = int(m.table[slot, rr // m.block_size])
+                assert blk != 0, "grown row left unbacked"
+                assert m.alloc.ref[blk] == 1, (
+                    "verify write would hit a shared block (COW missed)")
+                pos = pos.at[:, blk, rr % m.block_size].set(r)
+            slots[si] = {**slots[si], "pos": pos}
+        pool.cache = {"slots": tuple(slots), "index": pool.cache["index"]}
+
+    def pos_at(si, slot, r):
+        m = pool.maps[si]
+        rr = r % m.ring_len
+        blk = int(m.table[slot, rr // m.block_size])
+        return np.asarray(
+            pool.cache["slots"][si]["pos"])[:, blk, rr % m.block_size]
+
+    prompts = [tuple([v] * 8) for v in (1, 2)]   # tiny alphabet: sharing
+    for _ in range(data.draw(st.integers(1, 12), label="n_ops")):
+        ops = ["insert"] + (["round", "round", "evict"] if live else [])
+        op = data.draw(st.sampled_from(ops), label="op")
+        if op == "evict":
+            slot = data.draw(st.sampled_from(sorted(live)), label="evict")
+            pool.evict(slot)
+            del live[slot]
+        elif op == "insert":
+            free = sorted(set(range(max_batch)) - set(live))
+            if not free:
+                continue
+            slot = data.draw(st.sampled_from(free), label="slot")
+            prompt = data.draw(st.sampled_from(prompts), label="prompt")
+            budget = data.draw(st.integers(2, 16), label="budget")
+            try:
+                pool.insert(req_cache, slot, prompt=prompt, plen=8,
+                            padded_len=8, budget=budget)
+            except NoBlocksError:
+                assert not any(m.table[slot].any()
+                               for m in pool.maps.values())  # atomic
+            else:
+                live[slot] = {"cursor": 8, "end": 8 + budget - 2}
+                cursors[slot] = 8
+        else:                                    # one speculative round
+            slot = data.draw(st.sampled_from(sorted(live)), label="round")
+            st_ = live[slot]
+            if st_["cursor"] > st_["end"]:
+                pool.evict(slot)                 # budget exhausted
+                del live[slot]
+                continue
+            n = min(K, st_["end"] - st_["cursor"] + 1)
+            q = st_["cursor"]
+            grown, blocked = [], False
+            for r in range(q, q + n):
+                try:
+                    pool.grow(slot, r)
+                except NoBlocksError:
+                    blocked = True
+                    break
+                grown.append(r)
+            pool.flush_growth()
+            if blocked:
+                # the engine would preempt a victim; evicting the slot
+                # itself is the simplest legal recovery (partial growth
+                # stays in the table and eviction returns it)
+                pool.evict(slot)
+                del live[slot]
+                pool.check_invariants()
+                continue
+            write_rows(slot, grown)
+            ne = data.draw(st.integers(0, n), label="accepted")
+            if ne != K:
+                cursors[slot] = q + ne
+                pool.rollback_rows({slot: range(q + ne, q + K)},
+                                   cursors, max_batch * K)
+                for r in range(q + ne, q + n):   # rolled-back, was grown
+                    for si in pool.maps:
+                        assert (pos_at(si, slot, r) == -1).all(), (
+                            "stale pos visible after rollback", si, r)
+            else:
+                cursors[slot] = q + K
+            for r in range(q, q + ne):           # accepted rows keep pos
+                for si in pool.maps:
+                    assert (pos_at(si, slot, r) == r).all()
+            st_["cursor"] = q + ne
+            if st_["cursor"] > st_["end"]:
+                pool.evict(slot)
+                del live[slot]
+        pool.check_invariants()
+    for slot in sorted(live):
+        pool.evict(slot)
+    pool.check_invariants()
+    for si, m in pool.maps.items():
+        assert m.alloc.n_live == 0
+        assert m.alloc.n_free + m.alloc.n_retained == n_blocks[si] - 1

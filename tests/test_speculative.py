@@ -1,0 +1,251 @@
+"""Speculative draft-verify decoding: exactness, rollback, wrap-COW.
+
+The load-bearing claims of the speculative stack, each asserted here:
+
+  * EXACTNESS: a speculative engine emits bit-identical greedy tokens
+    to the static / dense / paged non-speculative engines (fp32 quad),
+    REGARDLESS of draft quality — a randomly-initialised draft whose
+    proposals are almost always rejected still matches, because every
+    emitted token saw a fully-accepted context;
+  * the same-layout bf16 pair (paged vs speculative-paged, tie-stable
+    greedy argmax) also matches: the spec engine's row-margined rings
+    change reduction shapes, and stable_argmax absorbs the one-ulp ties;
+  * ROLLBACK-SAFE KEYING: sampled streams are keyed fold(request_key,
+    token_index) by POSITION, not by step — so a reject-heavy
+    speculative run and a preemption-replayed non-speculative run both
+    reproduce the straight-line sampled stream bit-exactly (no PRNG key
+    is ever reused or skipped across a cursor rewind);
+  * accept/reject churn and budget-truncated rounds never retrace the
+    verify or draft steps (`_cache_size() == 1`);
+  * WRAP-COW: a sliding-window slot whose decode wraps its ring COWs
+    the shared prompt blocks instead of unregistering them, so a
+    post-wrap second wave still shares/revives the prefix (the ROADMAP
+    bug carried since PR 3);
+  * constructor validation rejects unusable configurations.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_serving_requests as make_requests
+from conftest import setup_serving_arch as setup_arch
+from repro.serving import ContinuousEngine, ServeEngine, make_spec_pair
+
+pytestmark = [pytest.mark.serving, pytest.mark.spec]
+
+MAX_LEN = 48
+SSPEC = [(7, 4), (11, 6), (5, 1), (9, 3), (11, 4)]
+
+_draft_cache = {}
+
+
+def draft_of(arch, seed=7):
+    """An arbitrary (same-config, independently initialised) draft: its
+    proposals are wrong essentially always, which makes it the
+    reject-churn stressor — correctness must not depend on acceptance."""
+    if seed not in _draft_cache:
+        _draft_cache[seed] = arch.init(jax.random.PRNGKey(seed))
+    return arch, _draft_cache[seed]
+
+
+def spec_engine(arch, params, draft, **kw):
+    base = dict(max_batch=3, max_len=MAX_LEN, cache="paged", block_size=8,
+                prefill_bucket=8, spec_draft=draft, spec_k=4)
+    base.update(kw)
+    return ContinuousEngine(arch, params, **base)
+
+
+# --------------------------------------------------------------------------
+# exactness differentials
+# --------------------------------------------------------------------------
+
+def test_spec_greedy_quad_fp32():
+    """static == dense == paged == SPECULATIVE-paged, greedy fp32, with
+    a reject-heavy random draft: acceptance hovers near zero, so every
+    round exercises the rollback path — and the tokens still match."""
+    arch, params = setup_arch("qwen2.5-14b")
+    builders = [
+        lambda: ServeEngine(arch, params, max_len=MAX_LEN, policy="fp32"),
+        lambda: ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                                 cache="dense", prefill_bucket=8,
+                                 policy="fp32"),
+        lambda: ContinuousEngine(arch, params, max_batch=3, max_len=MAX_LEN,
+                                 cache="paged", block_size=8,
+                                 prefill_bucket=8, policy="fp32"),
+        lambda: spec_engine(arch, params, draft_of(arch), policy="fp32"),
+    ]
+    all_reqs, engines = [], []
+    for build in builders:
+        reqs = make_requests(arch, SSPEC, prefix=16)
+        eng = build()
+        eng.run_batch(reqs)
+        all_reqs.append(reqs)
+        engines.append(eng)
+    for quad in zip(*all_reqs):
+        for other in quad[1:]:
+            np.testing.assert_array_equal(quad[0].generated, other.generated)
+    spec = engines[-1]
+    assert spec.spec_rounds > 0 and spec.drafted_tokens > 0
+    # reject churn + budget-truncated rounds never retrace anything
+    assert spec._verify._cache_size() == 1
+    assert spec._draft_step._cache_size() == 1
+    spec.pool.check_invariants()
+
+
+def test_spec_bf16_same_layout_pair():
+    """Same-layout bf16 equality under the tie-stable greedy argmax:
+    the speculative engine's row-margined rings reorder reductions, and
+    stable_argmax keeps one-ulp logit ties from flipping tokens."""
+    arch, params = setup_arch("qwen2.5-14b")
+    sampler = "temperature=0,stable=1"
+    a = make_requests(arch, SSPEC, prefix=16)
+    ContinuousEngine(arch, params, max_batch=3, max_len=MAX_LEN,
+                     cache="paged", block_size=8, prefill_bucket=8,
+                     policy="bf16", sampler=sampler).run(a)
+    b = make_requests(arch, SSPEC, prefix=16)
+    spec_engine(arch, params, draft_of(arch), policy="bf16",
+                sampler=sampler).run(b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+
+
+def test_spec_full_acceptance_pair_emits_blocks():
+    """make_spec_pair's doctored target accepts EVERY proposal, the
+    other extreme of the acceptance spectrum: one verify step per
+    spec_k-token block, identical tokens, and the all-accept fast path
+    (no rollback) keeps device cursors consistent across rounds."""
+    arch, params = setup_arch("qwen2.5-14b")
+    tgt_params, draft_arch, draft_params = make_spec_pair(arch, params)
+    a = make_requests(arch, SSPEC, prefix=16)
+    plain = ContinuousEngine(arch, tgt_params, max_batch=3, max_len=MAX_LEN,
+                             cache="paged", block_size=8, prefill_bucket=8)
+    plain.run(a)
+    b = make_requests(arch, SSPEC, prefix=16)
+    spec = spec_engine(arch, tgt_params, (draft_arch, draft_params))
+    spec.run(b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+    rep = spec.report(1.0)
+    assert rep["acceptance_rate"] == 1.0
+    # full blocks: decode rounds ~ tokens / spec_k, not tokens
+    assert spec.steps_run < plain.steps_run
+    spec.pool.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# rollback-safe sampler keying (satellite: keys by position, not by step)
+# --------------------------------------------------------------------------
+
+SAMPLER = "temperature=0.8,top_k=20,seed=11"
+
+
+def _straight_line_sampled(arch, params, spec=SSPEC, prefix=16):
+    reqs = make_requests(arch, spec, prefix=prefix)
+    ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                     cache="dense", prefill_bucket=8, policy="fp32",
+                     sampler=SAMPLER).run(reqs)
+    return reqs
+
+
+def test_spec_sampled_stream_survives_reject_churn():
+    """Reject-heavy speculative sampling == straight-line sampling,
+    bit-exact: verify row i samples with fold(request_key, emitted + i),
+    the key the non-speculative step would use at that token index, so
+    a rollback neither reuses nor skips a key."""
+    arch, params = setup_arch("qwen2.5-14b")
+    base = _straight_line_sampled(arch, params)
+    reqs = make_requests(arch, SSPEC, prefix=16)
+    eng = spec_engine(arch, params, draft_of(arch), policy="fp32",
+                      sampler=SAMPLER)
+    eng.run(reqs)
+    # the random draft must actually have caused rejections (else this
+    # test silently stopped covering the rollback path)
+    assert eng.accepted_tokens < eng.drafted_tokens
+    for ra, rb in zip(base, reqs):
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+
+
+def test_preempted_sampled_stream_matches_straight_line():
+    """The existing preemption-replay path under the same position-keyed
+    contract: a scarce arena forces mid-decode evictions, the
+    continuation prefill replays prompt + generated, and the sampled
+    stream continues at the SAME token indices — bit-identical to the
+    unpreempted baseline."""
+    arch, params = setup_arch("qwen2.5-14b")
+    # long budgets + a budget-1 arena: growth exhausts mid-decode and
+    # the engine MUST preempt (test_scheduling's pressure shape)
+    pressure = [(8, 20), (8, 18), (8, 16)]
+    base = _straight_line_sampled(arch, params, spec=pressure, prefix=0)
+    reqs = make_requests(arch, pressure)
+    eng = ContinuousEngine(arch, params, max_batch=4, max_len=MAX_LEN,
+                           cache="paged", block_size=8, prefill_bucket=8,
+                           policy="fp32", sampler=SAMPLER, slots_budget=1,
+                           share_prefix=False)
+    eng.run(reqs)
+    assert eng.preemptions > 0
+    for ra, rb in zip(base, reqs):
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+
+
+# --------------------------------------------------------------------------
+# wrap-time COW: ring wrap must not kill prefix sharing (ROADMAP PR 3 bug)
+# --------------------------------------------------------------------------
+
+def test_wrap_cow_preserves_prefix_sharing_across_waves():
+    """gemma2's reduced sliding window is 16 rows: a 16-token shared
+    prompt exactly fills the window ring, so the FIRST decode token
+    wraps onto the shared prompt blocks. Pre-COW, that write forced the
+    blocks private and unregistered them forever — a second wave could
+    never share or revive them. With wrap-time COW the writer gets a
+    private copy, the originals stay registered, and wave 2 gets
+    shared/retained hits while every stream stays solo-identical."""
+    arch, params = setup_arch("gemma2-2b")
+    assert arch.cfg.sliding_window == 16
+
+    def wave(seed):
+        # 16-token common prefix + short tails; budgets wrap the window
+        return make_requests(arch, [(2, 6), (3, 6)], seed=seed, prefix=16,
+                             prefix_seed=99)
+
+    solos = []
+    solo_eng = ContinuousEngine(arch, params, max_batch=1, max_len=MAX_LEN,
+                                cache="dense", prefill_bucket=8)
+    for seed in (1, 2):
+        s = wave(seed)
+        solo_eng.run(s)
+        solos.extend(s)
+
+    eng = ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                           cache="paged", block_size=8, prefill_bucket=8,
+                           retain_blocks=8)
+    w1 = wave(1)
+    eng.run(w1)
+    assert eng.pool.shared_hits > 0          # wave 1 shared the prefix
+    hits1 = eng.pool.shared_hits + eng.pool.retained_hits
+    w2 = wave(2)
+    eng.run(w2)
+    hits2 = eng.pool.shared_hits + eng.pool.retained_hits
+    assert hits2 > hits1, (
+        "post-wrap wave got no shared/retained prefix blocks: ring wrap "
+        "killed the registry (wrap-COW regression)")
+    for solo, r in zip(solos, w1 + w2):
+        np.testing.assert_array_equal(solo.generated, r.generated)
+    eng.pool.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# constructor validation
+# --------------------------------------------------------------------------
+
+def test_spec_validation_errors():
+    arch, params = setup_arch("qwen2.5-14b")
+    draft = draft_of(arch)
+    with pytest.raises(ValueError, match="spec_k"):
+        spec_engine(arch, params, draft, spec_k=1)
+    with pytest.raises(ValueError, match="paged"):
+        spec_engine(arch, params, draft, cache="dense")
+    with pytest.raises(ValueError, match="chunked"):
+        spec_engine(arch, params, draft, chunk_budget=8)
+    hybrid, hparams = setup_arch("jamba-1.5-large-398b")
+    with pytest.raises(ValueError, match="attention-only"):
+        spec_engine(hybrid, hparams, (hybrid, hparams))
