@@ -1,8 +1,9 @@
 """Serving load generator: paged vs dense pools, continuous vs static,
 lazy vs eager chain growth, chunked prefill under open-loop traffic,
-speculative draft-verify decode on a low-entropy stream.
+speculative draft-verify decode on a low-entropy stream, and
+prefix-affinity routing over a replica fleet.
 
-Five workloads:
+Six workloads:
 
   mixed          (default) heterogeneous prompt lengths and generation
                  budgets with NO common prefix — the traffic shape where
@@ -62,6 +63,22 @@ Five workloads:
                  its own p50. SLOs auto-calibrate from a WARM unchunked
                  closed-loop pass (--itl-slo-mult x its ITL p50;
                  override with --ttft-slo-ms / --itl-slo-ms).
+  multi-tenant-routed
+                 --tenants tenant populations, each with its OWN
+                 --prefix-len system prompt, arrival order shuffled
+                 across tenants, served by --replicas paged engine
+                 replicas behind a ReplicaRouter. Prefix-affinity
+                 routing (sticky content-addressed leading-block key,
+                 serving/router.py) races round-robin over an IDENTICAL
+                 fleet: each replica's arena is deliberately too small
+                 to hold EVERY tenant's prefix blocks plus useful
+                 decode concurrency, and each retained LRU is bounded
+                 to ~tenants/replicas prefix working sets. Affinity
+                 lands each tenant on one replica, so prefixes are
+                 stored once fleet-wide (more admitted concurrency at
+                 fixed arena memory) and each LRU holds a partition of
+                 the tenants instead of thrashing over all of them
+                 (revival hits across the interleaved passes).
 
 Every engine pair runs the byte-identical seeded workload and must emit
 identical tokens per request — scheduling, cache layout, growth mode and
@@ -102,6 +119,11 @@ unchunked ITL violations >= 1, chunked ITL p99 <= --tail-ratio x p50.
 PASS (low-entropy): zero spec-vs-plain mismatches, acceptance >= 0.999,
 plain ITL p50 >= --spec-itl-ratio x spec ITL p50 at every batch size
 1-4, verify/draft `_cache_size() == 1`.
+PASS (multi-tenant-routed): zero routed-vs-round-robin mismatches
+(routing never changes tokens), routed aggregate tokens/s >=
+--routed-ratio (1.2) x the round-robin fleet, routed decode steps <=
+round-robin's, and routed retained_hit_rate STRICTLY above round-robin
+(the LRU-partitioning mechanism, not just the throughput symptom).
 """
 from __future__ import annotations
 
@@ -113,8 +135,8 @@ import jax
 import numpy as np
 
 from repro.configs import reduced_arch
-from repro.serving import (ContinuousEngine, ServeEngine, Sampler,
-                           synthetic_requests)
+from repro.serving import (ContinuousEngine, ReplicaRouter, Request,
+                           ServeEngine, Sampler, synthetic_requests)
 from repro.serving.metrics import aggregate
 
 
@@ -232,7 +254,8 @@ def print_stats(results: dict):
 
 def gate(measured, threshold, op=">="):
     """One machine-readable PASS gate record."""
-    ok = measured >= threshold if op == ">=" else measured <= threshold
+    ok = {">=": measured >= threshold, "<=": measured <= threshold,
+          ">": measured > threshold}[op]
     return {"measured": round(float(measured), 3),
             "threshold": threshold, "op": op, "pass": bool(ok)}
 
@@ -506,11 +529,109 @@ def run_open_loop(arch, params, args, max_len):
     return results, gates
 
 
+def run_multi_tenant_routed(arch, params, args, max_len):
+    """Prefix-affinity vs round-robin routing over IDENTICAL replica
+    fleets (see module docstring, PASS (multi-tenant-routed)).
+
+    The sizing makes the routing decision the only difference that
+    matters: slots_budget < max_batch per replica, so arena blocks —
+    not decode slots — bound concurrency, and whoever dedups prefixes
+    admits more requests per step; retain_blocks holds ~tenants/replicas
+    prefix working sets, so the affinity partition revives across
+    passes while round-robin's all-tenant stream cyclically thrashes
+    its LRUs."""
+    T = args.tenants
+    prefix_blocks = args.prefix_len // args.block_size
+    retain = max(1, T // args.replicas) * prefix_blocks
+
+    tenant_rng = np.random.default_rng(args.seed + 100)
+    prefixes = [tenant_rng.integers(5, arch.cfg.vocab,
+                                    size=args.prefix_len).astype(np.int32)
+                for _ in range(T)]
+
+    def mk_reqs(seed):
+        # waves of all T tenants, tenant order SHUFFLED per wave: a
+        # fixed interleave would stride-align tenants onto round-robin
+        # replicas and hand the baseline affinity for free
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for _ in range(args.requests // T):
+            for t in rng.permutation(T):
+                tail = rng.integers(5, arch.cfg.vocab,
+                                    size=args.prompt_len).astype(np.int32)
+                reqs.append(Request(
+                    prompt=np.concatenate([prefixes[t], tail]),
+                    max_new_tokens=args.new_tokens))
+        return reqs
+
+    routers = {}
+
+    def make_fleet(name, policy):
+        fleet = [
+            ContinuousEngine(
+                arch, params, max_batch=args.max_batch, max_len=max_len,
+                policy=args.precision, prefill_bucket=args.prefill_bucket,
+                cache="paged", block_size=args.block_size,
+                slots_budget=T // args.replicas + 1, growth="eager",
+                retain_blocks=retain, sampler=args.sampler)
+            for _ in range(args.replicas)]
+        router = ReplicaRouter(fleet, policy=policy)
+        routers[name] = router
+
+        def one():
+            reqs = mk_reqs(args.seed)
+            steps0 = sum(e.steps_run for e in fleet)
+            t0 = time.perf_counter()
+            router.run(reqs)
+            dt = time.perf_counter() - t0
+            stats = aggregate([r.trace for r in reqs], dt,
+                              sum(len(r.generated) for r in reqs))
+            stats["decode_steps"] = sum(e.steps_run for e in fleet) - steps0
+            stats["max_concurrent"] = sum(e.max_concurrent for e in fleet)
+            return stats, reqs
+
+        return one
+
+    runners = {"rr": make_fleet("rr", "rr"),
+               "routed": make_fleet("routed", "prefix")}
+    results, rep_outputs = measure_interleaved(runners, args.reps)
+    mismatch = sum(check_tokens(outs, "rr") for outs in rep_outputs)
+    print_stats(results)
+
+    reports = {name: routers[name].report(1.0) for name in routers}
+    for name, rep in reports.items():
+        done = [len(e.scheduler.completed) for e in routers[name].replicas]
+        print(f"{name:>10}: retained hit rate "
+              f"{rep['retained_hit_rate']:.3f} | affinity hits "
+              f"{rep['routed_affinity_hits']} | depth fallbacks "
+              f"{rep['routed_fallback']} | completed per replica {done}")
+
+    gates = {
+        "token_mismatches": gate(mismatch, 0, op="<="),
+        "routed_tokens_ratio": gate(
+            results["routed"]["tokens_per_s"]
+            / max(results["rr"]["tokens_per_s"], 1e-9), args.routed_ratio),
+        # the mechanism behind the wall-clock ratio, gated exactly:
+        # dedup admits more concurrent requests, so the routed fleet
+        # finishes the same workload in fewer decode steps
+        "routed_steps_vs_rr": gate(results["routed"]["decode_steps"],
+                                   results["rr"]["decode_steps"], op="<="),
+        "routed_hit_rate_gain": gate(
+            reports["routed"]["retained_hit_rate"],
+            reports["rr"]["retained_hit_rate"], op=">"),
+    }
+    for name, rep in reports.items():
+        results[f"router_{name}"] = {
+            k: v for k, v in rep.items() if k != "per_replica"}
+    return results, gates
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
                     choices=["mixed", "shared-prefix", "bursty-long",
-                             "open-loop", "low-entropy"],
+                             "open-loop", "low-entropy",
+                             "multi-tenant-routed"],
                     default="mixed")
     ap.add_argument("--arch", default=None,
                     help="default: gemma2-2b (mixed) / qwen2.5-14b "
@@ -587,6 +708,14 @@ def main():
                          "ratio x spec ITL p50 at every batch size 1-4 "
                          "(a full-acceptance round commits spec_k "
                          "tokens per verify step)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="multi-tenant-routed: engine replicas per fleet")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="multi-tenant-routed: distinct system prompts")
+    ap.add_argument("--routed-ratio", type=float, default=1.2,
+                    help="multi-tenant-routed PASS gate: prefix-affinity "
+                         "aggregate tokens/s >= ratio x the round-robin "
+                         "fleet on the same workload")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "bf16_compute", "fp16"])
     ap.add_argument("--sampler", default=None,
@@ -606,6 +735,7 @@ def main():
     bursty = args.workload == "bursty-long"
     open_loop = args.workload == "open-loop"
     low_entropy = args.workload == "low-entropy"
+    routed = args.workload == "multi-tenant-routed"
     arch_name = args.arch or (
         "gemma2-2b" if args.workload in ("mixed", "open-loop")
         else "qwen2.5-14b")
@@ -634,11 +764,21 @@ def main():
         # batch-1 engine decodes every request serially
         args.requests = min(args.requests, 8)
         args.prompt_len, args.new_tokens = 8, 16
+    elif routed:
+        # short tails/budgets keep the per-tenant prefix the dominant
+        # arena cost; max_batch above the arena's admitting capacity so
+        # blocks, not slots, bound concurrency; enough waves that the
+        # retained LRUs see repeated tenant revisits
+        args.requests = min(args.requests, 24)
+        args.max_batch = max(args.max_batch, 8)
+        args.prompt_len, args.new_tokens = 8, 8
     prefix = args.prefix_len if shared else 0
     max_len = prefix + args.prompt_len + args.new_tokens \
         + args.prefill_bucket
     if bursty:
         max_len += args.prefix_len     # wave phase prepends the prefix
+    if routed:
+        max_len += args.prefix_len     # tenant prefix on every prompt
     if open_loop:                      # must hold the long-prompt mode
         max_len = args.long_len + args.new_tokens + args.prefill_bucket
     max_len = -(-max_len // args.block_size) * args.block_size
@@ -663,6 +803,9 @@ def main():
         results, gates = run_open_loop(arch, params, args, max_len)
     elif low_entropy:
         results, gates = run_low_entropy(arch, params, args, max_len)
+    elif routed:
+        results, gates = run_multi_tenant_routed(arch, params, args,
+                                                 max_len)
     else:
         mk = (arch, params, mk_workload(args.seed), args, max_len)
         if shared:

@@ -8,6 +8,8 @@
 #   scripts/run_tests.sh --sched    # scheduler/lazy-growth/preemption suite
 #   scripts/run_tests.sh --chunked  # chunked-prefill admission + open-loop
 #   scripts/run_tests.sh --spec     # speculative decode / rollback / wrap-COW
+#   scripts/run_tests.sh --sharded  # mesh serving differentials on 2
+#                                   # simulated host devices (sets XLA_FLAGS)
 #   scripts/run_tests.sh --docs     # smoke-check docs/README code fences
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
@@ -36,6 +38,12 @@ fi
 if [[ "${1:-}" == "--spec" ]]; then
   shift
   exec python -m pytest -x -q -m "spec" "$@"
+fi
+if [[ "${1:-}" == "--sharded" ]]; then
+  shift
+  # two simulated host CPU devices; must be set before jax initializes
+  export XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}"
+  exec python -m pytest -x -q -m "sharded" "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
   shift

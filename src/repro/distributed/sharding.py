@@ -247,3 +247,15 @@ def constrain(tree: PyTree, mesh: Mesh, spec_tree: PyTree) -> PyTree:
     return jax.tree.map(
         lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
         tree, spec_tree)
+
+
+def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
+    """cache_pspec as a NamedSharding tree — what the serving pools pin
+    their device caches and jitted mutation ops to, so every host-side
+    cache mutation (insert / invalidate / COW copy / rollback) lands its
+    output on the SAME layout the sharded decode step consumes. Without
+    this the single-device mutation jits would silently replicate their
+    outputs and every decode step would re-shard the whole arena."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_pspec(cache, mesh),
+                        is_leaf=lambda x: isinstance(x, P))

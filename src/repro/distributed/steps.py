@@ -218,6 +218,23 @@ def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
     if mesh is None or mesh.devices.size <= 1 or params_like is None:
         return jax.jit(step, donate_argnums=donate)
 
+    pspec, tok_sh, cspec = serve_shardings(mesh, params_like, cache_like)
+    in_sh = (pspec, tok_sh, tok_sh, cspec) + ((tok_sh,) if sampled else ())
+    return jax.jit(
+        step,
+        in_shardings=in_sh,
+        out_shardings=(tok_sh, cspec),
+        donate_argnums=donate,
+    )
+
+
+def serve_shardings(mesh: Mesh, params_like, cache_like):
+    """(params, tokens, cache) NamedSharding trees for the live sharded
+    serve/verify steps: params per the param rules, cache per cache_pspec
+    (paged arenas blocks-over-data, head_dim over model, integer
+    bookkeeping replicated). The token sharding names only the leading
+    batch dim, so one spec covers (B, 1) decode tokens, (B, K) verify
+    tokens, (B,) outputs and (B, ..., 2) sampler keys alike."""
     def shardings(spec_tree):
         return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                             is_leaf=lambda x: isinstance(x, P))
@@ -234,17 +251,12 @@ def build_serve_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
     B = idx.shape[0] if getattr(idx, "ndim", 0) == 1 else None
     tok_sh = NamedSharding(
         mesh, P(baxes) if B is not None and B % bsize == 0 else P())
-    in_sh = (pspec, tok_sh, tok_sh, cspec) + ((tok_sh,) if sampled else ())
-    return jax.jit(
-        step,
-        in_shardings=in_sh,
-        out_shardings=(tok_sh, cspec),
-        donate_argnums=donate,
-    )
+    return pspec, tok_sh, cspec
 
 
 def build_verify_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
-                      sampler=None, donate_cache=True):
+                      sampler=None, params_like=None, cache_like=None,
+                      donate_cache=True):
     """Build the jitted speculative-verify step: K tokens per slot in one
     forward against the pooled/paged cache.
 
@@ -269,6 +281,10 @@ def build_verify_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
     fold(request_key, t) key regardless of which verify round emitted
     it. Compiled once per (B, K, cache shape); block tables / cursors
     are cache VALUES, so accept/reject churn never recompiles.
+
+    With a multi-device mesh plus params_like/cache_like abstract trees
+    the step is pjit'ed with the same shardings as build_serve_step
+    (serve_shardings); otherwise it is a plain jit.
     """
     sampled = sampler is not None and not sampler.greedy
     stable = (sampler is not None and sampler.greedy
@@ -297,9 +313,21 @@ def build_verify_step(decode_fn: Callable, mesh: Optional[Mesh] = None, *,
             nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
             return nxt.astype(jnp.int32), new_cache
 
-    del mesh  # single-program path; the sharded engine lane is dryrun-only
     donate = (3,) if donate_cache else ()
-    return jax.jit(step, donate_argnums=donate)
+    if mesh is None or mesh.devices.size <= 1 or params_like is None:
+        return jax.jit(step, donate_argnums=donate)
+
+    # same mesh path as build_serve_step: the (B, K) verify tokens and
+    # keys shard on their leading batch dim exactly like (B, 1) decode
+    # tokens, so the single-row and K-row steps share one sharding story
+    pspec, tok_sh, cspec = serve_shardings(mesh, params_like, cache_like)
+    in_sh = (pspec, tok_sh, tok_sh, cspec) + ((tok_sh,) if sampled else ())
+    return jax.jit(
+        step,
+        in_shardings=in_sh,
+        out_shardings=(tok_sh, cspec),
+        donate_argnums=donate,
+    )
 
 
 def greedy_next(logits):

@@ -28,9 +28,18 @@ always accepts); the report gains acceptance-rate telemetry. --arrival-rate R re
 seeded open-loop Poisson traffic at R req/s instead of submitting
 everything up front, and reports goodput against the --ttft-slo-ms /
 --itl-slo-ms bounds. --engine static runs the padded lockstep baseline
-instead. --metrics writes one JSONL record per decode step (active
-slots, queue depth, preemptions, step latency) plus a final summary
-record — the serving analogue of train.py's loss curve.
+instead. --mesh DxM (e.g. 2x1, 1x2; a bare N means 1xN tensor
+parallel) runs the continuous engine live-sharded over a local device
+mesh — params per the distributed param rules, KV arenas blocks-over-
+data / head_dim-over-model — with token output identical to the
+unsharded engine (fp32 greedy, or bf16 with the stable-argmax
+sampler). --replicas N serves the stream through N engine replicas
+behind the prefix-affinity router (serving/router.py); --route-policy
+picks prefix (content-addressed sticky routing, the default), depth
+(least outstanding work) or rr (round-robin). --metrics writes one
+JSONL record per decode step (active slots, queue depth, preemptions,
+step latency) plus a final summary record — the serving analogue of
+train.py's loss curve.
 """
 from __future__ import annotations
 
@@ -42,10 +51,70 @@ import jax
 
 from repro.configs import get_arch, reduced_arch
 from repro.metrics import MetricsLogger
-from repro.serving import ContinuousEngine, ServeEngine, synthetic_requests
+from repro.serving import (ContinuousEngine, ReplicaRouter, ServeEngine,
+                           synthetic_requests)
+
+# Flags that configure the continuous engine's PAGED pool (or features
+# built on it): each entry is (flag, fn(args) -> requested?). They must
+# fail fast — uniformly — under --engine static or --cache dense, where
+# the subsystem they configure does not exist and the printed numbers
+# would never have exercised the requested setting.
+PAGED_ONLY_FLAGS = (
+    ("--growth", lambda a: a.growth is not None),
+    ("--slots-budget", lambda a: a.slots_budget != 0),
+    ("--retain-blocks", lambda a: a.retain_blocks is not None),
+    ("--watermark", lambda a: a.watermark != 0),
+    ("--chunk-budget", lambda a: a.chunk_budget is not None),
+    ("--spec-draft", lambda a: a.spec_draft != "none"),
+    ("--spec-k", lambda a: a.spec_k is not None),
+    ("--replicas", lambda a: a.replicas != 1),
+    ("--route-policy", lambda a: a.route_policy is not None),
+    ("--attn-kernel paged", lambda a: a.attn_kernel == "paged"),
+)
+
+# Flags of the continuous engine's scheduler/traffic loop: valid with
+# either cache, invalid under --engine static (no scheduler there).
+CONTINUOUS_ONLY_FLAGS = (
+    ("--sched-policy", lambda a: a.sched_policy != "fifo"),
+    ("--slo-ms", lambda a: a.slo_ms is not None),
+    ("--no-preempt", lambda a: not a.preempt),
+    ("--arrival-rate", lambda a: a.arrival_rate is not None),
+    ("--mesh", lambda a: a.mesh is not None),
+)
 
 
-def main():
+def flag_errors(args) -> list:
+    """Every flag-compatibility error for this parse, uniform wording —
+    one SystemExit lists them all (unit-tested in-process over the full
+    flag matrix in tests/test_metrics_and_launchers.py)."""
+    errs = []
+    paged = args.engine == "continuous" and args.cache == "paged"
+    bad = [f for f, req in PAGED_ONLY_FLAGS if req(args) and not paged]
+    if bad:
+        errs.append(
+            f"{' '.join(bad)}: only apply to the continuous engine's "
+            f"paged pool (--engine continuous --cache paged)")
+    if args.engine != "continuous":
+        bad = [f for f, req in CONTINUOUS_ONLY_FLAGS if req(args)]
+        if bad:
+            errs.append(
+                f"{' '.join(bad)}: only apply to the continuous "
+                f"engine's scheduler (--engine continuous)")
+    return errs
+
+
+def parse_mesh(spec):
+    """'DxM' (data x model) or a bare 'N' (= 1xN tensor parallel) ->
+    local mesh; None stays None (unsharded)."""
+    if spec is None:
+        return None
+    from repro.launch.mesh import make_local_mesh
+    low = str(spec).lower()
+    data, model = low.split("x") if "x" in low else (1, low)
+    return make_local_mesh(data=int(data), model=int(model))
+
+
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -125,9 +194,25 @@ def main():
                          "periods inert and drafts with its first "
                          "period (make_spec_pair; acceptance exactly "
                          "1.0). Continuous engine + paged cache only")
-    ap.add_argument("--spec-k", type=int, default=4,
+    ap.add_argument("--spec-k", type=int, default=None,
                     help="draft tokens proposed and verified per "
-                         "speculative round (>= 2)")
+                         "speculative round (>= 2; default 4)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve live-sharded over a local device mesh: "
+                         "'DxM' = data x model (e.g. 2x1, 1x2), bare N "
+                         "= 1xN tensor parallel. Token-identical to "
+                         "unsharded (fp32 greedy / bf16 stable argmax); "
+                         "continuous engine only")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the prefix-affinity "
+                         "router (serving/router.py); each replica owns "
+                         "max-batch slots and its own paged arena")
+    ap.add_argument("--route-policy", default=None,
+                    choices=["prefix", "depth", "rr"],
+                    help="router policy with --replicas: prefix "
+                         "(content-addressed sticky affinity, default), "
+                         "depth (least outstanding work), rr "
+                         "(round-robin)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="open-loop Poisson arrival rate in requests/s: "
                          "submit on the arrival clock instead of all up "
@@ -149,7 +234,15 @@ def main():
     ap.add_argument("--metrics", default=None,
                     help="JSONL path for per-step latency/throughput")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+
+    errs = flag_errors(args)
+    if errs:
+        raise SystemExit("; ".join(errs))
 
     arch = reduced_arch(args.arch) if args.reduced else get_arch(args.arch)
     if arch.kind != "decoder":
@@ -168,35 +261,52 @@ def main():
     log = MetricsLogger(args.metrics)
 
     spec_kw = {}
+    spec_k = args.spec_k if args.spec_k is not None else 4
     if args.spec_draft == "self":
-        spec_kw = dict(spec_draft=(arch, params), spec_k=args.spec_k)
+        spec_kw = dict(spec_draft=(arch, params), spec_k=spec_k)
     elif args.spec_draft == "truncated":
         from repro.serving import make_spec_pair
         params, draft_arch, draft_params = make_spec_pair(arch, params)
         spec_kw = dict(spec_draft=(draft_arch, draft_params),
-                       spec_k=args.spec_k)
+                       spec_k=spec_k)
 
+    mesh = parse_mesh(args.mesh)
     t0 = time.perf_counter()
     if args.engine == "continuous":
         last = {"t": t0}
 
-        def on_step(rec):
-            now = time.perf_counter()
-            log.log(rec["step"], active=rec["active"], queued=rec["queued"],
-                    preemptions=rec["preemptions"],
-                    step_latency_ms=(now - last["t"]) * 1e3)
-            last["t"] = now
+        def make_on_step(replica):
+            def on_step(rec):
+                now = time.perf_counter()
+                log.log(rec["step"], active=rec["active"],
+                        queued=rec["queued"],
+                        preemptions=rec["preemptions"],
+                        step_latency_ms=(now - last["t"]) * 1e3,
+                        replica=replica)
+                last["t"] = now
+            return on_step
 
-        engine = ContinuousEngine(
-            arch, params, max_batch=args.max_batch, max_len=max_len,
-            policy=args.precision, prefill_bucket=args.prefill_bucket,
-            on_step=on_step, cache=args.cache, block_size=args.block_size,
-            slots_budget=args.slots_budget or None,
-            sampler=args.sampler, attn_kernel=args.attn_kernel,
-            growth=args.growth or "lazy", sched_policy=args.sched_policy,
-            slo_ms=args.slo_ms, preempt=args.preempt,
-            retain_blocks=args.retain_blocks, watermark=args.watermark,
-            chunk_budget=args.chunk_budget, **spec_kw)
+        def make_engine(replica):
+            return ContinuousEngine(
+                arch, params, max_batch=args.max_batch, max_len=max_len,
+                policy=args.precision, prefill_bucket=args.prefill_bucket,
+                on_step=make_on_step(replica), cache=args.cache,
+                block_size=args.block_size,
+                slots_budget=args.slots_budget or None,
+                sampler=args.sampler, attn_kernel=args.attn_kernel,
+                growth=args.growth or "lazy",
+                sched_policy=args.sched_policy,
+                slo_ms=args.slo_ms, preempt=args.preempt,
+                retain_blocks=args.retain_blocks,
+                watermark=args.watermark,
+                chunk_budget=args.chunk_budget, mesh=mesh, **spec_kw)
+
+        if args.replicas > 1:
+            engine = ReplicaRouter(
+                [make_engine(i) for i in range(args.replicas)],
+                policy=args.route_policy or "prefix")
+        else:
+            engine = make_engine(0)
         if args.arrival_rate is not None:
             from repro.serving import (OpenLoopDriver, SLO, poisson_arrivals,
                                        slo_report)
@@ -210,29 +320,11 @@ def main():
         else:
             engine.run(reqs)
             stats = engine.report(time.perf_counter() - t0)
-        attn_kernel = (engine.pool.attn_kernel
+        pools = (engine.replicas[0].pool if args.replicas > 1
+                 else engine.pool)
+        attn_kernel = (pools.attn_kernel
                        if args.cache == "paged" else "xla")
     else:
-        if args.attn_kernel == "paged":
-            raise SystemExit("--attn-kernel paged needs the continuous "
-                             "engine's paged cache (--engine continuous)")
-        # the static baseline has no scheduler/pool: reject explicitly
-        # requested scheduling flags instead of silently ignoring them
-        # (numbers that never exercised the requested settings mislead)
-        ignored = [flag for flag, on in (
-            ("--growth", args.growth is not None),
-            ("--sched-policy", args.sched_policy != "fifo"),
-            ("--slo-ms", args.slo_ms is not None),
-            ("--no-preempt", not args.preempt),
-            ("--retain-blocks", args.retain_blocks is not None),
-            ("--watermark", args.watermark != 0),
-            ("--chunk-budget", args.chunk_budget is not None),
-            ("--spec-draft", args.spec_draft != "none"),
-            ("--arrival-rate", args.arrival_rate is not None)) if on]
-        if ignored:
-            raise SystemExit(
-                f"{' '.join(ignored)} only apply to the continuous "
-                f"engine's scheduler/paged pool (--engine continuous)")
         attn_kernel = "xla"
         engine = ServeEngine(arch, params, max_len=max_len,
                              policy=args.precision, sampler=args.sampler)
@@ -250,6 +342,7 @@ def main():
     stats["cache"] = args.cache if args.engine == "continuous" else "static"
     stats["attn_kernel"] = attn_kernel
     stats["sampler"] = args.sampler
+    stats["mesh"] = args.mesh or "1x1"
     log.log(-1, **{k: v for k, v in stats.items()
                    if isinstance(v, (int, float))})
     log.close()

@@ -26,6 +26,10 @@ See serving/engine.py for the architecture overview. Public surface:
   SLO / OpenLoopDriver / poisson_arrivals / slo_report
                      open-loop traffic: seeded Poisson arrivals with
                      TTFT/ITL SLOs and goodput accounting (traffic.py)
+  ReplicaRouter      prefix-affinity front-end over N engine replicas
+                     (content-addressed sticky routing, least-depth
+                     fallback; router.py) — drives like one engine
+  prefix_route_key   the router's leading-prompt-block content key
 """
 from repro.serving.admission import (AdmissionController, PrefillTask,
                                      chunk_granularity, plan_chunk)
@@ -39,6 +43,8 @@ from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
                                   synthetic_requests, throughput_probe)
 from repro.serving.metrics import (DepthTracker, RequestTrace, aggregate,
                                    hit_rate, percentile)
+from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter,
+                                  prefix_route_key)
 from repro.serving.sampler import Sampler, fold_keys, stable_argmax
 from repro.serving.scheduler import (ArrivalDeadlinePolicy, PolicyContext,
                                      PrefixAffinityPolicy, Scheduler,
@@ -50,12 +56,14 @@ __all__ = [
     "AdmissionController", "ArrivalDeadlinePolicy", "BlockAllocator",
     "BlockTableMap", "CachePool", "ContinuousEngine", "DepthTracker",
     "NoBlocksError", "OpenLoopDriver", "PagedCachePool", "PolicyContext",
-    "PrefillTask", "PrefixAffinityPolicy", "Request", "RequestTrace", "SLO",
+    "PrefillTask", "PrefixAffinityPolicy", "ROUTE_POLICIES", "ReplicaRouter",
+    "Request", "RequestTrace", "SLO",
     "Sampler", "Scheduler", "SchedulerError", "SchedulingPolicy",
     "ServeEngine", "aggregate", "apply_serving_policy", "bimodal_requests",
     "build_first_token_fn", "build_prefill_fn", "chunk_granularity",
     "fold_keys", "hit_rate", "make_spec_pair", "meets_slo", "pad_prompts",
     "percentile",
-    "plan_chunk", "poisson_arrivals", "prompt_granularity", "slo_report",
+    "plan_chunk", "poisson_arrivals", "prefix_route_key",
+    "prompt_granularity", "slo_report",
     "stable_argmax", "synthetic_requests", "throughput_probe",
 ]

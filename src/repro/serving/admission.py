@@ -63,6 +63,10 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.serving.cache_pool import _live_mesh
 
 
 def chunk_granularity(cfg) -> int:
@@ -139,7 +143,7 @@ class AdmissionController:
     """
 
     def __init__(self, arch, params, *, chunk_budget: int,
-                 prefill_len: int):
+                 prefill_len: int, mesh=None):
         self.arch = arch
         self.params = params
         self.granularity = chunk_granularity(arch.cfg)
@@ -150,6 +154,18 @@ class AdmissionController:
                 f"cfg.mamba_chunk tokens; attention archs need >= 2)")
         self.chunk_budget = chunk_budget
         self.prefill_len = prefill_len
+        # Under a mesh the task cache shards like the main pool's dense
+        # layout (batch 1 replicates — size-1 dims never shard — and
+        # head_dim goes over "model", matching the arenas), so chunk
+        # forwards run the same tensor-parallel partitioning as decode
+        # and the finalize insert hands the pool a same-layout cache.
+        self.mesh = _live_mesh(mesh)
+        self._cache_sh = None
+        if self.mesh is not None:
+            like = jax.eval_shape(
+                lambda: arch.init_cache(1, prefill_len, per_slot=True,
+                                        clamp_window=False))
+            self._cache_sh = shd.cache_shardings(like, self.mesh)
         self.task: Optional[PrefillTask] = None
         self._fns: Dict[int, Callable] = {}
         self.chunks_run = 0          # lifetime chunk forwards
@@ -170,15 +186,24 @@ class AdmissionController:
                     params, {"tokens": tokens, "positions": positions},
                     cache)
                 return logits[:, -1:].astype(jnp.float32), new_cache
-            self._fns[size] = jax.jit(chunk, donate_argnums=(3,))
+            if self.mesh is None:
+                self._fns[size] = jax.jit(chunk, donate_argnums=(3,))
+            else:
+                self._fns[size] = jax.jit(
+                    chunk, donate_argnums=(3,),
+                    out_shardings=(NamedSharding(self.mesh, P()),
+                                   self._cache_sh))
         return self._fns[size]
 
     def _fresh_cache(self):
         # clamp_window=False: full-length rows for sliding-window
         # slot-types keep every chunk on the resumable incremental
         # write path (see module docstring).
-        return self.arch.init_cache(1, self.prefill_len, per_slot=True,
-                                    clamp_window=False)
+        cache = self.arch.init_cache(1, self.prefill_len, per_slot=True,
+                                     clamp_window=False)
+        if self.mesh is not None:
+            cache = jax.device_put(cache, self._cache_sh)
+        return cache
 
     def warmup(self):
         """Compile every chunk size against a scratch cache so an

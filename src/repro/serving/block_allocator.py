@@ -197,6 +197,12 @@ class Placement:
     shared: bool       # True: reused an existing prefix block (no write)
     revived: bool = False   # True: the reuse hit the RETAINED list (the
     #                         block survived with zero holders in between)
+    registered: bool = False  # True: THIS insert registered the block's
+    #                           prefix key and counted the prefix_misses
+    #                           increment — rollback's decrement keys off
+    #                           this record, never off registry state
+    #                           (which a same-admission LRU reclaim can
+    #                           have churned since)
 
 
 class BlockTableMap:
@@ -380,7 +386,8 @@ class BlockTableMap:
                         placed.append(Placement(j, b, True))
                 else:
                     b = self._alloc_block()
-                    placed.append(Placement(j, b, False))
+                    placed.append(Placement(j, b, False,
+                                            registered=key is not None))
                     if key is not None:
                         self._registry[key] = b
                         self._block_key[b] = key
@@ -398,7 +405,18 @@ class BlockTableMap:
         must never be parked warm — unregister + free it. Revived
         blocks (content still valid) go back to the retained list they
         came from, with the hit counter corrected; plain shared retains
-        just drop the extra reference."""
+        just drop the extra reference.
+
+        Counter accounting pairs with the placement RECORD, not with
+        registry state at rollback time: prefix_misses decrements only
+        for placements flagged `registered` (the ones whose insert
+        counted the matching increment). An LRU reclaim later in the
+        same admission can unregister blocks between the increment and
+        this rollback, so deriving the decrement from a _block_key
+        lookup could double-count a miss that was already undone —
+        driving the counter negative and retained_hit_rate above 1.0.
+        The non-negative counter invariant is asserted by
+        check_invariants and the hypothesis state machines."""
         for p in placed:
             if p.revived:
                 self.alloc.release(p.block, keep=True)
@@ -407,11 +425,15 @@ class BlockTableMap:
             elif p.shared:
                 self.alloc.release(p.block)
             else:
-                key = self._block_key.pop(p.block, None)
-                if key is not None:
-                    del self._registry[key]
+                if p.registered:
+                    key = self._block_key.pop(p.block, None)
+                    if key is not None:
+                        del self._registry[key]
                     self.prefix_misses -= 1   # never materialized
                 self.alloc.release(p.block)
+        assert self.prefix_misses >= 0 and self.retained_hits >= 0, (
+            "rollback drove a hit/miss counter negative",
+            self.prefix_misses, self.retained_hits)
 
     def rollback_insert(self, slot: int, placed: List[Placement]):
         """Undo a COMPLETED insert whose sibling slot-type failed (the
@@ -534,8 +556,14 @@ class BlockTableMap:
         table reference holds exactly one refcount, multiply-referenced
         blocks are registered shared prefixes, registered blocks are
         live or retained, retained blocks are never table-referenced
-        (so live writes cannot alias them) and respect the LRU bound."""
+        (so live writes cannot alias them) and respect the LRU bound.
+        Hit/miss telemetry counters are never negative — the rollback
+        accounting contract that keeps retained_hit_rate <= 1.0."""
         self.alloc.check_invariants()
+        assert self.prefix_misses >= 0, (
+            "negative prefix_misses (rollback over-decremented)")
+        assert self.retained_hits >= 0, (
+            "negative retained_hits (rollback over-decremented)")
         counts = np.bincount(self.table.ravel(),
                              minlength=self.alloc.n_blocks)
         # every table reference holds exactly one refcount

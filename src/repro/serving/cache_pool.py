@@ -73,10 +73,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.models import decoder as dec_lib
 from repro.serving.block_allocator import BlockTableMap, NoBlocksError
 
 PyTree = Any
+
+
+def _live_mesh(mesh):
+    """Normalize the mesh kwarg: a 1-device mesh is the unsharded path
+    (no out_shardings pinning, no device_put) — pinning to a trivial
+    mesh only adds transfer annotations without changing placement."""
+    return mesh if mesh is not None and mesh.devices.size > 1 else None
+
+
+def _const(fn):
+    """Slot-type dispatcher shim for the unsharded path: every slot-type
+    shares one jit (shapes differ per slot-type, but jax.jit retraces by
+    shape anyway), keeping the `self._op(si)(...)` call style uniform
+    with the mesh path's genuinely per-slot-type pinned jits."""
+    return lambda si: fn
 
 
 def _insert_row(pool: PyTree, req: PyTree, slot) -> PyTree:
@@ -93,19 +109,45 @@ def _insert_row(pool: PyTree, req: PyTree, slot) -> PyTree:
 
 
 class CachePool:
-    """Owns the pooled decode cache and its per-slot insert/evict ops."""
+    """Owns the pooled decode cache and its per-slot insert/evict ops.
 
-    def __init__(self, arch, max_batch: int, max_len: int):
+    mesh: optional device mesh. When set (and larger than one device)
+    the pool's cache lives under distributed.sharding.cache_pspec — the
+    same layout the mesh-built serve step consumes — and every mutation
+    jit pins its output there, so admissions/evictions never bounce the
+    arena through a replicated intermediate.
+    """
+
+    def __init__(self, arch, max_batch: int, max_len: int, *, mesh=None):
         self.arch = arch
         self.max_batch = max_batch
         self.max_len = max_len
+        self.mesh = _live_mesh(mesh)
         self.cache = arch.init_cache(max_batch, max_len, per_slot=True)
         # blank single-request cache used for eviction (pos rows back to -1)
         self._blank = arch.init_cache(1, max_len, per_slot=True)
         # donate the old pool: the row update happens in place instead of
         # double-buffering max_batch * max_len of KV per admission.
-        self._insert = jax.jit(_insert_row, donate_argnums=0)
-        self._rollback = jax.jit(_pos_rollback, donate_argnums=0)
+        if self.mesh is None:
+            self._insert = jax.jit(_insert_row, donate_argnums=0)
+            self._rollback = jax.jit(_pos_rollback, donate_argnums=0)
+        else:
+            self._shardings = shd.cache_shardings(
+                jax.eval_shape(lambda: self.cache), self.mesh)
+            self.cache = jax.device_put(self.cache, self._shardings)
+            self._insert = jax.jit(_insert_row, donate_argnums=0,
+                                   out_shardings=self._shardings)
+            # pos specs are identical across attention slot-types (only
+            # the batch dim shards; cache_len never does), so one pinned
+            # jit serves every slot-type's rollback despite their
+            # differing row counts.
+            pos_sh = next((s["pos"] for s in self._shardings["slots"]
+                           if isinstance(s, dict) and "pos" in s), None)
+            self._rollback = (
+                jax.jit(_pos_rollback, donate_argnums=0)
+                if pos_sh is None else
+                jax.jit(_pos_rollback, donate_argnums=0,
+                        out_shardings=pos_sh))
 
     def insert(self, request_cache: PyTree, slot: int):
         """Admit a prefilled request's cache into `slot`."""
@@ -262,7 +304,7 @@ class PagedCachePool:
                  block_size: int = 16, slots_budget: Optional[int] = None,
                  share_prefix: bool = True, attn_kernel: Optional[str] = None,
                  growth: str = "eager", retain_blocks: int = 0,
-                 watermark: int = 0, row_margin: int = 0):
+                 watermark: int = 0, row_margin: int = 0, mesh=None):
         """Args:
           arch: decoder Arch (paged serving is decoder-only).
           max_batch: number of decode slots (block-table rows).
@@ -295,6 +337,14 @@ class PagedCachePool:
             rings so a speculative K-row verify burst cannot wrap onto
             in-window keys; pass spec_k - 1. 0 (non-speculative) keeps
             the exact PR 4-6 layout.
+          mesh: optional device mesh; the arenas live under
+            distributed.sharding.cache_pspec (blocks over "data",
+            head_dim over "model", integer bookkeeping replicated /
+            data-sharded only) and every mutation jit pins its output
+            there. Mutation jits become PER-SLOT-TYPE under a mesh —
+            each slot-type's arena has its own n_blocks, so the blocks
+            dim's "data" divisibility (hence its spec) can differ — and
+            are accessed as `self._insert_arena(si)(...)` etc.
         """
         if arch.kind != "decoder":
             raise NotImplementedError("paged serving is decoder-only")
@@ -334,15 +384,40 @@ class PagedCachePool:
                                      block_size=block_size,
                                      n_blocks=n_blocks,
                                      row_margin=row_margin)
-        full.pop("tables")          # host-owned: see device_tables()
+        tables = full.pop("tables")  # host-owned: see device_tables()
+        self.mesh = _live_mesh(mesh)
+        if self.mesh is None:
+            self._shardings = self._table_shardings = None
+        else:
+            sh = shd.cache_shardings(
+                jax.eval_shape(lambda: {**full, "tables": tables}),
+                self.mesh)
+            self._table_shardings = sh.pop("tables")
+            self._shardings = sh
+            full = jax.device_put(full, self._shardings)
         self.cache = full
         self._mamba_slots = tuple(si for si, e in enumerate(layout)
                                   if e is None)
-        self._insert_arena = jax.jit(_arena_insert, donate_argnums=0)
-        self._insert_state = jax.jit(_state_insert, donate_argnums=0)
-        self._invalidate = jax.jit(_pos_invalidate, donate_argnums=0)
-        self._copy_blocks = jax.jit(_cow_copy, donate_argnums=0)
-        self._rollback = jax.jit(_pos_rollback, donate_argnums=0)
+        if self.mesh is None:
+            self._insert_arena = _const(jax.jit(_arena_insert,
+                                                donate_argnums=0))
+            self._invalidate = _const(jax.jit(_pos_invalidate,
+                                              donate_argnums=0))
+            self._copy_blocks = _const(jax.jit(_cow_copy, donate_argnums=0))
+            self._rollback = _const(jax.jit(_pos_rollback, donate_argnums=0))
+            self._insert_state = jax.jit(_state_insert, donate_argnums=0)
+        else:
+            arena_sh = lambda si: self._shardings["slots"][si]
+            pos_sh = lambda si: self._shardings["slots"][si]["pos"]
+            self._insert_arena = self._per_si(_arena_insert, arena_sh)
+            self._invalidate = self._per_si(_pos_invalidate, pos_sh)
+            self._copy_blocks = self._per_si(_cow_copy, arena_sh)
+            self._rollback = self._per_si(_pos_rollback, pos_sh)
+            state_sh = {"slots": {si: self._shardings["slots"][si]
+                                  for si in self._mamba_slots},
+                        "index": self._shardings["index"]}
+            self._insert_state = jax.jit(_state_insert, donate_argnums=0,
+                                         out_shardings=state_sh)
         self._pending_grown = {si: [] for si in self.maps}
         # blank batch-1 state used on eviction (hygiene + lengths() diag)
         blank = arch.init_cache(1, max_len, per_slot=True)
@@ -351,6 +426,20 @@ class PagedCachePool:
             "index": blank["index"]}
         self.shared_hits = 0    # prefix blocks reused instead of copied
         self._dev_tables = None  # device mirror, valid between mutations
+
+    def _per_si(self, fn, sharding_of):
+        """Memoized per-slot-type jit with this pool's out_shardings —
+        slot-types differ in arena n_blocks, so their blocks-dim "data"
+        divisibility (hence the pinned spec) can differ."""
+        jits = {}
+
+        def get(si):
+            if si not in jits:
+                jits[si] = jax.jit(fn, donate_argnums=0,
+                                   out_shardings=sharding_of(si))
+            return jits[si]
+
+        return get
 
     # ---------------- layout helpers ----------------
 
@@ -362,9 +451,16 @@ class PagedCachePool:
         pass-through outputs via put_device_tables, so steady-state
         decode moves zero table bytes host->device."""
         if self._dev_tables is None:
-            self._dev_tables = tuple(
-                jnp.asarray(self.maps[si].table) if si in self.maps else None
-                for si in range(len(self.arch.cfg.superblock)))
+            host = tuple(self.maps[si].table if si in self.maps else None
+                         for si in range(len(self.arch.cfg.superblock)))
+            if self.mesh is None:
+                self._dev_tables = jax.tree.map(jnp.asarray, host)
+            else:
+                # pin tables to the step's cache_pspec layout (slot rows
+                # over "data") so the upload lands pre-sharded instead of
+                # being replicated then resharded inside the step.
+                self._dev_tables = jax.device_put(host,
+                                                  self._table_shardings)
         return self._dev_tables
 
     def put_device_tables(self, tables):
@@ -496,7 +592,7 @@ class PagedCachePool:
             for p in placed[si]:
                 if not p.shared:
                     dst[p.chain_pos] = p.block
-            slots[si] = self._insert_arena(
+            slots[si] = self._insert_arena(si)(
                 slots[si], request_cache["slots"][si],
                 jnp.asarray(src), jnp.asarray(dst), jnp.asarray(backed))
         self.cache = {"slots": tuple(slots), "index": self.cache["index"]}
@@ -579,7 +675,7 @@ class PagedCachePool:
                 dv = np.zeros(n, np.int32)
                 sv[:len(srcs)] = srcs
                 dv[:len(dsts)] = dsts
-                slots[si] = {**slots[si], **self._copy_blocks(
+                slots[si] = {**slots[si], **self._copy_blocks(si)(
                     {k: slots[si][k] for k in ("k", "v", "pos")},
                     jnp.asarray(sv), jnp.asarray(dv))}
             grown = self._pending_grown[si]
@@ -588,8 +684,8 @@ class PagedCachePool:
                 vec = np.zeros(n, np.int32)
                 vec[:len(grown)] = grown
                 slots[si] = {**slots[si],
-                             "pos": self._invalidate(slots[si]["pos"],
-                                                     jnp.asarray(vec))}
+                             "pos": self._invalidate(si)(slots[si]["pos"],
+                                                         jnp.asarray(vec))}
                 self._pending_grown[si] = []
         self.cache = {"slots": tuple(slots), "index": self.cache["index"]}
 
@@ -627,7 +723,7 @@ class PagedCachePool:
                     offs[n] = rr % m.block_size
                     vals[n] = -1
                     n += 1
-            slots[si] = {**slots[si], "pos": self._rollback(
+            slots[si] = {**slots[si], "pos": self._rollback(si)(
                 slots[si]["pos"], jnp.asarray(blks), jnp.asarray(offs),
                 jnp.asarray(vals))}
         self.cache = {"slots": tuple(slots),

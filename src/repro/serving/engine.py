@@ -99,11 +99,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.distributed.steps import (build_serve_step, build_verify_step,
                                      greedy_next)
 from repro.serving.admission import AdmissionController, chunk_granularity
 from repro.serving.block_allocator import NoBlocksError
-from repro.serving.cache_pool import CachePool, PagedCachePool
+from repro.serving.cache_pool import CachePool, PagedCachePool, _live_mesh
 from repro.serving.metrics import DepthTracker, RequestTrace, aggregate
 from repro.serving.sampler import Sampler, fold_keys
 from repro.serving.scheduler import (PolicyContext, Scheduler,
@@ -426,6 +427,14 @@ class ContinuousEngine:
             self.arch = dataclasses.replace(
                 self.arch, cfg=dataclasses.replace(
                     self.arch.cfg, attn_kernel=attn_kernel))
+        # Live mesh: params shard per the distributed param rules, the
+        # pool (and every jitted step below) per cache_pspec. Prefill and
+        # chunk forwards need no explicit specs — sharded params
+        # propagate SPMD partitioning through their plain jits.
+        self.mesh = _live_mesh(mesh)
+        if self.mesh is not None:
+            self.params = jax.device_put(
+                self.params, shd.params_sharding(self.params, self.mesh))
         self.max_batch = max_batch
         self.max_len = max_len
         self.paged = cache == "paged"
@@ -465,37 +474,62 @@ class ContinuousEngine:
                 slots_budget=slots_budget, share_prefix=share_prefix,
                 attn_kernel=attn_kernel, growth=growth,
                 retain_blocks=retain_blocks, watermark=watermark,
-                row_margin=self.spec_k - 1)
+                row_margin=self.spec_k - 1, mesh=self.mesh)
             # slack rows so the padded prompt never reaches the request
             # cache's last row, which stays pos=-1 (the insert's invalid
             # filler — see PagedCachePool._src_rows)
             prefill_len = max_len + max(block_size, self.prefill_bucket)
         else:
-            self.pool = CachePool(self.arch, max_batch, max_len)
+            self.pool = CachePool(self.arch, max_batch, max_len,
+                                  mesh=self.mesh)
             prefill_len = max_len
         self.scheduler = Scheduler(max_batch)
         slo_s = slo_ms / 1e3 if slo_ms is not None else None
         self.sched_policy = SchedulingPolicy.parse(sched_policy, slo_s=slo_s)
         self.preempt_enabled = preempt
         self.on_step = on_step          # callback(dict) per decode step
-        self._step = build_serve_step(self.arch.decode_step, mesh,
-                                      sampler=self.sampler)
+        params_like = cache_like = None
+        if self.mesh is not None:
+            step_cache = ({**self.pool.cache,
+                           "tables": self.pool.device_tables()}
+                          if self.paged else self.pool.cache)
+            params_like = jax.eval_shape(lambda: self.params)
+            cache_like = jax.eval_shape(lambda: step_cache)
+        self._step = build_serve_step(self.arch.decode_step, self.mesh,
+                                      sampler=self.sampler,
+                                      params_like=params_like,
+                                      cache_like=cache_like)
         self._prefill = build_prefill_fn(self.arch, prefill_len)
         self._first, self._wants_keys = build_first_token_fn(self.sampler)
         self._admission = None
         if chunk_budget is not None:
             self._admission = AdmissionController(
                 self.arch, self.params, chunk_budget=chunk_budget,
-                prefill_len=prefill_len)
+                prefill_len=prefill_len, mesh=self.mesh)
         if self.spec:
             self.draft_arch, self.draft_params = apply_serving_policy(
                 draft_arch, draft_params, policy)
-            self.draft_pool = CachePool(self.draft_arch, max_batch, max_len)
+            if self.mesh is not None:
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    shd.params_sharding(self.draft_params, self.mesh))
+            self.draft_pool = CachePool(self.draft_arch, max_batch, max_len,
+                                        mesh=self.mesh)
             self._draft_prefill = build_prefill_fn(self.draft_arch, max_len)
+            draft_likes = {}
+            if self.mesh is not None:
+                draft_likes = dict(
+                    params_like=jax.eval_shape(lambda: self.draft_params),
+                    cache_like=jax.eval_shape(
+                        lambda: self.draft_pool.cache))
             self._draft_step = build_serve_step(
-                self.draft_arch.decode_step, mesh, sampler=self.sampler)
-            self._verify = build_verify_step(self.arch.decode_step, mesh,
-                                             sampler=self.sampler)
+                self.draft_arch.decode_step, self.mesh,
+                sampler=self.sampler, **draft_likes)
+            self._verify = build_verify_step(self.arch.decode_step,
+                                             self.mesh,
+                                             sampler=self.sampler,
+                                             params_like=params_like,
+                                             cache_like=cache_like)
             # host mirror of the draft pool's write cursors (PADDED
             # storage rows, unlike _positions' local timeline: the dense
             # pool counts left-pad rows)
@@ -1122,6 +1156,8 @@ class ContinuousEngine:
         stats["max_concurrent"] = self.max_concurrent
         stats["preemptions"] = self.preemptions
         stats["sched_policy"] = self.sched_policy.name
+        stats["mesh_devices"] = (self.mesh.devices.size
+                                 if self.mesh is not None else 1)
         stats.update(self._depth.stats())
         if self.paged:
             stats["growth"] = self.pool.growth
@@ -1154,6 +1190,10 @@ class ServeEngine:
 
     def __init__(self, arch, params, *, max_len: int = 512, policy=None,
                  mesh=None, sampler=None):
+        # mesh is accepted for signature parity with ContinuousEngine but
+        # stays inert (plain jit): the static baseline is the SINGLE-
+        # device differential reference the sharded engine is pinned
+        # against, so it deliberately never shards.
         if arch.kind != "decoder":
             raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
         self.arch, self.params = apply_serving_policy(arch, params, policy)

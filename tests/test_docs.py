@@ -130,6 +130,34 @@ def test_serving_doc_covers_speculative_decoding():
         assert flag in readme, f"README flag table lost {flag}"
 
 
+def test_serving_doc_covers_sharded_router():
+    """The live-sharded engine + multi-replica router section must keep
+    its anchors: the exactness envelope (data mesh any policy; model
+    mesh fp32 cross-layout, bf16 same-layout with stable argmax), the
+    router contract with runnable fences, the `--mesh` / `--replicas` /
+    `--route-policy` flag rows in both tables, and the architecture.md
+    router diagram."""
+    serving = (ROOT / "docs" / "serving.md").read_text()
+    for anchor in ("## Sharded serving and the replica router",
+                   "Exactness envelope",
+                   "The replica router"):
+        assert anchor in serving, f"serving.md lost its '{anchor}' anchor"
+    sect = serving.split("## Sharded serving and the replica router", 1)[1]
+    sect = sect.split("## Flag map", 1)[0]
+    path = ROOT / "docs" / "serving.md"
+    assert any(code in sect for _, code in _fences(path, "python")), (
+        "sharded/router section lost its python example")
+    assert any(code in sect for _, code in _fences(path, "bash")), (
+        "sharded/router section lost its bash example")
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--mesh", "--replicas", "--route-policy"):
+        assert flag in serving, f"serving.md flag map lost {flag}"
+        assert flag in readme, f"README flag table lost {flag}"
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "## Multi-replica routing" in arch, (
+        "architecture.md lost the multi-replica router diagram section")
+
+
 @pytest.mark.parametrize("path,line,code", _cases("python"))
 def test_python_fences_parse(path, line, code):
     try:

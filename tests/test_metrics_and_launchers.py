@@ -5,6 +5,7 @@ import subprocess
 import sys
 
 import numpy as np
+import pytest
 
 from repro.metrics import MetricsLogger, read_metrics
 
@@ -45,3 +46,193 @@ def test_serve_cli_smoke():
                   "--batch", "2", "--prompt-len", "8", "--new-tokens", "3"])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "tokens_per_s" in r.stdout
+
+
+def test_serve_cli_routed_smoke(tmp_path):
+    metrics = str(tmp_path / "serve.jsonl")
+    r = _run_cli(["repro.launch.serve", "--arch", "qwen2.5-14b",
+                  "--batch", "2", "--prompt-len", "8", "--new-tokens", "3",
+                  "--requests", "6", "--block-size", "8",
+                  "--shared-prefix", "8", "--replicas", "2",
+                  "--route-policy", "prefix", "--metrics", metrics])
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["replicas"] == 2 and out["route_policy"] == "prefix"
+    assert out["routed_submits"] == 6
+    assert out["completed"] == 6
+    # every request shares ONE system prompt, so affinity pins them all
+    # to a single replica: 1 binding miss + 5 sticky hits ...
+    assert out["routed_affinity_hits"] == 5
+    # ... and the per-step JSONL records (which carry the emitting
+    # replica's index) all come from that one home replica
+    recs = [rec for rec in read_metrics(metrics) if rec["step"] >= 0]
+    assert recs and len({rec["replica"] for rec in recs}) == 1
+
+
+# ---------------------------------------------------------------------------
+# serve.py flag-compatibility matrix (in-process: build_parser + flag_errors)
+# ---------------------------------------------------------------------------
+
+from repro.launch.serve import (CONTINUOUS_ONLY_FLAGS, PAGED_ONLY_FLAGS,
+                                build_parser, flag_errors, parse_mesh)
+
+# one argv fragment per gated flag, keyed by the matrix's display name
+_FLAG_ARGV = {
+    "--growth": ["--growth", "eager"],
+    "--slots-budget": ["--slots-budget", "2"],
+    "--retain-blocks": ["--retain-blocks", "4"],
+    "--watermark": ["--watermark", "1"],
+    "--chunk-budget": ["--chunk-budget", "8"],
+    "--spec-draft": ["--spec-draft", "self"],
+    "--spec-k": ["--spec-k", "4"],
+    "--replicas": ["--replicas", "2"],
+    "--route-policy": ["--route-policy", "rr"],
+    "--attn-kernel paged": ["--attn-kernel", "paged"],
+    "--sched-policy": ["--sched-policy", "arrival-deadline"],
+    "--slo-ms": ["--slo-ms", "100"],
+    "--no-preempt": ["--no-preempt"],
+    "--arrival-rate": ["--arrival-rate", "5"],
+    "--mesh": ["--mesh", "1x1"],
+}
+
+
+def _errs(argv):
+    return flag_errors(build_parser().parse_args(argv))
+
+
+def test_flag_matrix_covers_every_gated_flag():
+    # a gated flag without an argv fragment here is an untested gate
+    gated = {f for f, _ in PAGED_ONLY_FLAGS + CONTINUOUS_ONLY_FLAGS}
+    assert gated == set(_FLAG_ARGV)
+
+
+@pytest.mark.parametrize("flag", [f for f, _ in PAGED_ONLY_FLAGS])
+@pytest.mark.parametrize("base", [["--engine", "static"],
+                                  ["--cache", "dense"]],
+                         ids=["static", "dense"])
+def test_paged_only_flags_fail_fast_uniformly(flag, base):
+    errs = _errs(base + _FLAG_ARGV[flag])
+    assert any(flag in e for e in errs), (flag, base, errs)
+    assert any("--engine continuous --cache paged" in e for e in errs)
+    # the same flag on the paged continuous engine parses clean
+    assert _errs(_FLAG_ARGV[flag]) == []
+
+
+@pytest.mark.parametrize("flag", [f for f, _ in CONTINUOUS_ONLY_FLAGS])
+def test_continuous_only_flags_fail_fast_on_static(flag):
+    errs = _errs(["--engine", "static"] + _FLAG_ARGV[flag])
+    assert any(flag in e for e in errs), (flag, errs)
+    assert any("--engine continuous" in e for e in errs)
+    assert _errs(_FLAG_ARGV[flag]) == []
+    # scheduler flags are cache-agnostic: fine on the dense pool
+    assert _errs(["--cache", "dense"] + _FLAG_ARGV[flag]) == []
+
+
+def test_flag_errors_lists_every_offender_at_once():
+    errs = _errs(["--engine", "static", "--replicas", "2",
+                  "--chunk-budget", "8", "--mesh", "1x1"])
+    joined = "; ".join(errs)
+    for flag in ("--replicas", "--chunk-budget", "--mesh"):
+        assert flag in joined
+    assert len(errs) == 2    # one paged-pool line + one scheduler line
+
+
+def test_defaults_parse_clean():
+    assert _errs([]) == []
+    assert _errs(["--engine", "static"]) == []
+    assert _errs(["--cache", "dense"]) == []
+
+
+def test_parse_mesh_specs():
+    assert parse_mesh(None) is None
+    mesh = parse_mesh("1x1")
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (1, 1)
+    bare = parse_mesh("1")          # bare N means 1xN tensor parallel
+    assert bare.devices.shape == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# ContinuousEngine.report() / per-step JSONL schema
+# ---------------------------------------------------------------------------
+
+# every key report() must emit, with its permitted types; paged/chunked/
+# spec engines extend the base set and must never drop a base key
+_REPORT_BASE = {
+    "requests": int, "tokens": int, "wall_s": float, "tokens_per_s": float,
+    "ttft_p50_ms": float, "ttft_p99_ms": float,
+    "itl_p50_ms": float, "itl_p99_ms": float,
+    "preemptions": int, "slo_evictions": int, "slot_utilization": float,
+    "decode_steps": int, "max_concurrent": int, "sched_policy": str,
+    "mesh_devices": int, "queue_depth_max": int, "queue_depth_mean": float,
+    "queue_depth_p50": float,
+}
+_REPORT_PAGED = {
+    "growth": str, "shared_block_hits": int, "retained_block_hits": int,
+    "prefix_misses": int, "retained_hit_rate": float,
+}
+_REPORT_CHUNKED = {"chunk_budget": int, "chunk_steps": int,
+                   "chunk_tokens": int}
+_REPORT_SPEC = {"spec_k": int, "spec_rounds": int, "drafted_tokens": int,
+                "accepted_tokens": int, "acceptance_rate": float}
+
+
+def _check_schema(rep, schema):
+    for key, typ in schema.items():
+        assert key in rep, f"missing {key}"
+        val = rep[key]
+        if typ in (int, float):
+            # bool is an int subclass; a bool-typed count is a bug
+            assert isinstance(val, typ) and not isinstance(val, bool), \
+                f"{key}: {val!r} is not {typ.__name__}"
+            assert np.isfinite(val), f"{key} not finite: {val!r}"
+        else:
+            assert isinstance(val, typ), f"{key}: {val!r}"
+
+
+def test_engine_report_schema(tmp_path):
+    from conftest import make_serving_requests, setup_serving_arch
+    from repro.serving import ContinuousEngine, make_spec_pair
+
+    arch, params = setup_serving_arch("qwen2.5-14b")
+    metrics = str(tmp_path / "steps.jsonl")
+    with MetricsLogger(metrics) as log:
+        def on_step(rec):
+            log.log(rec["step"], active=rec["active"],
+                    queued=rec["queued"], preemptions=rec["preemptions"],
+                    replica=0)
+
+        eng = ContinuousEngine(arch, params, max_batch=2, max_len=48,
+                               cache="paged", block_size=8,
+                               on_step=on_step)
+        eng.run(make_serving_requests(arch, [8, 8, 8], seed=5,
+                                      max_new_tokens=4))
+        rep = eng.report(1.0)
+    _check_schema(rep, _REPORT_BASE)
+    _check_schema(rep, _REPORT_PAGED)
+    assert rep["mesh_devices"] == 1
+
+    # every per-step JSONL record carries the full step schema
+    recs = [r for r in read_metrics(metrics) if r["step"] >= 0]
+    assert len(recs) == rep["decode_steps"]
+    for r in recs:
+        for key in ("step", "active", "queued", "preemptions", "replica"):
+            assert key in r and np.isfinite(r[key])
+
+    # chunked + speculative extensions, base keys intact
+    chunk = ContinuousEngine(arch, params, max_batch=2, max_len=48,
+                             cache="paged", block_size=8, chunk_budget=8)
+    chunk.run(make_serving_requests(arch, [8, 8], seed=6,
+                                    max_new_tokens=4))
+    crep = chunk.report(1.0)
+    _check_schema(crep, {**_REPORT_BASE, **_REPORT_PAGED,
+                         **_REPORT_CHUNKED})
+
+    tparams, darch, dparams = make_spec_pair(arch, params)
+    spec = ContinuousEngine(arch, tparams, max_batch=2, max_len=48,
+                            cache="paged", block_size=8,
+                            spec_draft=(darch, dparams), spec_k=3)
+    spec.run(make_serving_requests(arch, [8, 8], seed=7,
+                                   max_new_tokens=6))
+    srep = spec.report(1.0)
+    _check_schema(srep, {**_REPORT_BASE, **_REPORT_PAGED, **_REPORT_SPEC})

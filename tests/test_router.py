@@ -1,0 +1,218 @@
+"""ReplicaRouter tests: policy decisions, sticky affinity bookkeeping,
+token identity across fleet layouts, and the fleet report schema.
+
+The differential claim mirrors the engine suite's: ROUTING NEVER
+CHANGES TOKENS. A request's output depends only on (params, prompt,
+budget, sampler) — never on which replica serves it or who its slot
+neighbours are — so one engine, a 2-replica prefix-affinity fleet and
+a 2-replica round-robin fleet must all emit identical streams.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_serving_requests as make_requests
+from conftest import setup_serving_arch as setup_arch
+from repro.serving import (ContinuousEngine, ROUTE_POLICIES, ReplicaRouter,
+                           Request, prefix_route_key)
+
+pytestmark = pytest.mark.serving
+
+ARCH = "qwen2.5-14b"
+
+
+def _prompt(seed, n, vocab=256):
+    return np.random.default_rng(seed).integers(
+        5, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# prefix_route_key: the content-addressed affinity key
+# ---------------------------------------------------------------------------
+
+def test_route_key_sub_block_prompts_have_no_key():
+    assert prefix_route_key(_prompt(0, 7), 8) is None
+    assert prefix_route_key(_prompt(0, 8), 8) is not None
+
+
+def test_route_key_depends_only_on_leading_block():
+    p = _prompt(1, 24)
+    q = np.concatenate([p[:8], _prompt(2, 40)])   # same leading block
+    r = p.copy()
+    r[3] += 1                                     # perturb inside block 0
+    assert prefix_route_key(p, 8) == prefix_route_key(q, 8)
+    assert prefix_route_key(p, 8) != prefix_route_key(r, 8)
+    # block_size is part of the key: same tokens, different granularity
+    assert prefix_route_key(p, 8) != prefix_route_key(p, 16)
+
+
+# ---------------------------------------------------------------------------
+# routing decisions on stub replicas (no jax work)
+# ---------------------------------------------------------------------------
+
+class _StubSched:
+    def __init__(self):
+        self.queued, self.active, self.completed = 0, {}, []
+
+    @property
+    def has_work(self):
+        return bool(self.queued or self.active)
+
+
+class _StubReplica:
+    def __init__(self):
+        self.scheduler = _StubSched()
+        self.submitted = []
+
+    def submit(self, req):
+        self.submitted.append(req)
+        self.scheduler.queued += 1
+
+
+def _stub_router(n=3, **kw):
+    return ReplicaRouter([_StubReplica() for _ in range(n)],
+                         block_size=8, **kw)
+
+
+def test_rr_policy_cycles():
+    rt = _stub_router(policy="rr")
+    reqs = [Request(prompt=_prompt(i, 16)) for i in range(7)]
+    assert [rt.route(r) for r in reqs] == [0, 1, 2, 0, 1, 2, 0]
+
+
+def test_depth_policy_picks_least_outstanding():
+    rt = _stub_router(policy="depth")
+    rt.replicas[0].scheduler.queued = 5
+    rt.replicas[1].scheduler.queued = 1
+    rt.replicas[2].scheduler.queued = 3
+    assert rt.route(Request(prompt=_prompt(0, 16))) == 1
+    rt.replicas[1].scheduler.active = {0: None, 1: None, 2: None, 3: None}
+    assert rt.route(Request(prompt=_prompt(1, 16))) == 2
+
+
+def test_prefix_policy_sticky_under_depth_changes():
+    rt = _stub_router(policy="prefix")
+    shared = _prompt(7, 8)
+    first = Request(prompt=np.concatenate([shared, _prompt(1, 8)]))
+    home = rt.route(first)
+    # pile work onto the home replica: affinity must still win
+    rt.replicas[home].scheduler.queued = 100
+    later = Request(prompt=np.concatenate([shared, _prompt(2, 8)]))
+    assert rt.route(later) == home
+    assert rt.routed_affinity_hits == 1
+
+
+def test_prefix_policy_sub_block_falls_back_to_depth():
+    rt = _stub_router(policy="prefix")
+    rt.replicas[0].scheduler.queued = 9
+    rt.replicas[2].scheduler.queued = 9
+    assert rt.route(Request(prompt=_prompt(0, 4))) == 1   # < one block
+    assert rt.routed_fallback == 1
+    assert rt.routed_affinity_hits == 0
+
+
+def test_prefix_policy_distinct_prefixes_balance_by_depth():
+    rt = _stub_router(policy="prefix")
+    homes = []
+    for i in range(4):
+        req = Request(prompt=_prompt(100 + i, 16))
+        home = rt.route(req)
+        homes.append(home)
+        rt.replicas[home].scheduler.queued += 10   # make it look busy
+    # distinct keys spread out instead of stacking on one replica
+    assert len(set(homes)) == 3
+
+
+def test_affinity_map_is_bounded_lru():
+    rt = _stub_router(policy="prefix", max_keys=2)
+    keys = [_prompt(200 + i, 8) for i in range(3)]
+    for p in keys:
+        rt.route(Request(prompt=p))
+    assert len(rt._affinity) == 2   # oldest binding evicted
+    # the evicted key re-binds (a warm start, not an error)
+    rt.route(Request(prompt=keys[0]))
+    assert len(rt._affinity) == 2
+
+
+def test_submit_lands_on_routed_replica_and_counts():
+    rt = _stub_router(policy="rr")
+    reqs = [Request(prompt=_prompt(i, 16)) for i in range(4)]
+    for r in reqs:
+        rt.submit(r)
+    assert rt.routed_submits == 4
+    assert [len(e.submitted) for e in rt.replicas] == [2, 1, 1]
+
+
+def test_router_validation():
+    with pytest.raises(ValueError, match="at least one replica"):
+        ReplicaRouter([])
+    with pytest.raises(ValueError, match="route policy"):
+        _stub_router(policy="best-effort")
+    with pytest.raises(ValueError, match="paged replicas"):
+        ReplicaRouter([_StubReplica()], policy="prefix")  # no block_size
+    assert set(ROUTE_POLICIES) == {"prefix", "depth", "rr"}
+
+
+# ---------------------------------------------------------------------------
+# live fleets: identity + schema
+# ---------------------------------------------------------------------------
+
+def _mk_engine(arch, params, **kw):
+    return ContinuousEngine(arch, params, max_batch=2, max_len=48,
+                            cache="paged", block_size=8, **kw)
+
+
+def _mk_reqs(arch):
+    # two tenant prefixes (>= one block each) + one sub-block prompt
+    a = make_requests(arch, [8, 8], seed=3, prefix=16, max_new_tokens=5)
+    b = make_requests(arch, [8, 8], seed=4, prefix=16, prefix_seed=11,
+                      max_new_tokens=5)
+    tiny = Request(prompt=_prompt(9, 6), max_new_tokens=5)
+    reqs = [a[0], b[0], a[1], b[1], tiny]
+    return [Request(prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens) for r in reqs]
+
+
+@pytest.mark.parametrize("policy", ROUTE_POLICIES)
+def test_routed_tokens_match_single_engine(policy):
+    arch, params = setup_arch(ARCH)
+    solo = _mk_engine(arch, params)
+    base = _mk_reqs(arch)
+    solo.run(base)
+
+    fleet = ReplicaRouter([_mk_engine(arch, params) for _ in range(2)],
+                          policy=policy)
+    reqs = _mk_reqs(arch)
+    done = fleet.run(reqs)
+    assert len(done) == len(base)
+    for x, y in zip(base, reqs):
+        assert np.array_equal(x.generated, y.generated)
+    assert not fleet.scheduler.has_work
+    assert fleet.routed_submits == len(base)
+
+
+def test_router_report_schema():
+    arch, params = setup_arch(ARCH)
+    fleet = ReplicaRouter([_mk_engine(arch, params) for _ in range(2)],
+                          policy="prefix")
+    fleet.run(_mk_reqs(arch))
+    rep = fleet.report(1.0)
+    assert rep["replicas"] == 2
+    assert rep["route_policy"] == "prefix"
+    assert rep["completed"] == 5
+    for key in ("routed_submits", "routed_affinity_hits", "routed_fallback"):
+        assert isinstance(rep[key], int) and rep[key] >= 0
+    # the sub-block request fell back; the repeat-prefix requests hit
+    assert rep["routed_fallback"] >= 1
+    assert rep["routed_affinity_hits"] >= 2
+    for key in ("tokens_per_s", "retained_hit_rate"):
+        assert isinstance(rep[key], float) and np.isfinite(rep[key])
+    assert len(rep["per_replica"]) == 2
+    for idx, sub in enumerate(rep["per_replica"]):
+        assert sub["replica"] == idx
+        assert np.isfinite(sub["tokens_per_s"])
+
+
+def test_router_block_size_defaults_from_paged_replica():
+    arch, params = setup_arch(ARCH)
+    fleet = ReplicaRouter([_mk_engine(arch, params)], policy="prefix")
+    assert fleet.block_size == 8

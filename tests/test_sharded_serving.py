@@ -1,0 +1,217 @@
+"""Live sharded-engine differentials: a ContinuousEngine built with
+mesh= must emit the SAME tokens as the unsharded engine — paged pool,
+lazy growth, chunked prefill and speculative decode included — because
+sharding only re-places the same computation (params per the
+distributed param rules, KV arenas blocks-over-data / head_dim-over-
+model, integer bookkeeping replicated).
+
+Exactness envelope (the same one tests/test_distributed_steps.py pins
+for the raw step fns):
+  * a pure data mesh (Dx1) distributes bookkeeping only — bit-exact
+    under ANY precision policy;
+  * a model mesh (1xM) splits contractions. CROSS-layout identity
+    (sharded vs unsharded) holds under policy="fp32"; under bf16 the
+    psum rounding drifts past one-ulp ties, so cross-layout identity is
+    NOT claimed. What bf16 does keep — with the tie-stable greedy
+    argmax (sampler "temperature=0,stable=1") — is SAME-layout
+    identity: engine variants on the same mesh (paged vs chunked-paged)
+    stay bit-identical, chunk boundaries invisible.
+
+These tests need >= 2 local devices; tier-1 (single-device CPU) skips
+them. Run via:  scripts/run_tests.sh --sharded
+(XLA_FLAGS=--xla_force_host_platform_device_count=2).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_serving_requests as make_requests
+from conftest import setup_serving_arch as setup_arch
+
+pytestmark = [
+    pytest.mark.sharded,
+    pytest.mark.serving,
+    pytest.mark.skipif(
+        jax.device_count() < 2,
+        reason="needs >= 2 devices: scripts/run_tests.sh --sharded sets "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=2"),
+]
+
+ARCH = "qwen2.5-14b"
+MESH_AXES = {"data2": dict(data=2, model=1),
+             "model2": dict(data=1, model=2)}
+
+
+def _mesh(kind):
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(**MESH_AXES[kind])
+
+
+def _reqs(arch, seed=2):
+    # mixed lengths/budgets + a shared 16-token prefix: exercises
+    # bucketed prefill, block sharing and mid-stream admission churn
+    return make_requests(arch, [(8, 5), (12, 6), (8, 4), (16, 5)],
+                         seed=seed, prefix=16)
+
+
+def _engine(arch, params, **kw):
+    from repro.serving import ContinuousEngine
+    kw.setdefault("cache", "paged")
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 48)
+    return ContinuousEngine(arch, params, block_size=8, **kw)
+
+
+def _run(arch, params, **kw):
+    reqs = _reqs(arch)
+    eng = _engine(arch, params, **kw)
+    eng.run(reqs)
+    return eng, [r.generated for r in reqs]
+
+
+def test_fp32_quad_data_mesh():
+    """Data-mesh engines (paged AND dense pools) == their unsharded
+    twins, token for token, under the engine default policy (None =
+    the arch's native compute dtype, bf16 for qwen — a data mesh is
+    exact under ANY precision because it only re-places bookkeeping)."""
+    arch, params = setup_arch(ARCH)
+    mesh = _mesh("data2")
+    _, base_paged = _run(arch, params)
+    _, base_dense = _run(arch, params, cache="dense")
+    eng, mesh_paged = _run(arch, params, mesh=mesh)
+    _, mesh_dense = _run(arch, params, cache="dense", mesh=mesh)
+    for got in (base_dense, mesh_paged, mesh_dense):
+        for x, y in zip(base_paged, got):
+            assert np.array_equal(x, y)
+    assert eng.report(1.0)["mesh_devices"] == 2
+
+
+def test_model_mesh_fp32_policy_identity():
+    arch, params = setup_arch(ARCH)
+    _, base = _run(arch, params, policy="fp32")
+    _, got = _run(arch, params, policy="fp32", mesh=_mesh("model2"))
+    for x, y in zip(base, got):
+        assert np.array_equal(x, y)
+
+
+def test_model_mesh_bf16_stable_same_layout_pair():
+    """Same-layout bf16 pair ON the model mesh: paged vs chunked-paged
+    share one sharded layout, so their logits round identically and the
+    tie-stable greedy argmax pins the remaining one-ulp chunk-boundary
+    ties — chunking stays invisible under sharded bf16."""
+    arch, params = setup_arch(ARCH)
+    mesh = _mesh("model2")
+    kw = dict(policy="bf16", sampler="temperature=0,stable=1", mesh=mesh)
+    _, base = _run(arch, params, **kw)
+    _, got = _run(arch, params, chunk_budget=8, **kw)
+    for x, y in zip(base, got):
+        assert np.array_equal(x, y)
+
+
+@pytest.mark.chunked
+@pytest.mark.parametrize("kind", ["data2", "model2"])
+def test_chunked_identity_under_mesh(kind):
+    """Chunked-prefill admission under a mesh: chunk boundaries stay
+    invisible AND the controller's resumable chunk caches carry the
+    sharded layout (satellite: cache_pspec threads through
+    AdmissionController)."""
+    arch, params = setup_arch(ARCH)
+    _, base = _run(arch, params)          # unchunked, unsharded
+    eng, got = _run(arch, params, chunk_budget=8, mesh=_mesh(kind))
+    for x, y in zip(base, got):
+        assert np.array_equal(x, y)
+    assert eng._admission._cache_sh is not None
+    assert eng.report(1.0)["chunk_steps"] > 0
+
+
+@pytest.mark.spec
+@pytest.mark.parametrize("kind", ["data2", "model2"])
+def test_speculative_identity_under_mesh(kind):
+    """Draft-verify decode under a mesh: the draft CachePool mirror and
+    both verify/draft steps run sharded, tokens unchanged, acceptance
+    still exactly 1.0 (make_spec_pair's constructed agreement)."""
+    from repro.serving import make_spec_pair
+    arch, params = setup_arch(ARCH)
+    tparams, darch, dparams = make_spec_pair(arch, params)
+    _, base = _run(arch, tparams)         # plain decode, unsharded
+    eng, got = _run(arch, tparams, spec_draft=(darch, dparams), spec_k=3,
+                    mesh=_mesh(kind))
+    for x, y in zip(base, got):
+        assert np.array_equal(x, y)
+    rep = eng.report(1.0)
+    assert rep["acceptance_rate"] == pytest.approx(1.0)
+    assert eng.draft_pool.mesh is not None
+
+
+@pytest.mark.paged
+@pytest.mark.parametrize("kind,engine_kw", [
+    # model mesh: float arenas shard head_dim over 'model'
+    ("model2", {}),
+    # data mesh: arena block dim (n_blocks+1 = 3*7+1 = 22) is even, so
+    # blocks shard over 'data' (the default 48/8-block arena yields an
+    # odd 13 and replicates — divisibility is per slot-type)
+    ("data2", dict(max_len=56, slots_budget=3)),
+], ids=["model2", "data2"])
+def test_pool_placement_matches_cache_pspec(kind, engine_kw):
+    """The live pool commits EXACTLY the shardings cache_shardings
+    derives from cache_pspec: arenas actually distributed, integer
+    bookkeeping never sharded over 'model'."""
+    from jax.sharding import NamedSharding
+    from repro.distributed import sharding as shd
+
+    arch, params = setup_arch(ARCH)
+    mesh = _mesh(kind)
+    eng, _ = _run(arch, params, mesh=mesh, **engine_kw)
+
+    expected = shd.cache_shardings(
+        jax.eval_shape(lambda: eng.pool.cache), mesh)
+    flat_c = jax.tree.leaves(eng.pool.cache)
+    flat_e = jax.tree.leaves(
+        expected, is_leaf=lambda x: isinstance(x, NamedSharding))
+    assert len(flat_c) == len(flat_e)
+    sharded_leaves = 0
+    for leaf, sh in zip(flat_c, flat_e):
+        assert leaf.sharding == sh, (leaf.shape, leaf.sharding, sh)
+        if not sh.is_fully_replicated:
+            sharded_leaves += 1
+        if jax.numpy.issubdtype(leaf.dtype, jax.numpy.integer):
+            assert "model" not in jax.tree.leaves(sh.spec)
+    assert sharded_leaves > 0
+
+    # block tables ride to device with their own pinned shardings
+    tables = eng.pool.device_tables()
+    for t in jax.tree.leaves(tables):
+        assert isinstance(t.sharding, NamedSharding)
+
+    # params follow the distributed param rules on the same mesh
+    psh = shd.params_sharding(jax.eval_shape(lambda: eng.params), mesh)
+    for leaf, sh in zip(jax.tree.leaves(eng.params),
+                        jax.tree.leaves(psh)):
+        assert leaf.sharding == sh
+
+
+def test_parse_mesh_multi_device():
+    from repro.launch.serve import parse_mesh
+    assert parse_mesh("2x1").devices.shape == (2, 1)
+    assert parse_mesh("1x2").devices.shape == (1, 2)
+    assert parse_mesh("2").devices.shape == (1, 2)   # bare N = 1xN
+
+
+def test_router_over_sharded_replicas():
+    """The tentpole end-to-end: a prefix-affinity fleet of LIVE
+    data-mesh replicas emits the same streams as one unsharded
+    engine."""
+    from repro.serving import ReplicaRouter
+    arch, params = setup_arch(ARCH)
+    _, base = _run(arch, params)
+    mesh = _mesh("data2")
+    fleet = ReplicaRouter(
+        [_engine(arch, params, mesh=mesh) for _ in range(2)],
+        policy="prefix")
+    reqs = _reqs(arch)
+    fleet.run(reqs)
+    for x, y in zip(base, reqs):
+        assert np.array_equal(x, y.generated)
+    rep = fleet.report(1.0)
+    assert rep["replicas"] == 2
+    assert all(sub["mesh_devices"] == 2 for sub in rep["per_replica"])
