@@ -1,9 +1,10 @@
 """Serving load generator: paged vs dense pools, continuous vs static,
 lazy vs eager chain growth, chunked prefill under open-loop traffic,
-speculative draft-verify decode on a low-entropy stream, and
-prefix-affinity routing over a replica fleet.
+speculative draft-verify decode on a low-entropy stream, prefix-affinity
+routing over a replica fleet, and the two non-decoder workload families
+(BERT scoring, encoder-decoder) served by the same engine core.
 
-Six workloads:
+Eight workloads:
 
   mixed          (default) heterogeneous prompt lengths and generation
                  budgets with NO common prefix — the traffic shape where
@@ -79,6 +80,31 @@ Six workloads:
                  fixed arena memory) and each LRU holds a partition of
                  the tenants instead of thrashing over all of them
                  (revival hits across the interleaved passes).
+  bert-scoring   BERT masked-LM scoring / embedding served by the SAME
+                 ContinuousEngine core (task=score): scoring requests
+                 complete AT admission — one fixed (max_batch,
+                 score_len) score call serves up to max_batch requests,
+                 no KV growth, slots free immediately. The batched path
+                 races the engine's OWN batch-1 latency mode (run_one,
+                 a lazily-built (1, score_len) jit) on the same seeded
+                 workload: batched must amortize dispatch to >=
+                 --score-batch-ratio (2.0) x the batch-1 tokens/s,
+                 token- AND embedding-identically, and each path must
+                 compile exactly once across the whole run.
+  encdec         whisper-style encoder-decoder serving: the encoder
+                 runs as a prefill-like pass and its output K/V is
+                 registered in the content-addressed cross-attention
+                 block arena keyed by the raw frames (frames_key), so
+                 the --shared-inputs distinct encoder inputs reused
+                 round-robin across --requests requests store their
+                 encoder blocks ONCE (refcounted, copy-free) — shared
+                 prompt prefixes, generalized to encoder outputs. The
+                 pooled engine races its own batch-1 run_one path:
+                 tokens must match bitwise (the batch-1 dense cross
+                 K/V is padded to the arena's blocked frame count, so
+                 both paths contract the same masked length), shared
+                 cross-block hits must land, and the decode and
+                 batch-1 steps must each compile exactly once.
 
 Every engine pair runs the byte-identical seeded workload and must emit
 identical tokens per request — scheduling, cache layout, growth mode and
@@ -124,6 +150,13 @@ PASS (multi-tenant-routed): zero routed-vs-round-robin mismatches
 --routed-ratio (1.2) x the round-robin fleet, routed decode steps <=
 round-robin's, and routed retained_hit_rate STRICTLY above round-robin
 (the LRU-partitioning mechanism, not just the throughput symptom).
+PASS (bert-scoring): zero token AND embedding mismatches batched vs
+batch-1 on every measured pass, batched tokens/s >= --score-batch-ratio
+x batch-1, and both the batched score jit and the batch-1 jit stay at
+`_cache_size() == 1`. PASS (encdec): zero pooled-vs-batch-1 token
+mismatches, shared cross-attention block hits >= 1 (encoder outputs
+stored once across same-input requests), and the pooled decode step and
+batch-1 step stay at `_cache_size() == 1`.
 """
 from __future__ import annotations
 
@@ -136,7 +169,9 @@ import numpy as np
 
 from repro.configs import reduced_arch
 from repro.serving import (ContinuousEngine, ReplicaRouter, Request,
-                           ServeEngine, Sampler, synthetic_requests)
+                           ServeEngine, Sampler,
+                           synthetic_encdec_requests, synthetic_requests,
+                           synthetic_scoring_requests)
 from repro.serving.metrics import aggregate
 
 
@@ -626,18 +661,155 @@ def run_multi_tenant_routed(arch, params, args, max_len):
     return results, gates
 
 
+def run_bert_scoring(arch, params, args, max_len):
+    """Batched masked-LM scoring vs the batch-1 latency path on ONE
+    engine (see module docstring, PASS (bert-scoring)). Scoring
+    requests complete at admission, so the batched path's cost is
+    ceil(n / max_batch) score calls against run_one's n serial
+    (1, score_len) calls — the gate is the dispatch amortization,
+    measured on the same warm engine with identical seeded requests."""
+    engine = ContinuousEngine(
+        arch, params, max_batch=args.max_batch, max_len=max_len,
+        policy=args.precision, sampler=args.sampler, task="score")
+
+    def mk_reqs():
+        return synthetic_scoring_requests(
+            args.requests, arch.cfg.vocab, prompt_len=args.prompt_len,
+            seed=args.seed)
+
+    def batched():
+        reqs = mk_reqs()
+        steps0 = engine.steps_run
+        t0 = time.perf_counter()
+        engine.run(reqs)
+        dt = time.perf_counter() - t0
+        stats = aggregate([r.trace for r in reqs], dt,
+                          sum(len(r.generated) for r in reqs))
+        stats["decode_steps"] = engine.steps_run - steps0
+        return stats, reqs
+
+    def batch1():
+        reqs = mk_reqs()
+        t0 = time.perf_counter()
+        for r in reqs:
+            engine.run_one(r)
+        dt = time.perf_counter() - t0
+        stats = aggregate([r.trace for r in reqs], dt,
+                          sum(len(r.generated) for r in reqs))
+        stats["decode_steps"] = len(reqs)   # one score call per request
+        return stats, reqs
+
+    runners = {"batched": batched, "batch1": batch1}
+    results, rep_outputs = measure_interleaved(runners, args.reps)
+    mismatch = sum(check_tokens(outs, "batched") for outs in rep_outputs)
+    # the pooled embedding rides the same score call; pin it bitwise too
+    emb_mismatch = sum(
+        not np.array_equal(x.embedding, y.embedding)
+        for outs in rep_outputs
+        for x, y in zip(outs["batched"], outs["batch1"]))
+    print_stats(results)
+
+    ratio = (results["batched"]["tokens_per_s"]
+             / max(results["batch1"]["tokens_per_s"], 1e-9))
+    gates = {
+        "token_mismatches": gate(mismatch, 0, op="<="),
+        "embedding_mismatches": gate(emb_mismatch, 0, op="<="),
+        "batched_vs_batch1": gate(ratio, args.score_batch_ratio),
+        # admission/finish churn and short final batches must never
+        # retrace either path: both shapes are fixed per engine lifetime
+        "score_compiles": gate(engine._score._cache_size(), 1, op="<="),
+        "batch1_compiles": gate(
+            engine._lat_score._cache_size(), 1, op="<="),
+    }
+    return results, gates
+
+
+def run_encdec(arch, params, args, max_len):
+    """Pooled encoder-decoder serving (shared cross-attention arena)
+    vs the batch-1 latency path on ONE engine (see module docstring,
+    PASS (encdec))."""
+    cfg = arch.cfg
+    n_inputs = args.shared_inputs or max(1, args.requests // 4)
+    engine = ContinuousEngine(
+        arch, params, max_batch=args.max_batch, max_len=max_len,
+        policy=args.precision, prefill_bucket=args.prefill_bucket,
+        cache="paged", block_size=args.block_size,
+        sampler=args.sampler)
+
+    def mk_reqs():
+        return synthetic_encdec_requests(
+            args.requests, cfg.vocab, n_frames=cfg.n_frames,
+            d_model=cfg.d_model, prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens, n_inputs=n_inputs,
+            seed=args.seed)
+
+    def pooled():
+        reqs = mk_reqs()
+        steps0 = engine.steps_run
+        hits0 = engine.pool.shared_hits
+        t0 = time.perf_counter()
+        engine.run(reqs)
+        dt = time.perf_counter() - t0
+        stats = aggregate([r.trace for r in reqs], dt,
+                          sum(len(r.generated) for r in reqs))
+        stats["decode_steps"] = engine.steps_run - steps0
+        stats["max_concurrent"] = engine.max_concurrent
+        stats["shared_block_hits"] = engine.pool.shared_hits - hits0
+        stats["retained_block_hits"] = engine.pool.retained_hits
+        return stats, reqs
+
+    def batch1():
+        reqs = mk_reqs()
+        t0 = time.perf_counter()
+        for r in reqs:
+            engine.run_one(r)
+        dt = time.perf_counter() - t0
+        stats = aggregate([r.trace for r in reqs], dt,
+                          sum(len(r.generated) for r in reqs))
+        stats["decode_steps"] = sum(
+            max(len(r.generated) - 1, 0) for r in reqs)
+        return stats, reqs
+
+    runners = {"pooled": pooled, "batch1": batch1}
+    results, rep_outputs = measure_interleaved(runners, args.reps)
+    mismatch = sum(check_tokens(outs, "pooled") for outs in rep_outputs)
+    print_stats(results)
+
+    gates = {
+        "token_mismatches": gate(mismatch, 0, op="<="),
+        # the tentpole mechanism: same-input requests reuse registered
+        # encoder blocks instead of re-storing them (measured passes
+        # only — each pass admits n_requests over n_inputs inputs)
+        "shared_block_hits": gate(
+            results["pooled"]["shared_block_hits"], 1),
+        "step_compiles": gate(engine._step._cache_size(), 1, op="<="),
+        "batch1_compiles": gate(
+            engine._lat_step._cache_size(), 1, op="<="),
+    }
+    results["pool"] = {
+        "shared_block_hits_total": engine.pool.shared_hits,
+        "retained_block_hits": engine.pool.retained_hits,
+        "prefix_misses": engine.pool.prefix_misses,
+        "retained_hit_rate": engine.pool.retained_hit_rate,
+    }
+    return results, gates
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
                     choices=["mixed", "shared-prefix", "bursty-long",
                              "open-loop", "low-entropy",
-                             "multi-tenant-routed"],
+                             "multi-tenant-routed", "bert-scoring",
+                             "encdec"],
                     default="mixed")
     ap.add_argument("--arch", default=None,
                     help="default: gemma2-2b (mixed) / qwen2.5-14b "
                          "(shared-prefix, bursty-long: full attention, so "
                          "every layer type dedups — sliding-window rings "
-                         "stop sharing once decode wraps them)")
+                         "stop sharing once decode wraps them) / "
+                         "bert-large (bert-scoring) / whisper-large-v3 "
+                         "(encdec)")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
@@ -716,6 +888,16 @@ def main():
                     help="multi-tenant-routed PASS gate: prefix-affinity "
                          "aggregate tokens/s >= ratio x the round-robin "
                          "fleet on the same workload")
+    ap.add_argument("--score-batch-ratio", type=float, default=2.0,
+                    help="bert-scoring PASS gate: batched scoring "
+                         "tokens/s >= ratio x the batch-1 run_one path "
+                         "on the same engine (one score call per "
+                         "max_batch requests vs one per request)")
+    ap.add_argument("--shared-inputs", type=int, default=None,
+                    help="encdec: distinct encoder inputs reused "
+                         "round-robin across --requests requests "
+                         "(default requests//4) — the cross-arena "
+                         "sharing knob")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "bf16_compute", "fp16"])
     ap.add_argument("--sampler", default=None,
@@ -736,12 +918,19 @@ def main():
     open_loop = args.workload == "open-loop"
     low_entropy = args.workload == "low-entropy"
     routed = args.workload == "multi-tenant-routed"
+    scoring = args.workload == "bert-scoring"
+    encdec = args.workload == "encdec"
     arch_name = args.arch or (
         "gemma2-2b" if args.workload in ("mixed", "open-loop")
+        else "bert-large" if scoring
+        else "whisper-large-v3" if encdec
         else "qwen2.5-14b")
     arch = reduced_arch(arch_name)
-    if arch.kind != "decoder":
-        raise SystemExit(f"{arch_name} is {arch.kind}: no decode step")
+    want_kind = "bert" if scoring else "encdec" if encdec else "decoder"
+    if arch.kind != want_kind:
+        raise SystemExit(f"--workload {args.workload} needs a "
+                         f"{want_kind} arch, got {arch_name} "
+                         f"({arch.kind})")
     params = arch.init(jax.random.PRNGKey(args.seed))
 
     if shared:
@@ -772,6 +961,15 @@ def main():
         args.requests = min(args.requests, 24)
         args.max_batch = max(args.max_batch, 8)
         args.prompt_len, args.new_tokens = 8, 8
+    elif scoring:
+        # one batched score call serves max_batch requests; batch-1
+        # pays one call per request — bigger batches widen the gap
+        args.max_batch = max(args.max_batch, 8)
+    elif encdec:
+        # modest decode budgets: the cross arena (encoder blocks) is
+        # the sharing surface; batch-1 replays every request serially
+        args.requests = min(args.requests, 24)
+        args.prompt_len, args.new_tokens = 8, 12
     prefix = args.prefix_len if shared else 0
     max_len = prefix + args.prompt_len + args.new_tokens \
         + args.prefill_bucket
@@ -781,6 +979,10 @@ def main():
         max_len += args.prefix_len     # tenant prefix on every prompt
     if open_loop:                      # must hold the long-prompt mode
         max_len = args.long_len + args.new_tokens + args.prefill_bucket
+    if scoring:                        # score_len: no KV growth at all
+        max_len = min(args.prompt_len, arch.cfg.max_pos)
+    if encdec:                         # decoder budget <= max_target
+        max_len = min(max_len, arch.cfg.max_target)
     max_len = -(-max_len // args.block_size) * args.block_size
 
     # bursty-long keeps budgets uniformly LONG (that is the stranding
@@ -806,6 +1008,10 @@ def main():
     elif routed:
         results, gates = run_multi_tenant_routed(arch, params, args,
                                                  max_len)
+    elif scoring:
+        results, gates = run_bert_scoring(arch, params, args, max_len)
+    elif encdec:
+        results, gates = run_encdec(arch, params, args, max_len)
     else:
         mk = (arch, params, mk_workload(args.seed), args, max_len)
         if shared:

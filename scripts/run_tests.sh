@@ -10,7 +10,14 @@
 #   scripts/run_tests.sh --spec     # speculative decode / rollback / wrap-COW
 #   scripts/run_tests.sh --sharded  # mesh serving differentials on 2
 #                                   # simulated host devices (sets XLA_FLAGS)
+#   scripts/run_tests.sh --bert     # BERT scoring/embedding family suite
+#   scripts/run_tests.sh --encdec   # encoder-decoder family / cross-arena
 #   scripts/run_tests.sh --docs     # smoke-check docs/README code fences
+#   scripts/run_tests.sh --durations-report [out.json]
+#                                   # tier-1 run that also writes per-suite
+#                                   # wall-clock timings as JSON (default
+#                                   # test_durations.json) via the conftest
+#                                   # REPRO_DURATIONS_JSON plugin
 #
 # Optional test extras (requirements.txt): `hypothesis` enables
 # tests/test_properties.py and tests/test_serving_properties.py, which
@@ -45,8 +52,26 @@ if [[ "${1:-}" == "--sharded" ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}"
   exec python -m pytest -x -q -m "sharded" "$@"
 fi
+if [[ "${1:-}" == "--bert" ]]; then
+  shift
+  exec python -m pytest -x -q -m "bert" "$@"
+fi
+if [[ "${1:-}" == "--encdec" ]]; then
+  shift
+  exec python -m pytest -x -q -m "encdec" "$@"
+fi
 if [[ "${1:-}" == "--docs" ]]; then
   shift
   exec python -m pytest -x -q tests/test_docs.py "$@"
+fi
+if [[ "${1:-}" == "--durations-report" ]]; then
+  shift
+  out="${1:-test_durations.json}"
+  [[ $# -gt 0 ]] && shift
+  export REPRO_DURATIONS_JSON="$out"
+  status=0
+  python -m pytest -x -q "$@" || status=$?
+  echo "per-suite durations written to $out"
+  exit "$status"
 fi
 exec python -m pytest -x -q "$@"

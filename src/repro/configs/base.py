@@ -104,9 +104,9 @@ class Arch:
                                               per_slot=per_slot,
                                               clamp_window=clamp_window)
         if self.kind == "encdec":
-            if per_slot:
-                raise NotImplementedError("pooled serving is decoder-only")
-            return ed_lib.init_encdec_cache(self.cfg, batch, max_len)
+            return ed_lib.init_encdec_cache(self.cfg, batch, max_len,
+                                            dtype=self.cfg.compute_dtype,
+                                            per_slot=per_slot)
         raise ValueError(f"{self.kind} has no decode cache")
 
     def init_paged_cache(self, batch: int, max_len: int, *,
@@ -167,8 +167,14 @@ class Arch:
                 params, self.cfg, toks, caches=cache, positions=positions)
             return logits[:, -1:], cache
         if self.kind == "encdec":
-            memory = ed_lib.encode(params, self.cfg, batch["frames"])
             toks = batch["tokens"]
+            if per_slot:
+                # Pooled serving admission: encode + one-time cross K/V
+                # projection + prompt prefill into per-slot caches.
+                return ed_lib.prefill_serve(
+                    params, self.cfg, toks, positions, batch["frames"],
+                    cache_len or toks.shape[1])
+            memory = ed_lib.encode(params, self.cfg, batch["frames"])
             cache = ed_lib.init_encdec_cache(
                 self.cfg, toks.shape[0], cache_len or toks.shape[1])
             logits, cache = ed_lib.decode(params, self.cfg, toks, memory,
@@ -188,9 +194,27 @@ class Arch:
                 positions=batch.get("positions"))
             return logits, cache
         if self.kind == "encdec":
+            if "slots" in cache:
+                # Pooled serving layout: cross K/V ride inside the cache
+                # (dense or paged arena) — no per-step memory operand.
+                return ed_lib.decode_serve(params, self.cfg,
+                                           batch["tokens"],
+                                           batch["positions"], cache)
             return ed_lib.decode(params, self.cfg, batch["tokens"],
                                  batch["memory"], caches=cache)
         raise ValueError(f"{self.kind} does not serve")
+
+    def score(self, params, tokens, positions):
+        """Batched scoring forward (BERT family) -> (mlm_ids, pooled).
+
+        tokens/positions (B, S) left-padded (pads < 0): masked-LM argmax
+        ids per position plus the fp32 tanh-pooled [CLS] embedding — the
+        serving engine's score/embed step (no KV cache, no growth).
+        """
+        if self.kind != "bert":
+            raise ValueError(f"{self.kind} has no scoring forward")
+        return bert_lib.bert_serve_outputs(params, self.cfg, tokens,
+                                           positions)
 
     # ---------------- dry-run input specs ----------------
 

@@ -219,6 +219,13 @@ def cache_pspec(cache: PyTree, mesh: Mesh) -> PyTree:
     paged arenas (layers, n_blocks, bsz, kv, hd): BLOCKS over data — the
     pool's capacity dim distributes across chips the way batch rows do in
     the dense pool — hd over model as before.
+    encdec cross arenas (layers, n_blocks+1, bsz, H, hd): same shape
+    family as paged arenas, so the same rule applies — blocks (axis 1,
+    the +1 null block rides along) over data, head_dim over model. The
+    cross position rows (n_blocks+1, bsz) and per-slot block table
+    (B, max_blocks) fall under the integer rule below. EncDecCachePool
+    pins its insert/gather jits to these specs (cache_shardings), so the
+    cross arena never re-shards between encoder registration and decode.
     Integer bookkeeping (positions, block tables, cursors) never shards
     over model: only its leading batch/blocks dim goes over data, so the
     block-table gather indexes a locally-addressable table.

@@ -28,7 +28,14 @@ always accepts); the report gains acceptance-rate telemetry. --arrival-rate R re
 seeded open-loop Poisson traffic at R req/s instead of submitting
 everything up front, and reports goodput against the --ttft-slo-ms /
 --itl-slo-ms bounds. --engine static runs the padded lockstep baseline
-instead. --mesh DxM (e.g. 2x1, 1x2; a bare N means 1xN tensor
+instead. --task picks the workload family: generate (default) decodes
+with decoder or encoder-decoder archs — encdec archs synthesize
+framed requests whose encoder output lands in the shared cross-
+attention block arena (--shared-inputs N reuses N distinct inputs
+round-robin, exercising encoder-block sharing) — while score / embed
+need a bert arch and run batched masked-LM scoring / [CLS] embedding
+through one fixed-shape forward (no KV cache; requests complete at
+admission). --mesh DxM (e.g. 2x1, 1x2; a bare N means 1xN tensor
 parallel) runs the continuous engine live-sharded over a local device
 mesh — params per the distributed param rules, KV arenas blocks-over-
 data / head_dim-over-model — with token output identical to the
@@ -52,7 +59,8 @@ import jax
 from repro.configs import get_arch, reduced_arch
 from repro.metrics import MetricsLogger
 from repro.serving import (ContinuousEngine, ReplicaRouter, ServeEngine,
-                           synthetic_requests)
+                           synthetic_encdec_requests, synthetic_requests,
+                           synthetic_scoring_requests)
 
 # Flags that configure the continuous engine's PAGED pool (or features
 # built on it): each entry is (flag, fn(args) -> requested?). They must
@@ -121,6 +129,18 @@ def build_parser():
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--engine", choices=["continuous", "static"],
                     default="continuous")
+    ap.add_argument("--task", choices=["generate", "score", "embed"],
+                    default="generate",
+                    help="workload family: generate (decoder/encdec "
+                         "autoregressive decode), score (bert batched "
+                         "masked-LM scoring) or embed (bert pooled "
+                         "[CLS] embeddings). score/embed need a bert "
+                         "arch and hold no KV cache")
+    ap.add_argument("--shared-inputs", type=int, default=0,
+                    help="encdec only: number of DISTINCT encoder "
+                         "inputs reused round-robin across --requests "
+                         "(0: all distinct). Same-input requests share "
+                         "cross-attention arena blocks copy-free")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "bf16_compute", "fp16"],
                     help="inference precision policy (greedy always fp32)")
@@ -245,18 +265,49 @@ def main():
         raise SystemExit("; ".join(errs))
 
     arch = reduced_arch(args.arch) if args.reduced else get_arch(args.arch)
-    if arch.kind != "decoder":
-        raise SystemExit(f"{args.arch} is {arch.kind}: no decode step")
+    if arch.kind not in ("decoder", "encdec", "bert"):
+        raise SystemExit(f"{args.arch} is {arch.kind}: cannot serve")
+    if args.engine == "static" and arch.kind != "decoder":
+        raise SystemExit(
+            f"--engine static is decoder-only, got {arch.kind}")
+    if arch.kind == "bert" and args.task == "generate":
+        raise SystemExit(f"{args.arch} is a bert arch: pass --task score "
+                         f"or --task embed")
+    if arch.kind != "bert" and args.task != "generate":
+        raise SystemExit(f"--task {args.task} needs a bert arch, "
+                         f"got {arch.kind}")
+    for flag, wrong in (("--shared-prefix", args.shared_prefix
+                         and arch.kind != "decoder"),
+                        ("--shared-inputs", args.shared_inputs
+                         and arch.kind != "encdec")):
+        if wrong:
+            raise SystemExit(f"{flag} does not apply to {arch.kind} archs")
     params = arch.init(jax.random.PRNGKey(args.seed))
-    max_len = args.max_len or (args.prompt_len + args.new_tokens)
+    if arch.kind == "bert":     # scoring holds no decode budget
+        max_len = args.max_len or args.prompt_len
+    else:
+        max_len = args.max_len or (args.prompt_len + args.new_tokens)
 
-    reqs = synthetic_requests(args.requests, arch.cfg.vocab,
-                              prompt_len=args.prompt_len,
-                              new_tokens=args.new_tokens, seed=args.seed,
-                              shared_prefix=args.shared_prefix)
+    if arch.kind == "encdec":
+        reqs = synthetic_encdec_requests(
+            args.requests, arch.cfg.vocab, n_frames=arch.cfg.n_frames,
+            d_model=arch.cfg.d_model, prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens,
+            n_inputs=args.shared_inputs or None, seed=args.seed)
+    elif arch.kind == "bert":
+        reqs = synthetic_scoring_requests(
+            args.requests, arch.cfg.vocab, prompt_len=args.prompt_len,
+            seed=args.seed)
+    else:
+        reqs = synthetic_requests(args.requests, arch.cfg.vocab,
+                                  prompt_len=args.prompt_len,
+                                  new_tokens=args.new_tokens,
+                                  seed=args.seed,
+                                  shared_prefix=args.shared_prefix)
     if args.shared_prefix:
         max_len += args.shared_prefix
-    if args.cache == "paged":   # arena rows come in whole blocks
+    if args.cache == "paged" and arch.kind == "decoder":
+        # arena rows come in whole blocks
         max_len = -(-max_len // args.block_size) * args.block_size
     log = MetricsLogger(args.metrics)
 
@@ -299,7 +350,8 @@ def main():
                 slo_ms=args.slo_ms, preempt=args.preempt,
                 retain_blocks=args.retain_blocks,
                 watermark=args.watermark,
-                chunk_budget=args.chunk_budget, mesh=mesh, **spec_kw)
+                chunk_budget=args.chunk_budget, mesh=mesh,
+                task=args.task, **spec_kw)
 
         if args.replicas > 1:
             engine = ReplicaRouter(
@@ -323,7 +375,8 @@ def main():
         pools = (engine.replicas[0].pool if args.replicas > 1
                  else engine.pool)
         attn_kernel = (pools.attn_kernel
-                       if args.cache == "paged" else "xla")
+                       if args.cache == "paged" and arch.kind == "decoder"
+                       else "xla")
     else:
         attn_kernel = "xla"
         engine = ServeEngine(arch, params, max_len=max_len,
@@ -338,6 +391,7 @@ def main():
                           sum(len(r.generated) for r in reqs))
 
     stats["engine"] = args.engine
+    stats["task"] = args.task
     stats["precision"] = args.precision
     stats["cache"] = args.cache if args.engine == "continuous" else "static"
     stats["attn_kernel"] = attn_kernel

@@ -100,28 +100,43 @@ def attn_apply(
     kv_x=None,                 # cross-attention memory (B, Sm, d)
     positions=None,            # (B, S) or (S,) absolute positions of x
     cache=None,                # dict(k, v, index) for incremental decode
+    kv_cache=None,             # READ-ONLY precomputed cross K/V (serving)
     kv_valid_len=None,         # (B,) valid cache length (incl. new tokens)
     compute_dtype=jnp.bfloat16,
 ):
-    """Returns (out, new_cache). new_cache is None unless cache is given."""
+    """Returns (out, new_cache). new_cache is None unless cache is given.
+
+    kv_cache is the serving twin of kv_x: the cross-attention K/V were
+    projected ONCE (at encdec admission) and are attended read-only every
+    decode step — wk/wv never run here and nothing is written back. Two
+    forms: dense {"k","v"[,"pos"]} with k/v (B, Sm, n_kv, hd), or paged
+    {"k","v","pos","table"} where k/v are (n_blocks, block_size, n_kv,
+    hd) arenas gathered through a (B, max_blocks) table exactly like the
+    paged self-attention read path. Pad rows carry pos -1 and mask out,
+    so the gathered padded attention is bitwise the dense one (exp of a
+    masked logit is exactly 0.0 in fp32). Mutually exclusive with kv_x
+    and cache.
+    """
     B, S, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     scale = cfg.query_scale if cfg.query_scale is not None else 1.0 / math.sqrt(hd)
 
     q = _split_heads(dense_apply(p["wq"], x, compute_dtype), h, hd)
-    src = x if kv_x is None else kv_x
-    k = _split_heads(dense_apply(p["wk"], src, compute_dtype), kv, hd)
-    v = _split_heads(dense_apply(p["wv"], src, compute_dtype), kv, hd)
+    if kv_cache is None:
+        src = x if kv_x is None else kv_x
+        k = _split_heads(dense_apply(p["wk"], src, compute_dtype), kv, hd)
+        v = _split_heads(dense_apply(p["wv"], src, compute_dtype), kv, hd)
 
     if cfg.qk_norm:
         q = rmsnorm_apply(p["q_norm"], q)
-        k = rmsnorm_apply(p["k_norm"], k)
+        if kv_cache is None:
+            k = rmsnorm_apply(p["k_norm"], k)
 
     if positions is None:
         positions = jnp.arange(S)
     positions = jnp.broadcast_to(positions, (S,) if positions.ndim <= 1 else positions.shape)
 
-    if cfg.rope and kv_x is None:
+    if cfg.rope and kv_x is None and kv_cache is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
@@ -135,7 +150,28 @@ def attn_apply(
     # logical rows onto arena blocks.
     pooled = cache is not None and jnp.ndim(cache["index"]) == 1
     paged = cache is not None and "table" in cache
-    if paged:
+    if kv_cache is not None:
+        if cache is not None or kv_x is not None:
+            raise ValueError("kv_cache is exclusive with cache/kv_x")
+        if "table" in kv_cache:
+            # Paged cross arena (serving/cache_pool.EncDecCachePool): the
+            # same fixed-shape gather the paged self-attention read path
+            # uses — blocks churn, the jitted step never recompiles.
+            tbl = kv_cache["table"]                    # (B, max_blocks)
+            bsz = kv_cache["k"].shape[1]
+            mem_len = tbl.shape[1] * bsz
+            k = kv_cache["k"][tbl].reshape(B, mem_len, kv, hd)
+            v = kv_cache["v"][tbl].reshape(B, mem_len, kv, hd)
+            k_pos = kv_cache["pos"][tbl].reshape(B, mem_len)
+        else:
+            k, v = kv_cache["k"], kv_cache["v"]
+            k_pos = kv_cache.get("pos")
+            if k_pos is None:
+                k_pos = jnp.arange(k.shape[1])
+        k = k.astype(compute_dtype)
+        v = v.astype(compute_dtype)
+        q_pos = positions
+    elif paged:
         # Paged decode (serving/cache_pool.PagedCachePool): cache k/v are
         # (n_blocks, block_size, kv, hd) arenas, pos is (n_blocks,
         # block_size), table is (B, max_blocks) int32 arena indices with 0
@@ -285,7 +321,7 @@ def attn_apply(
         k = jnp.repeat(k, h // kv, axis=2)
         v = jnp.repeat(v, h // kv, axis=2)
 
-    causal = cfg.causal and kv_x is None
+    causal = cfg.causal and kv_x is None and kv_cache is None
     # Single-token cached decode runs its logit/PV contractions with fp32
     # accumulation and keeps probs fp32: the (B, H, 1, K) intermediates are
     # tiny, and it makes the Pallas paged kernel (fp32 in VREGs throughout)

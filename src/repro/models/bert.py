@@ -86,11 +86,24 @@ def bert_init(rng, cfg: BertConfig):
 
 
 def bert_encode(params, cfg: BertConfig, tokens, token_types=None,
-                attn_valid_len=None):
-    """tokens (B, S) -> hidden states (B, S, d). Post-LN residual stack."""
+                attn_valid_len=None, positions=None):
+    """tokens (B, S) -> hidden states (B, S, d). Post-LN residual stack.
+
+    positions (B, S) gives each token its LOCAL position (left-padded
+    serving batches: pads carry pos < 0) — the position embedding is
+    looked up per token and padded columns are masked out of the
+    bidirectional attention, so a left-padded row's valid columns are
+    bitwise the unpadded run of the same tokens at the same S. The
+    default (None) keeps the training path's contiguous 0..S-1 layout.
+    """
     B, S = tokens.shape
     x = embed_apply(params["tok_embed"], tokens, cfg.compute_dtype)
-    x = x + params["pos_embed"].astype(cfg.compute_dtype)[None, :S]
+    if positions is None:
+        x = x + params["pos_embed"].astype(cfg.compute_dtype)[None, :S]
+    else:
+        pos_ids = jnp.clip(positions, 0, cfg.max_pos - 1)
+        x = x + jnp.take(params["pos_embed"].astype(cfg.compute_dtype),
+                         pos_ids, axis=0)
     if token_types is None:
         token_types = jnp.zeros_like(tokens)
     x = x + jnp.take(params["type_embed"].astype(cfg.compute_dtype),
@@ -99,6 +112,7 @@ def bert_encode(params, cfg: BertConfig, tokens, token_types=None,
 
     def layer(x, lp):
         h, _ = attn_apply(lp["attn"], cfg.attn_cfg(), x,
+                          positions=positions,
                           kv_valid_len=None, compute_dtype=cfg.compute_dtype)
         x = layernorm_apply(lp["attn_ln"], x + h)
         up = dense_apply(lp["mlp"]["up"], x, cfg.compute_dtype)
@@ -123,6 +137,34 @@ def bert_pretrain_logits(params, cfg: BertConfig, tokens, token_types=None):
     cls = jnp.tanh(dense_apply(params["pooler"], h[:, 0], cfg.compute_dtype))
     nsp = dense_apply(params["nsp_head"], cls, cfg.compute_dtype).astype(jnp.float32)
     return mlm, nsp
+
+
+def bert_serve_outputs(params, cfg: BertConfig, tokens, positions):
+    """Scoring/embedding forward for the serving engine.
+
+    tokens/positions (B, S) LEFT-padded (pads carry pos < 0, the same
+    convention as decoder serving prefill). Returns
+      mlm_ids (B, S) int32 — greedy masked-LM argmax per column (pad
+        columns produce garbage ids; the engine slices the valid tail),
+      pooled (B, d) float32 — tanh-pooled [CLS] embedding, where [CLS]
+        is each row's FIRST valid column (position 0).
+    One fixed-shape forward, no KV cache: a scoring slot's only state is
+    its output, freed at completion.
+    """
+    B, S = tokens.shape
+    h = bert_encode(params, cfg, tokens, positions=positions)
+    t = dense_apply(params["mlm_transform"], h, cfg.compute_dtype)
+    t = layernorm_apply(params["mlm_ln"], gelu(t))
+    mlm = jnp.einsum("bsd,vd->bsv", t.astype(cfg.compute_dtype),
+                     params["tok_embed"]["embedding"].astype(cfg.compute_dtype))
+    mlm = mlm.astype(jnp.float32) + params["mlm_bias"].astype(jnp.float32)
+    mlm_ids = jnp.argmax(mlm, axis=-1).astype(jnp.int32)
+    # first valid column per row: argmax of the (pos >= 0) indicator
+    cls_col = jnp.argmax((positions >= 0).astype(jnp.int32), axis=1)
+    cls_h = h[jnp.arange(B), cls_col]
+    pooled = jnp.tanh(dense_apply(params["pooler"], cls_h,
+                                  cfg.compute_dtype)).astype(jnp.float32)
+    return mlm_ids, pooled
 
 
 def bert_pretrain_loss(params, cfg: BertConfig, batch):

@@ -179,9 +179,117 @@ def encdec_apply(params, cfg: EncDecConfig, frame_embeds, tokens):
 
 
 def init_encdec_cache(cfg: EncDecConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16):
-    one = init_kv_cache(batch, max_len, cfg.n_heads, cfg.head_dim, dtype)
-    one.pop("index")
+                      dtype=jnp.bfloat16, *, per_slot: bool = False):
+    """Self-attention decoder caches, stacked (n_layers, ...).
+
+    per_slot=True is the pooled continuous-batching layout the serving
+    engine slices per slot: {"slots": {"self": stacked}, "index": (B,)}
+    with per-slot position rows — the same shape contract CachePool's
+    `_insert_row` scatters into (leaf axis 1 is the slot axis). The
+    legacy scalar-cursor layout stays for the single-stream decode path.
+    """
+    one = init_kv_cache(batch, max_len, cfg.n_heads, cfg.head_dim, dtype,
+                        per_slot=per_slot)
+    idx = one.pop("index")
     stacked = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+    if per_slot:
+        return {"slots": {"self": stacked}, "index": idx}
     return {"self": stacked, "index": jnp.zeros((), jnp.int32)}
+
+
+def precompute_cross_kv(params, cfg: EncDecConfig, memory):
+    """Per-decoder-layer cross-attention K/V of one encoder output.
+
+    memory (B, Sm, d) -> k, v each (L, B, Sm, n_heads, head_dim), in
+    compute_dtype — bitwise the projections attn_apply computes inline
+    from kv_x=memory, so serving decode against these (attn_apply's
+    kv_cache path) matches the training-style decode() token for token.
+    """
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def one(lp):
+        ca = lp["cross_attn"]
+        k = dense_apply(ca["wk"], memory, cfg.compute_dtype)
+        v = dense_apply(ca["wv"], memory, cfg.compute_dtype)
+        return (k.reshape(*k.shape[:-1], h, hd),
+                v.reshape(*v.shape[:-1], h, hd))
+
+    return jax.lax.map(one, params["dec_layers"])
+
+
+def decode_serve(params, cfg: EncDecConfig, tokens, positions, cache):
+    """Pooled (continuous-batching) decode step for the encdec family.
+
+    cache: {"slots": {"self": stacked (L, B, rows, ...) KV}, "index":
+    (B,) per-slot cursors, "cross": read-only cross-attention K/V —
+    dense {"k","v","pos"} with k/v (L, B, Sm, H, hd), or the paged
+    arena {"k","v","pos","table"} with k/v (L, n_blocks, bs, H, hd)
+    (pos/table carry no layer dim: frame positions are layer-invariant).
+    The cross tree is passed through new_cache UNCHANGED so the donated
+    serve step aliases it in place — arenas never round-trip the host.
+    positions: (B, S) per-slot LOCAL decode positions (pads < 0).
+    """
+    B, S = tokens.shape
+    x = embed_apply(params["dec_embed"], tokens, cfg.compute_dtype)
+    pos_table = params["dec_pos"].astype(cfg.compute_dtype)
+    pos_ids = jnp.clip(positions, 0, pos_table.shape[0] - 1)
+    x = x + jnp.take(pos_table, pos_ids, axis=0)
+
+    cross = cache["cross"]
+    cross_ro = {n: cross[n] for n in cross if n not in ("k", "v")}
+
+    def layer(x, xs):
+        lp, self_cache, ck, cv = xs
+        cache_i = dict(self_cache)
+        cache_i["index"] = cache["index"]
+        h, nc = attn_apply(lp["self_attn"], cfg.attn_cfg(True),
+                           layernorm_apply(lp["ln1"], x),
+                           positions=positions, cache=cache_i,
+                           compute_dtype=cfg.compute_dtype)
+        x = x + h
+        h, _ = attn_apply(lp["cross_attn"], cfg.attn_cfg(False),
+                          layernorm_apply(lp["ln_x"], x),
+                          positions=positions,
+                          kv_cache={"k": ck, "v": cv, **cross_ro},
+                          compute_dtype=cfg.compute_dtype)
+        x = x + h
+        h = mlp_apply(lp["mlp"], layernorm_apply(lp["ln2"], x),
+                      activation="gelu", compute_dtype=cfg.compute_dtype)
+        x = x + h
+        nc.pop("index")
+        return x, nc
+
+    x, new_self = jax.lax.scan(
+        layer, x,
+        (params["dec_layers"], cache["slots"]["self"], cross["k"], cross["v"]))
+    x = layernorm_apply(params["dec_ln_post"], x)
+    logits = embed_attend(params["dec_embed"], x, cfg.compute_dtype)
+    new_cache = {"slots": {"self": new_self}, "index": cache["index"] + S,
+                 "cross": cross}
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill_serve(params, cfg: EncDecConfig, tokens, positions, frames,
+                  cache_len: int):
+    """Batched encdec admission: encode, project cross K/V once, run the
+    decoder prompt into fresh per-slot caches.
+
+    tokens/positions (B, S) left-padded prompts (pads < 0); frames
+    (B, n_frames, d_model). Returns (last-position fp32 logits (B, 1, V),
+    pooled cache whose "cross" is the DENSE per-request form — axis 1 is
+    the batch axis on every cross leaf, so the engine slices one
+    request's cross K/V out for arena registration the same way it
+    slices self-cache rows).
+    """
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+    memory = encode(params, cfg, frames)
+    ck, cv = precompute_cross_kv(params, cfg, memory)
+    cache = init_encdec_cache(cfg, tokens.shape[0], cache_len,
+                              dtype=cfg.compute_dtype, per_slot=True)
+    cache["cross"] = {"k": ck, "v": cv,
+                      "pos": jnp.arange(memory.shape[1], dtype=jnp.int32)}
+    logits, cache = decode_serve(params, cfg, tokens, positions, cache)
+    return logits[:, -1:].astype(jnp.float32), cache

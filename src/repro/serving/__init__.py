@@ -18,6 +18,11 @@ See serving/engine.py for the architecture overview. Public surface:
   CachePool          dense pooled KV/SSM cache + insert/evict (baseline)
   PagedCachePool     block-paged KV arena with shared prompt prefixes,
                      lazy chain growth and a retained-prefix LRU
+  EncDecCachePool    encdec family pool: dense per-slot self-attention
+                     rows + a refcounted, content-addressed cross-
+                     attention block arena keyed by the raw encoder
+                     input (frames_key) — same-input requests share
+                     encoder blocks like shared prompt prefixes
   BlockAllocator     refcounted free-list over arena blocks
   BlockTableMap      per-slot-type tables + prefix registry (host-side)
   AdmissionController  chunked-prefill admission: one resumable prompt
@@ -35,12 +40,18 @@ from repro.serving.admission import (AdmissionController, PrefillTask,
                                      chunk_granularity, plan_chunk)
 from repro.serving.block_allocator import (BlockAllocator, BlockTableMap,
                                            NoBlocksError)
-from repro.serving.cache_pool import CachePool, PagedCachePool
+from repro.serving.cache_pool import (CachePool, EncDecCachePool,
+                                      PagedCachePool, frames_key)
 from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
-                                  apply_serving_policy, build_first_token_fn,
+                                  apply_serving_policy,
+                                  build_encdec_prefill_fn,
+                                  build_first_token_fn,
                                   build_prefill_fn, make_spec_pair,
                                   pad_prompts, prompt_granularity,
-                                  synthetic_requests, throughput_probe)
+                                  synthetic_encdec_requests,
+                                  synthetic_requests,
+                                  synthetic_scoring_requests,
+                                  throughput_probe)
 from repro.serving.metrics import (DepthTracker, RequestTrace, aggregate,
                                    hit_rate, percentile)
 from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter,
@@ -55,15 +66,18 @@ from repro.serving.traffic import (SLO, OpenLoopDriver, bimodal_requests,
 __all__ = [
     "AdmissionController", "ArrivalDeadlinePolicy", "BlockAllocator",
     "BlockTableMap", "CachePool", "ContinuousEngine", "DepthTracker",
+    "EncDecCachePool",
     "NoBlocksError", "OpenLoopDriver", "PagedCachePool", "PolicyContext",
     "PrefillTask", "PrefixAffinityPolicy", "ROUTE_POLICIES", "ReplicaRouter",
     "Request", "RequestTrace", "SLO",
     "Sampler", "Scheduler", "SchedulerError", "SchedulingPolicy",
     "ServeEngine", "aggregate", "apply_serving_policy", "bimodal_requests",
+    "build_encdec_prefill_fn",
     "build_first_token_fn", "build_prefill_fn", "chunk_granularity",
-    "fold_keys", "hit_rate", "make_spec_pair", "meets_slo", "pad_prompts",
-    "percentile",
+    "fold_keys", "frames_key", "hit_rate", "make_spec_pair", "meets_slo",
+    "pad_prompts", "percentile",
     "plan_chunk", "poisson_arrivals", "prefix_route_key",
     "prompt_granularity", "slo_report",
-    "stable_argmax", "synthetic_requests", "throughput_probe",
+    "stable_argmax", "synthetic_encdec_requests", "synthetic_requests",
+    "synthetic_scoring_requests", "throughput_probe",
 ]

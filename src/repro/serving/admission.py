@@ -144,6 +144,15 @@ class AdmissionController:
 
     def __init__(self, arch, params, *, chunk_budget: int,
                  prefill_len: int, mesh=None):
+        if arch.kind != "decoder":
+            # chunks run arch.decode_step against a per-slot self-
+            # attention cache: encdec decode wants the pooled cross-
+            # arena pytree and bert has no decode step at all, so the
+            # resumable-chunk contract only holds for decoder archs
+            # (the engine rejects chunk_budget for other families too;
+            # this guards direct construction)
+            raise ValueError(
+                f"chunked prefill needs a decoder arch, got {arch.kind}")
         self.arch = arch
         self.params = params
         self.granularity = chunk_granularity(arch.cfg)

@@ -67,6 +67,7 @@ also compiled once).
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Optional
 
 import jax
@@ -763,3 +764,233 @@ class PagedCachePool:
         (see BlockTableMap.check_invariants) — test hook."""
         for m in self.maps.values():
             m.check_invariants()
+
+
+def frames_key(frames, padded_frames: int):
+    """Content key for one encoder input, in BlockTableMap token form.
+
+    The registry's incremental chain hash keys DECODER prompts by their
+    token prefix; an encoder input has no tokens, and its cross K/V only
+    ever match another request's when the WHOLE input is identical (every
+    frame feeds every cross block through the encoder's global
+    attention). So the key is the sha256 of the raw frame bytes, spread
+    over `padded_frames` int64 pseudo-tokens: every chain block of the
+    same input hashes identically, and two inputs differing anywhere
+    share nothing — block granularity collapses to whole-input identity,
+    which is exactly the beams/retries sharing the tentpole wants."""
+    d = hashlib.sha256(
+        np.ascontiguousarray(frames, np.float32).tobytes()).digest()
+    return np.resize(np.frombuffer(d, np.int64), padded_frames)
+
+
+def _cross_insert(arena: PyTree, ck, cv, dst_blocks, pos_rows) -> PyTree:
+    """Write one request's FRESH cross-attention blocks into the arena.
+
+    arena: {"k","v"} (n_layers, n_blocks, bs, H, hd) + "pos"
+           (n_blocks, bs) — pos carries no layer dim (frame positions
+           are layer-invariant).
+    ck/cv: (n_layers, Sm, H, hd) dense projections from the admission
+           prefill, zero-padded here to the blocked length (pad rows get
+           pos -1 and never attend).
+    dst_blocks (max_blocks,): arena block per chain position, NULL (0)
+           for shared positions — their writes land in the null block,
+           whose pos_rows entries are -1, keeping it invalid.
+    pos_rows (max_blocks, bs): frame position per written row, -1 for
+           pads and null-routed rows.
+    """
+    nbk = dst_blocks.shape[0]
+    bs = arena["k"].shape[2]
+    pad = nbk * bs - ck.shape[1]
+
+    def blocks_of(x, dtype):
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        return x.reshape(x.shape[0], nbk, bs, *x.shape[2:]).astype(dtype)
+
+    return {"k": arena["k"].at[:, dst_blocks].set(
+                blocks_of(ck, arena["k"].dtype)),
+            "v": arena["v"].at[:, dst_blocks].set(
+                blocks_of(cv, arena["v"].dtype)),
+            "pos": arena["pos"].at[dst_blocks].set(pos_rows)}
+
+
+class EncDecCachePool:
+    """Pooled serving cache for the encoder-decoder family.
+
+    SELF-attention KV is dense per-slot (the CachePool layout: encdec
+    decode budgets are short), but CROSS-attention K/V — one encoder
+    pass's projections, read-only for the request's whole lifetime —
+    live in a refcounted, content-addressed block arena keyed by a
+    digest of the raw input frames (frames_key). Two requests decoding
+    the SAME input (beams, retries, resends) share the encoder blocks
+    instead of copying them, exactly like shared prompt prefixes in
+    PagedCachePool: the second insert's placements come back
+    shared=True and the blocks' refcounts bump to 2. retain_blocks
+    parks a fully-drained input's blocks on the warm LRU, so a
+    follow-up request revives them copy-free (no re-encode write).
+
+    The device cache is ONE pytree the jitted decode step consumes and
+    passes through donated (arenas and table never round-trip the host
+    between mutations):
+      {"slots": {"self": (L, B, rows, ...) KV}, "index": (B,),
+       "cross": {"k"/"v": (L, n_blocks+1, bs, H, hd),
+                 "pos": (n_blocks+1, bs), "table": (B, max_blocks)}}
+    """
+
+    def __init__(self, arch, max_batch: int, max_len: int, *,
+                 block_size: int = 16, slots_budget: Optional[int] = None,
+                 share_prefix: bool = True, retain_blocks: int = 0,
+                 mesh=None):
+        if arch.kind != "encdec":
+            raise ValueError(
+                f"EncDecCachePool needs an encdec arch, got {arch.kind}")
+        cfg = arch.cfg
+        self.arch = arch
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.block_size = block_size
+        self.share_prefix = share_prefix
+        self.n_frames = cfg.n_frames
+        self.padded_frames = -(-cfg.n_frames // block_size) * block_size
+        budget = slots_budget if slots_budget is not None else max_batch
+        n_blocks = budget * (self.padded_frames // block_size)
+        # budget=1, plen=padded_len=ring_len=padded_frames: no decode
+        # rows ever overwrite the chain and the layout is never rolled,
+        # so EVERY block is content-keyed and shareable.
+        self.map = BlockTableMap(
+            max_batch, self.padded_frames, block_size, n_blocks + 1,
+            retain_limit=min(retain_blocks, max(n_blocks - 1, 0)),
+            src_len=self.padded_frames)
+        cache = arch.init_cache(max_batch, max_len, per_slot=True)
+        L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        dt = cfg.compute_dtype
+        cache["cross"] = {
+            "k": jnp.zeros((L, n_blocks + 1, block_size, H, hd), dt),
+            "v": jnp.zeros((L, n_blocks + 1, block_size, H, hd), dt),
+            "pos": jnp.full((n_blocks + 1, block_size), -1, jnp.int32),
+            "table": jnp.asarray(self.map.table),
+        }
+        self._blank = arch.init_cache(1, max_len, per_slot=True)
+        self.mesh = _live_mesh(mesh)
+        if self.mesh is None:
+            self._shardings = None
+            self._insert = jax.jit(_insert_row, donate_argnums=0)
+            self._cross = jax.jit(_cross_insert, donate_argnums=0)
+        else:
+            sh = shd.cache_shardings(jax.eval_shape(lambda: cache),
+                                     self.mesh)
+            self._shardings = sh
+            cache = jax.device_put(cache, sh)
+            self._insert = jax.jit(
+                _insert_row, donate_argnums=0,
+                out_shardings={"slots": sh["slots"], "index": sh["index"]})
+            self._cross = jax.jit(
+                _cross_insert, donate_argnums=0,
+                out_shardings={n: sh["cross"][n]
+                               for n in ("k", "v", "pos")})
+        self.cache = cache
+        self.shared_hits = 0   # cross blocks reused instead of re-encoded
+
+    def _table_device(self):
+        if self.mesh is None:
+            return jnp.asarray(self.map.table)
+        return jax.device_put(np.ascontiguousarray(self.map.table),
+                              self._shardings["cross"]["table"])
+
+    # ---------------- admission ----------------
+
+    def admission_plan(self, frames) -> dict:
+        """{"cross": fresh blocks + retained revivals} an insert of this
+        input would consume — the engine's admission gate compares it
+        against admissible_blocks()."""
+        key = frames_key(frames, self.padded_frames)
+        return {"cross": sum(self.map.admission_plan(
+            key, self.padded_frames, self.padded_frames, 1,
+            self.share_prefix))}
+
+    def admissible_blocks(self) -> dict:
+        return {"cross": self.map.admissible()}
+
+    def free_blocks(self) -> dict:
+        return {"cross": self.map.alloc.n_free}
+
+    def insert(self, request_cache: PyTree, slot: int, *, frames,
+               cross_k, cross_v):
+        """Admit one prefilled request: reserve/retain its cross block
+        chain, write the fresh blocks (shared placements skip the write
+        entirely — the arena content is already there), and land the
+        self-attention rows. Atomic: on NoBlocksError nothing is left
+        allocated and the device cache is untouched.
+
+        request_cache: {"slots","index"} batch-1 slice of the admission
+          prefill cache. cross_k/cross_v: (L, Sm, H, hd) the request's
+          dense cross projections (the prefill cache's "cross" leaves
+          sliced on the batch axis). frames: the raw (n_frames, d)
+          input, used only for content keying."""
+        if not (0 <= slot < self.max_batch):
+            raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        key = frames_key(frames, self.padded_frames)
+        placed = self.map.insert(slot, key, self.padded_frames,
+                                 self.padded_frames, 1, self.share_prefix)
+        self.shared_hits += sum(p.shared for p in placed)
+        dst = np.zeros(self.map.max_blocks, np.int32)
+        for p in placed:
+            if not p.shared and not p.revived:
+                dst[p.chain_pos] = p.block
+        selfpart = self._insert(
+            {"slots": self.cache["slots"], "index": self.cache["index"]},
+            request_cache, slot)
+        cross = self.cache["cross"]
+        if dst.any():
+            bs = self.block_size
+            rows = np.arange(self.map.max_blocks * bs,
+                             dtype=np.int32).reshape(-1, bs)
+            pos_rows = np.where((dst != 0)[:, None] & (rows < self.n_frames),
+                                rows, -1).astype(np.int32)
+            arena = self._cross({n: cross[n] for n in ("k", "v", "pos")},
+                                cross_k, cross_v, jnp.asarray(dst),
+                                jnp.asarray(pos_rows))
+            cross = dict(arena)
+        else:
+            cross = {n: cross[n] for n in ("k", "v", "pos")}
+        cross["table"] = self._table_device()
+        self.cache = {**selfpart, "cross": cross}
+
+    def evict(self, slot: int):
+        """Release the slot's cross blocks (last holder parks them warm
+        when retention is on) and blank its self-attention rows."""
+        if not (0 <= slot < self.max_batch):
+            raise IndexError(f"slot {slot} out of range [0, {self.max_batch})")
+        self.map.evict(slot)
+        selfpart = self._insert(
+            {"slots": self.cache["slots"], "index": self.cache["index"]},
+            self._blank, slot)
+        cross = {n: self.cache["cross"][n] for n in ("k", "v", "pos")}
+        cross["table"] = self._table_device()
+        self.cache = {**selfpart, "cross": cross}
+
+    # ---------------- introspection ----------------
+
+    def lengths(self):
+        """Per-slot write cursors (host array) — diagnostic only."""
+        return np.asarray(self.cache["index"])
+
+    @property
+    def retained_hits(self) -> int:
+        return self.map.retained_hits
+
+    @property
+    def prefix_misses(self) -> int:
+        return self.map.prefix_misses
+
+    @property
+    def retained_hit_rate(self) -> float:
+        from repro.serving.metrics import hit_rate
+        return hit_rate(self.retained_hits, self.prefix_misses)
+
+    def retained_blocks(self) -> dict:
+        return {"cross": self.map.n_retained}
+
+    def check_invariants(self):
+        """Assert the cross map's allocator/table/registry invariants
+        (see BlockTableMap.check_invariants) — test hook."""
+        self.map.check_invariants()

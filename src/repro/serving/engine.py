@@ -44,6 +44,23 @@ jitted decode step advances every active slot per iteration — no
 recompiles for the lifetime of the engine, block churn (growth and
 preemption included).
 
+WORKLOAD FAMILIES: one engine core serves three of them, selected by
+the arch kind + `task`. (a) decoder generation — everything above.
+(b) encoder-decoder generation (`task="generate"`, encdec arch): the
+encoder runs inside the admission prefill and its per-layer cross K/V
+is REGISTERED in a content-addressed, refcounted block arena
+(serving.cache_pool.EncDecCachePool) keyed by the raw input frames —
+two requests decoding the same input (beams, retries) share the
+encoder blocks copy-free, exactly like shared prompt prefixes; decode
+self-attention stays dense per-slot. (c) bert scoring/embedding
+(`task="score"` / `"embed"`): no KV cache at all — admission batches
+queued requests into ONE fixed-shape forward and completes them
+immediately (a scoring slot's only state is its output, freed at
+completion). Each family runs one fixed-shape jitted step compiled
+once for the engine's lifetime, and `run_one` gives every family a
+batch-1 latency mode (fixed B=1 jits, no scheduler/admission
+overhead) whose output is token-identical to the pooled path.
+
 `ServeEngine` — the static baseline (kept for comparison + older
 callers): pads the whole request batch to a common length, prefills once,
 decodes lockstep for max(max_new_tokens) steps. Requests admitted
@@ -118,12 +135,20 @@ class Request:
     `generated` is filled by the engine on completion ((n,) int32,
     n <= max_new_tokens); `rid` is assigned at submit and seeds the
     sampler's per-request PRNG key; `trace` records submit/admit/token
-    timestamps for the latency report."""
+    timestamps for the latency report.
+
+    Family extras: `frames` is the raw encoder input an encdec request
+    decodes against ((n_frames, d_model) float32, required for encdec
+    engines); `embedding` is filled by bert engines on completion with
+    the fp32 tanh-pooled [CLS] vector (task="score" additionally fills
+    `generated` with the per-position masked-LM argmax ids)."""
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int = 16
     generated: Optional[np.ndarray] = None
     rid: Optional[int] = None
     trace: RequestTrace = dataclasses.field(default_factory=RequestTrace)
+    frames: Optional[np.ndarray] = None      # encdec encoder input
+    embedding: Optional[np.ndarray] = None   # bert pooled [CLS] output
 
 
 def apply_serving_policy(arch, params, policy=None):
@@ -167,6 +192,22 @@ def build_prefill_fn(arch, max_len: int):
         logits, cache = arch.prefill(
             params, {"tokens": tokens}, cache_len=max_len,
             per_slot=True, positions=positions)
+        return logits.astype(jnp.float32), cache
+    return jax.jit(prefill)
+
+
+def build_encdec_prefill_fn(arch, max_len: int):
+    """Encoder-decoder prefill: one jitted pass runs the ENCODER over
+    the raw frames and the masked decoder prefill over the prompt.
+    Returns (fp32 last-position logits, cache) where the cache carries
+    the per-slot self-attention rows plus dense per-layer cross K/V
+    under "cross" — the projections the pool registers as shared,
+    read-only arena blocks. Retraces per padded prompt shape, exactly
+    like build_prefill_fn."""
+    def prefill(params, tokens, positions, frames):
+        logits, cache = arch.prefill(
+            params, {"tokens": tokens, "frames": frames},
+            cache_len=max_len, per_slot=True, positions=positions)
         return logits.astype(jnp.float32), cache
     return jax.jit(prefill)
 
@@ -228,6 +269,47 @@ def synthetic_requests(n: int, vocab: int, *, prompt_len: int,
         tail = rng.integers(5, vocab, size=plen).astype(np.int32)
         reqs.append(Request(prompt=np.concatenate([prefix, tail]),
                             max_new_tokens=new))
+    return reqs
+
+
+def synthetic_scoring_requests(n: int, vocab: int, *, prompt_len: int,
+                               seed: int = 0):
+    """Scoring/embedding workload: mixed prompt lengths in
+    [prompt_len/2, prompt_len]. Scoring requests carry no generation
+    budget (they complete at admission); max_new_tokens=1 is inert.
+    Pure function of the arguments, like synthetic_requests."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        reqs.append(Request(
+            prompt=rng.integers(5, vocab, size=plen).astype(np.int32),
+            max_new_tokens=1))
+    return reqs
+
+
+def synthetic_encdec_requests(n: int, vocab: int, *, n_frames: int,
+                              d_model: int, prompt_len: int,
+                              new_tokens: int,
+                              n_inputs: Optional[int] = None,
+                              seed: int = 0):
+    """Encoder-decoder workload: each request carries an encoder input
+    (`frames`) plus a decoder prompt and budget. n_inputs < n reuses
+    the inputs round-robin — the "N beams / retries of one utterance"
+    traffic whose encoder blocks the cross arena stores once and shares
+    (refcounted), exactly like shared prompt prefixes. Pure function of
+    the arguments."""
+    rng = np.random.default_rng(seed)
+    n_inputs = n if n_inputs is None else n_inputs
+    frames = [rng.standard_normal((n_frames, d_model)).astype(np.float32)
+              for _ in range(n_inputs)]
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        new = int(rng.integers(max(1, new_tokens // 2), new_tokens + 1))
+        reqs.append(Request(
+            prompt=rng.integers(5, vocab, size=plen).astype(np.int32),
+            max_new_tokens=new, frames=frames[i % n_inputs]))
     return reqs
 
 
@@ -325,7 +407,8 @@ class ContinuousEngine:
                  slo_ms: Optional[float] = None, preempt: bool = True,
                  retain_blocks: Optional[int] = None, watermark: int = 0,
                  chunk_budget: Optional[int] = None,
-                 spec_draft=None, spec_k: int = 4):
+                 spec_draft=None, spec_k: int = 4,
+                 task: str = "generate"):
         """See the class/module docstring for the serving model. Key args:
 
         max_batch: decode slot-pool size (the fixed step batch).
@@ -384,9 +467,49 @@ class ContinuousEngine:
         spec_k: tokens proposed/verified per round (>= 2). Sliding-
             window rings gain a spec_k - 1 row margin; everything else
             is exactly the non-speculative layout.
+        task: workload family. "generate" (default) is autoregressive
+            decode — decoder archs, and encdec archs whose encoder
+            output lands in the shared cross-attention block arena
+            (serving.cache_pool.EncDecCachePool). "score" / "embed"
+            need a bert arch: batched masked-LM scoring / [CLS]
+            embedding through ONE fixed-shape forward — no KV cache,
+            requests complete at admission and their slots free
+            immediately.
         """
+        if task not in ("generate", "score", "embed"):
+            raise ValueError(
+                f"task must be 'generate', 'score' or 'embed', got {task!r}")
+        if arch.kind == "bert":
+            if task == "generate":
+                raise ValueError(
+                    "bert archs serve scoring/embedding, not generation: "
+                    "pass task='score' or task='embed'")
+        elif arch.kind in ("decoder", "encdec"):
+            if task != "generate":
+                raise ValueError(
+                    f"task={task!r} needs a bert arch, got {arch.kind!r}")
+        else:
+            raise ValueError(f"cannot serve arch kind {arch.kind!r}")
+        self.task = task
+        self.encdec = arch.kind == "encdec"
+        self.bert = arch.kind == "bert"
         if arch.kind != "decoder":
-            raise ValueError(f"serving needs a decoder arch, got {arch.kind}")
+            if chunk_budget is not None:
+                raise ValueError(
+                    f"chunk_budget is decoder-only, got arch kind "
+                    f"{arch.kind!r}")
+            if spec_draft is not None:
+                raise ValueError(
+                    f"spec_draft is decoder-only, got arch kind "
+                    f"{arch.kind!r}")
+            if attn_kernel == "paged":
+                raise ValueError(
+                    "attn_kernel='paged' is decoder-only: the encdec "
+                    "cross arena reads through the dense XLA gather")
+        if self.encdec and cache != "paged":
+            raise ValueError(
+                "encdec serving requires cache='paged': the encoder "
+                "output lives in the shared cross-attention block arena")
         if cache not in ("paged", "dense"):
             raise ValueError(f"cache must be 'paged' or 'dense', got {cache}")
         if growth not in ("lazy", "eager"):
@@ -423,7 +546,8 @@ class ContinuousEngine:
                     f"vocab {arch.cfg.vocab}")
         self.spec_k = spec_k if self.spec else 1
         self.arch, self.params = apply_serving_policy(arch, params, policy)
-        if attn_kernel != self.arch.cfg.attn_kernel:
+        if (arch.kind == "decoder"
+                and attn_kernel != self.arch.cfg.attn_kernel):
             self.arch = dataclasses.replace(
                 self.arch, cfg=dataclasses.replace(
                     self.arch.cfg, attn_kernel=attn_kernel))
@@ -437,7 +561,7 @@ class ContinuousEngine:
                 self.params, shd.params_sharding(self.params, self.mesh))
         self.max_batch = max_batch
         self.max_len = max_len
-        self.paged = cache == "paged"
+        self.paged = cache == "paged" and arch.kind == "decoder"
         self.sampler = Sampler.parse(sampler)
         # prefill lengths round up to bucket multiples: fewer distinct
         # prompt shapes -> fewer prefill compilations (the masked left-pad
@@ -457,7 +581,29 @@ class ContinuousEngine:
             # multiples or the final chunk could be unreachable
             g = chunk_granularity(self.arch.cfg)
             self.prefill_bucket = -(-self.prefill_bucket // g) * g
-        if self.paged:
+        if self.bert:
+            # scoring/embedding: no KV growth — a slot's only state is
+            # its output, freed at completion. There is no cache pool;
+            # ONE fixed (max_batch, max_len) forward is the whole step.
+            if max_len > self.arch.cfg.max_pos:
+                raise ValueError(
+                    f"max_len {max_len} exceeds the bert position table "
+                    f"({self.arch.cfg.max_pos})")
+            self.pool = None
+            self.score_len = max_len
+            prefill_len = max_len
+        elif self.encdec:
+            from repro.serving.cache_pool import EncDecCachePool
+            if retain_blocks is None:
+                # same sizing rationale as the decoder pool below; the
+                # pool caps the bound at its cross-arena size anyway
+                retain_blocks = max(1, max_batch * (max_len // block_size))
+            self.pool = EncDecCachePool(
+                self.arch, max_batch, max_len, block_size=block_size,
+                slots_budget=slots_budget, share_prefix=share_prefix,
+                retain_blocks=retain_blocks, mesh=self.mesh)
+            prefill_len = max_len
+        elif self.paged:
             if retain_blocks is None:
                 # one BATCH's worth, not one request's: the bound must
                 # cover the sum of distinct hot prefixes or cyclic
@@ -483,24 +629,40 @@ class ContinuousEngine:
             self.pool = CachePool(self.arch, max_batch, max_len,
                                   mesh=self.mesh)
             prefill_len = max_len
+        self._prefill_len = prefill_len
         self.scheduler = Scheduler(max_batch)
         slo_s = slo_ms / 1e3 if slo_ms is not None else None
         self.sched_policy = SchedulingPolicy.parse(sched_policy, slo_s=slo_s)
         self.preempt_enabled = preempt
         self.on_step = on_step          # callback(dict) per decode step
         params_like = cache_like = None
-        if self.mesh is not None:
+        if self.mesh is not None and not self.bert:
             step_cache = ({**self.pool.cache,
                            "tables": self.pool.device_tables()}
                           if self.paged else self.pool.cache)
             params_like = jax.eval_shape(lambda: self.params)
             cache_like = jax.eval_shape(lambda: step_cache)
-        self._step = build_serve_step(self.arch.decode_step, self.mesh,
-                                      sampler=self.sampler,
-                                      params_like=params_like,
-                                      cache_like=cache_like)
-        self._prefill = build_prefill_fn(self.arch, prefill_len)
+        if self.bert:
+            # the scoring family's ONE step: a fixed-shape jit at
+            # (max_batch, score_len) — short batches replicate their
+            # last row (the pow2-group padding idiom collapsed to a
+            # single bucket), so _cache_size() stays 1 for the engine's
+            # whole lifetime. Sharded params propagate SPMD partitioning
+            # through the plain jit like the prefill/chunk forwards.
+            self._score = jax.jit(self.arch.score)
+            self._step = None
+            self._prefill = None
+        else:
+            self._step = build_serve_step(self.arch.decode_step, self.mesh,
+                                          sampler=self.sampler,
+                                          params_like=params_like,
+                                          cache_like=cache_like)
+            self._prefill = (build_encdec_prefill_fn(self.arch, prefill_len)
+                             if self.encdec
+                             else build_prefill_fn(self.arch, prefill_len))
         self._first, self._wants_keys = build_first_token_fn(self.sampler)
+        self._lat_step = None    # batch-1 latency-mode jits, built lazily
+        self._lat_score = None   # (run_one) and compiled exactly once
         self._admission = None
         if chunk_budget is not None:
             self._admission = AdmissionController(
@@ -558,6 +720,26 @@ class ContinuousEngine:
     def submit(self, request: Request):
         """Queue a request (FIFO). Validates it can ever fit (prompt +
         budget <= max_len); admission happens at the next step()."""
+        if self.bert:
+            if not 1 <= len(request.prompt) <= self.score_len:
+                raise ValueError(
+                    f"scoring prompt length {len(request.prompt)} must "
+                    f"be in [1, {self.score_len}]")
+            if request.rid is None:
+                request.rid = self._next_rid
+                self._next_rid += 1
+            request.trace.mark_submit()
+            self.scheduler.submit(request)
+            return
+        if self.encdec:
+            if request.frames is None:
+                raise ValueError(
+                    "encdec requests need `frames` (the encoder input)")
+            nf = self.arch.cfg.n_frames
+            if np.asarray(request.frames).shape[0] != nf:
+                raise ValueError(
+                    f"frames must carry {nf} rows, got "
+                    f"{np.asarray(request.frames).shape[0]}")
         if len(request.prompt) + request.max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt {len(request.prompt)} + max_new_tokens "
@@ -667,6 +849,13 @@ class ContinuousEngine:
         sharing with the in-flight plans (conservative: their prefix
         blocks are not registered yet), so a True can never turn into an
         allocator failure."""
+        if self.encdec:
+            need = self.pool.admission_plan(
+                np.asarray(req.frames, np.float32))
+            avail = self.pool.admissible_blocks()
+            ok = all(n + pending.get(si, 0) <= avail[si]
+                     for si, n in need.items())
+            return ok, need
         if not self.paged:
             return True, None
         budget = req.max_new_tokens - len(self._resume_of(req))
@@ -718,8 +907,16 @@ class ContinuousEngine:
                 tokens, positions, lens = pad_prompts(
                     prompts + [prompts[-1]] * (n_pad - n),
                     self.prefill_bucket, pad_len=padded)
-                logits, batch_cache = self._prefill(
-                    self.params, jnp.asarray(tokens), jnp.asarray(positions))
+                if self.encdec:
+                    frames = np.stack([np.asarray(r.frames, np.float32)
+                                       for r in pad_reqs])
+                    logits, batch_cache = self._prefill(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(positions), jnp.asarray(frames))
+                else:
+                    logits, batch_cache = self._prefill(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(positions))
                 draft_cache = None
                 if self.spec:
                     # the draft prefills the SAME padded group: its slot
@@ -738,7 +935,18 @@ class ContinuousEngine:
                     req_cache = _slice_request(batch_cache, g)
                     resume = self._resume_of(req)
                     try:
-                        if self.paged:
+                        if self.encdec:
+                            # register the encoder output: the request's
+                            # dense cross projections (batch row g of
+                            # the prefill cache) land in — or share —
+                            # refcounted arena blocks keyed by the raw
+                            # input frames
+                            self.pool.insert(
+                                req_cache, slot,
+                                frames=np.asarray(req.frames, np.float32),
+                                cross_k=batch_cache["cross"]["k"][:, g],
+                                cross_v=batch_cache["cross"]["v"][:, g])
+                        elif self.paged:
                             self.pool.insert(
                                 req_cache, slot, prompt=prompts[g],
                                 plen=len(prompts[g]), padded_len=padded,
@@ -941,7 +1149,10 @@ class ContinuousEngine:
     def step(self) -> bool:
         """One engine iteration: SLO evictions, admissions, lazy chain
         growth (with preemption), then one pooled decode step. Returns
-        False when no work remains."""
+        False when no work remains. (bert engines route to the scoring
+        iteration: admit, one batched forward, complete.)"""
+        if self.bert:
+            return self._step_scoring()
         self._evict_overdue()
         if self._admission is not None:
             self._admit_chunked()
@@ -978,8 +1189,14 @@ class ContinuousEngine:
                 args += (fold_keys(jnp.asarray(self._req_keys),
                                    jnp.asarray(tvec)),)
             nxt, new_cache = self._step(*args)
-            self.pool.cache = {"slots": new_cache["slots"],
-                               "index": new_cache["index"]}
+            if self.encdec:
+                # the cross arenas + block table are VALUES inside the
+                # donated cache pytree: keep the whole output so they
+                # alias through to the next step with zero uploads
+                self.pool.cache = new_cache
+            else:
+                self.pool.cache = {"slots": new_cache["slots"],
+                                   "index": new_cache["index"]}
             if self.paged:
                 # reuse the pass-through table outputs next step: zero
                 # table uploads while no admission/eviction churns the
@@ -1007,6 +1224,55 @@ class ContinuousEngine:
                             accepted_tokens=self.accepted_tokens)
             self.on_step(info)
         return self.scheduler.has_work
+
+    def _step_scoring(self) -> bool:
+        """One scoring/embedding iteration: admit up to max_batch queued
+        requests in POLICY order, run ONE fixed-shape batched forward,
+        and complete every admitted request immediately. Scoring holds
+        no KV — a slot's only state is its output, so the slots free at
+        completion and the next step admits a fresh batch. The batch is
+        padded to (max_batch, score_len) by replicating the last row
+        (valid compute, outputs discarded), keeping the step at a single
+        compiled shape."""
+        sched = self.scheduler
+        self._depth.sample(sched.queued)
+        pairs = []
+        while sched.free_slots and sched.queued:
+            i = self.sched_policy.pick(sched.queue_items(),
+                                       self._policy_ctx(warm_cache={}))
+            pairs.append(sched.assign_at(i))
+        if not pairs:
+            return sched.has_work
+        prompts = [np.asarray(r.prompt, np.int32) for _, r in pairs]
+        n = len(pairs)
+        tokens, positions, lens = pad_prompts(
+            prompts + [prompts[-1]] * (self.max_batch - n), 1,
+            pad_len=self.score_len)
+        ids, pooled = self._score(self.params, jnp.asarray(tokens),
+                                  jnp.asarray(positions))
+        ids = np.asarray(ids)
+        pooled = np.asarray(pooled)
+        now = time.perf_counter()
+        self.steps_run += 1
+        self.slot_steps += n
+        self.max_concurrent = max(self.max_concurrent, n)
+        for g, (slot, req) in enumerate(pairs):
+            plen = int(lens[g])
+            req.trace.admit_t = now
+            self._admit_counter += 1
+            req.embedding = pooled[g].copy()
+            if self.task == "score":
+                # per-position masked-LM argmax over the VALID tail
+                # (the left-pad columns are replica garbage)
+                req.generated = ids[g, self.score_len - plen:].copy()
+                for _ in range(plen):
+                    req.trace.mark_token(now)
+            else:
+                req.generated = np.zeros(0, np.int32)
+                req.trace.mark_token(now)
+            sched.complete(slot)
+            req.trace.done_t = now
+        return sched.has_work
 
     def _spec_round(self, active):
         """One draft-verify round over the active decode slots.
@@ -1142,6 +1408,121 @@ class ContinuousEngine:
         self.run(requests)
         return requests
 
+    # ---------------- batch-1 latency mode ----------------
+
+    def run_one(self, request: Request) -> Request:
+        """Serve ONE request end to end through fixed B=1 jitted steps,
+        skipping scheduler/admission/pool bookkeeping entirely — the
+        interactive latency path. The B=1 jits build lazily on first use
+        and compile exactly once per engine lifetime (their
+        _cache_size() stays 1); output is token-identical to pooled
+        serving of the same request: same left-pad masking, same sampler
+        keys, and — encdec — the same cross contraction length (the
+        dense cross K/V is padded out to the arena's blocked frame
+        count, pads masked like arena filler)."""
+        if request.rid is None:
+            request.rid = self._next_rid
+            self._next_rid += 1
+        if request.trace.submit_t == 0.0:
+            request.trace.mark_submit()
+        if self.bert:
+            return self._run_one_scoring(request)
+        if self.encdec and request.frames is None:
+            raise ValueError(
+                "encdec requests need `frames` (the encoder input)")
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt {len(request.prompt)} + max_new_tokens "
+                f"{request.max_new_tokens} exceeds max_len {self.max_len}")
+        return self._run_one_decode(request)
+
+    def _pad_cross(self, cache):
+        """Pad a batch-1 dense cross K/V out to the arena's blocked
+        frame count (pad rows carry pos -1, masked exactly like arena
+        filler): the decode contraction length matches the pooled
+        engine's block gather, which keeps batch-1 output bitwise
+        identical to the pooled stream."""
+        ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+        sm = ck.shape[2]
+        pf = self.pool.padded_frames
+        if pf == sm:
+            return cache
+        pos = jnp.concatenate([jnp.arange(sm, dtype=jnp.int32),
+                               jnp.full((pf - sm,), -1, jnp.int32)])
+        w = ((0, 0), (0, 0), (0, pf - sm), (0, 0), (0, 0))
+        return {**cache, "cross": {"k": jnp.pad(ck, w),
+                                   "v": jnp.pad(cv, w), "pos": pos}}
+
+    def _run_one_decode(self, request: Request) -> Request:
+        prompt = np.asarray(request.prompt, np.int32)
+        tokens, positions, lens = pad_prompts([prompt], self.prefill_bucket)
+        if tokens.shape[1] + request.max_new_tokens - 1 > self._prefill_len:
+            raise ValueError(
+                f"padded prompt {tokens.shape[1]} + budget "
+                f"{request.max_new_tokens} exceeds the prefill cache "
+                f"({self._prefill_len} rows)")
+        if self.encdec:
+            frames = jnp.asarray(
+                np.asarray(request.frames, np.float32)[None])
+            logits, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                          jnp.asarray(positions), frames)
+            cache = self._pad_cross(cache)
+        else:
+            logits, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                          jnp.asarray(positions))
+        first, rkeys = first_tokens(self._first, self.sampler,
+                                    self._wants_keys, logits, [request])
+        now = time.perf_counter()
+        request.trace.admit_t = now
+        request.trace.mark_token(now)
+        emitted = [int(first[0])]
+        if self._lat_step is None:
+            self._lat_step = build_serve_step(self.arch.decode_step, None,
+                                              sampler=self.sampler)
+        tok = np.array([[emitted[0]]], np.int32)
+        pos = np.array([[int(lens[0])]], np.int32)
+        rk = jnp.asarray(rkeys) if rkeys is not None else None
+        while len(emitted) < request.max_new_tokens:
+            args = (self.params, jnp.asarray(tok), jnp.asarray(pos), cache)
+            if self._wants_keys:
+                args += (fold_keys(rk, jnp.asarray([len(emitted)],
+                                                   jnp.int32)),)
+            nxt, cache = self._lat_step(*args)
+            t = int(np.asarray(nxt)[0])
+            request.trace.mark_token(time.perf_counter())
+            emitted.append(t)
+            tok[0, 0] = t
+            pos[0, 0] += 1
+        request.generated = np.array(emitted, np.int32)
+        request.trace.done_t = request.trace.token_ts[-1]
+        return request
+
+    def _run_one_scoring(self, request: Request) -> Request:
+        if self._lat_score is None:
+            # a SEPARATE jit from the batched _score: each compiles its
+            # one shape once — (1, score_len) here — so both stay at
+            # _cache_size() == 1
+            self._lat_score = jax.jit(self.arch.score)
+        prompt = np.asarray(request.prompt, np.int32)
+        tokens, positions, lens = pad_prompts([prompt], 1,
+                                              pad_len=self.score_len)
+        ids, pooled = self._lat_score(self.params, jnp.asarray(tokens),
+                                      jnp.asarray(positions))
+        now = time.perf_counter()
+        request.trace.admit_t = now
+        request.embedding = np.asarray(pooled)[0].copy()
+        plen = int(lens[0])
+        if self.task == "score":
+            request.generated = np.asarray(
+                ids)[0, self.score_len - plen:].copy()
+            for _ in range(plen):
+                request.trace.mark_token(now)
+        else:
+            request.generated = np.zeros(0, np.int32)
+            request.trace.mark_token(now)
+        request.trace.done_t = now
+        return request
+
     def report(self, wall_s: float) -> dict:
         """Aggregate throughput/latency stats for completed requests:
         tokens/s, TTFT/ITL percentiles, slot utilization, decode-step
@@ -1159,8 +1540,14 @@ class ContinuousEngine:
         stats["mesh_devices"] = (self.mesh.devices.size
                                  if self.mesh is not None else 1)
         stats.update(self._depth.stats())
+        stats["task"] = self.task
         if self.paged:
             stats["growth"] = self.pool.growth
+            stats["shared_block_hits"] = self.pool.shared_hits
+            stats["retained_block_hits"] = self.pool.retained_hits
+            stats["prefix_misses"] = self.pool.prefix_misses
+            stats["retained_hit_rate"] = self.pool.retained_hit_rate
+        if self.encdec:
             stats["shared_block_hits"] = self.pool.shared_hits
             stats["retained_block_hits"] = self.pool.retained_hits
             stats["prefix_misses"] = self.pool.prefix_misses

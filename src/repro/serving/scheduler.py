@@ -163,7 +163,10 @@ class Scheduler:
         return self._slot_ticket[slot]
 
     def complete(self, slot: int):
-        """Release a slot whose request finished; returns the request."""
+        """Release a slot whose request finished; returns the request.
+        Same-step assign -> complete is a legal lifecycle: the scoring
+        family finishes requests AT admission (one batched score call,
+        no decode), so a slot may bind and free inside one engine step."""
         if slot not in self.active:
             raise SchedulerError(f"complete() on inactive slot {slot}")
         req = self.active.pop(slot)
@@ -186,6 +189,9 @@ class Scheduler:
         tickets = [t for t, _ in self._queue]
         assert tickets == sorted(tickets), "queue not in arrival order"
         assert len(set(tickets)) == len(tickets), "duplicate tickets"
+        live = [r for _, r in self._queue] + list(self.active.values())
+        assert not set(map(id, self.completed)) & set(map(id, live)), (
+            "request both completed and live (queued/active)")
 
 
 # ---------------------------------------------------------------------------

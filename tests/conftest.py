@@ -14,6 +14,41 @@ def rng():
 
 
 # ---------------------------------------------------------------------------
+# per-suite duration report (scripts/run_tests.sh --durations-report):
+# REPRO_DURATIONS_JSON=<path> makes the session write accumulated
+# setup+call+teardown wall clock per test module as machine-readable JSON,
+# so successive PRs can track where tier-1 time goes without parsing -q
+# output. Inert (zero hooks' work) when the env var is unset.
+# ---------------------------------------------------------------------------
+
+_suite_durations = {}
+
+
+def pytest_runtest_logreport(report):
+    if not os.environ.get("REPRO_DURATIONS_JSON"):
+        return
+    module = report.nodeid.split("::", 1)[0]
+    _suite_durations[module] = (_suite_durations.get(module, 0.0)
+                                + report.duration)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    out = os.environ.get("REPRO_DURATIONS_JSON")
+    if not out:
+        return
+    import json
+    blob = {
+        "total_s": round(sum(_suite_durations.values()), 3),
+        "suites": {m: round(s, 3)
+                   for m, s in sorted(_suite_durations.items(),
+                                      key=lambda kv: -kv[1])},
+    }
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=2)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
 # shared serving-test helpers (tests/test_serving_engine.py,
 # test_paged_cache.py, test_sampling.py): one reduced-arch cache per run and
 # ONE request-generation convention — the differential claims across files

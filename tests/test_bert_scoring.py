@@ -1,0 +1,146 @@
+"""BERT scoring/embedding serving family: the same ContinuousEngine
+core serves masked-LM scoring and pooled-embedding requests.
+
+The family contract:
+
+  * requests complete AT admission — one fixed (max_batch, score_len)
+    score call serves up to max_batch requests, there is no KV cache
+    and no decode loop, and slots free inside the same step;
+  * the score jit compiles exactly once for the engine's lifetime
+    (short batches replicate their last row — the pow2-group padding
+    idiom collapsed to a single bucket), as does the batch-1 run_one
+    path's (1, score_len) jit;
+  * batched and batch-1 outputs are bitwise identical (per-row
+    independence + the same left-pad masking).
+"""
+import numpy as np
+import pytest
+
+from conftest import setup_serving_arch as setup_arch
+from repro.serving import (ContinuousEngine, Request,
+                           synthetic_scoring_requests)
+
+pytestmark = [pytest.mark.serving, pytest.mark.bert]
+
+ARCH = "bert-large"
+
+
+def _engine(arch, params, task="score", **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 16)
+    return ContinuousEngine(arch, params, task=task, **kw)
+
+
+def _requests(arch, n, *, seed=2, prompt_len=12):
+    return synthetic_scoring_requests(n, arch.cfg.vocab,
+                                      prompt_len=prompt_len, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# scoring lifecycle: complete-at-admission, one compile
+# ---------------------------------------------------------------------------
+
+def test_scoring_completes_all_requests_with_one_compile():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    reqs = _requests(arch, 7)              # 2 batches: one full, one short
+    eng.run(reqs)
+    assert len(eng.scheduler.completed) == 7
+    for r in reqs:
+        assert len(r.generated) == len(r.prompt)   # MLM ids, valid tail
+        assert r.embedding.shape == (arch.cfg.d_model,)
+        assert r.embedding.dtype == np.float32
+    # full batches, a replicated-row short batch, varied prompt lengths:
+    # one (max_batch, score_len) compile covers them all
+    assert eng._score._cache_size() == 1
+    eng.scheduler.check_invariants()
+
+
+def test_scoring_admits_in_policy_order():
+    """fifo admission: the first max_batch submissions finish in the
+    first step, the rest in the second — completion order is arrival
+    order because scoring slots free at completion."""
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    reqs = _requests(arch, 6, seed=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert [r.rid for r in eng.scheduler.completed] == \
+        [r.rid for r in reqs[:4]]
+    eng.step()
+    assert [r.rid for r in eng.scheduler.completed] == \
+        [r.rid for r in reqs]
+    assert not eng.scheduler.has_work
+
+
+def test_embed_task_returns_embedding_only():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params, task="embed")
+    reqs = _requests(arch, 3, seed=6)
+    eng.run(reqs)
+    for r in reqs:
+        assert len(r.generated) == 0       # no token output
+        assert r.embedding.shape == (arch.cfg.d_model,)
+
+
+# ---------------------------------------------------------------------------
+# batch-1 latency mode: bitwise identical, compiled once
+# ---------------------------------------------------------------------------
+
+def test_run_one_matches_batched_scoring_bitwise():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    batched = _requests(arch, 6, seed=8)
+    eng.run(batched)
+    solo = _requests(arch, 6, seed=8)      # byte-identical workload
+    for r in solo:
+        eng.run_one(r)
+    for b, s in zip(batched, solo):
+        np.testing.assert_array_equal(np.asarray(b.generated),
+                                      np.asarray(s.generated))
+        np.testing.assert_array_equal(b.embedding, s.embedding)
+    assert eng._lat_score._cache_size() == 1
+    assert eng._score._cache_size() == 1
+
+
+def test_run_one_embed_matches_batched():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params, task="embed")
+    batched = _requests(arch, 3, seed=10)
+    eng.run(batched)
+    solo = _requests(arch, 3, seed=10)
+    for r in solo:
+        eng.run_one(r)
+    for b, s in zip(batched, solo):
+        np.testing.assert_array_equal(b.embedding, s.embedding)
+        assert len(s.generated) == 0
+
+
+# ---------------------------------------------------------------------------
+# validation: the family contract is explicit, not emergent
+# ---------------------------------------------------------------------------
+
+def test_bert_arch_rejects_generate_task():
+    arch, params = setup_arch(ARCH)
+    with pytest.raises(ValueError, match="task='score'"):
+        ContinuousEngine(arch, params, task="generate")
+
+
+def test_decoder_arch_rejects_scoring_task():
+    arch, params = setup_arch("gemma2-2b")
+    with pytest.raises(ValueError, match="bert arch"):
+        ContinuousEngine(arch, params, task="score")
+
+
+def test_bert_rejects_decoder_only_features_and_long_prompts():
+    arch, params = setup_arch(ARCH)
+    with pytest.raises(ValueError, match="decoder-only"):
+        _engine(arch, params, chunk_budget=8)
+    with pytest.raises(ValueError, match="position table"):
+        _engine(arch, params, max_len=arch.cfg.max_pos + 1)
+    eng = _engine(arch, params)
+    with pytest.raises(ValueError, match="scoring prompt length"):
+        eng.submit(Request(
+            prompt=np.arange(5, 5 + eng.score_len + 1, dtype=np.int32),
+            max_new_tokens=1))

@@ -158,6 +158,34 @@ def test_serving_doc_covers_sharded_router():
         "architecture.md lost the multi-replica router diagram section")
 
 
+def test_serving_doc_covers_workload_families():
+    """The three-family engine section must keep its anchors: the
+    encdec cross-attention prefix invariants (read-only refcounted
+    chains, no COW case, retained revival), the scoring
+    complete-at-admission lifecycle, the batch-1 run_one path with its
+    bitwise-identity claim, runnable fences, and the `--task` /
+    `--shared-inputs` flag rows in both tables."""
+    serving = (ROOT / "docs" / "serving.md").read_text()
+    for anchor in ("## Workload families",
+                   "Encoder-decoder",
+                   "BERT scoring / embedding",
+                   "Batch-1 latency mode",
+                   "complete AT ADMISSION",
+                   "READ-ONLY"):
+        assert anchor in serving, f"serving.md lost its '{anchor}' anchor"
+    sect = serving.split("## Workload families", 1)[1]
+    sect = sect.split("## Flag map", 1)[0]
+    path = ROOT / "docs" / "serving.md"
+    assert any(code in sect for _, code in _fences(path, "python")), (
+        "workload-families section lost its python example")
+    assert any(code in sect for _, code in _fences(path, "bash")), (
+        "workload-families section lost its bash example")
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--task", "--shared-inputs"):
+        assert flag in serving, f"serving.md flag map lost {flag}"
+        assert flag in readme, f"README flag table lost {flag}"
+
+
 @pytest.mark.parametrize("path,line,code", _cases("python"))
 def test_python_fences_parse(path, line, code):
     try:

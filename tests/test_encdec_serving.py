@@ -1,0 +1,173 @@
+"""Encoder-decoder serving family: one ContinuousEngine core serves
+whisper-style encdec requests with the encoder output registered in the
+content-addressed cross-attention block arena.
+
+The differential claims:
+
+  * the decode step is ONE fixed-shape jit for the engine's lifetime
+    (`_cache_size() == 1`) — admission/finish churn, varied prompt
+    lengths and varied budgets never retrace it;
+  * same-input requests SHARE encoder blocks: the cross arena stores
+    each distinct `frames` input once (refcounted, like shared prompt
+    prefixes), pinned by allocator accounting (ref == 2 mid-run, zero
+    live blocks after drain) and by the pool's shared-hit counters;
+  * the batch-1 latency path (run_one) is token-identical to pooled
+    serving — the dense cross K/V is padded to the arena's blocked
+    frame count so both paths contract the same masked length.
+"""
+import numpy as np
+import pytest
+
+from conftest import setup_serving_arch as setup_arch
+from repro.serving import (ContinuousEngine, Request,
+                           synthetic_encdec_requests)
+
+pytestmark = [pytest.mark.serving, pytest.mark.encdec]
+
+ARCH = "whisper-large-v3"
+
+
+def _engine(arch, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_bucket", 8)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("cache", "paged")
+    return ContinuousEngine(arch, params, **kw)
+
+
+def _requests(arch, n, *, n_inputs=None, seed=3, prompt_len=6,
+              new_tokens=8):
+    return synthetic_encdec_requests(
+        n, arch.cfg.vocab, n_frames=arch.cfg.n_frames,
+        d_model=arch.cfg.d_model, prompt_len=prompt_len,
+        new_tokens=new_tokens, n_inputs=n_inputs, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# engine lifecycle + the no-recompile pin
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_encdec_with_one_decode_compile():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    reqs = _requests(arch, 6, n_inputs=2)
+    eng.run(reqs)
+    assert len(eng.scheduler.completed) == 6
+    for r in reqs:
+        assert len(r.generated) == r.max_new_tokens
+        assert (np.asarray(r.generated) >= 0).all()
+    # varied prompt lengths, varied budgets, admission churn across two
+    # waves of slots: exactly ONE decode-step compile
+    assert eng._step._cache_size() == 1
+    eng.pool.check_invariants()
+
+
+def test_same_input_requests_share_encoder_blocks():
+    """Two decodes of the same input share the encoder's cross blocks:
+    mid-run the arena holds ONE refcount-2 chain (not two copies), and
+    draining returns every block to free/retained — the allocator
+    accounting the tentpole acceptance pins."""
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    frames = np.random.default_rng(11).standard_normal(
+        (arch.cfg.n_frames, arch.cfg.d_model)).astype(np.float32)
+    a = Request(prompt=np.arange(5, 11, dtype=np.int32), max_new_tokens=6,
+                frames=frames)
+    b = Request(prompt=np.arange(7, 13, dtype=np.int32), max_new_tokens=6,
+                frames=frames.copy())      # same CONTENT, distinct array
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()                             # both admitted (4 free slots)
+    m = eng.pool.map
+    blocks_per_input = eng.pool.padded_frames // eng.pool.block_size
+    shared = [bi for bi in range(1, m.alloc.n_blocks)
+              if m.alloc.ref[bi] == 2]
+    assert len(shared) == blocks_per_input, (
+        "second decode of the same input must alias the first's "
+        "encoder blocks", shared)
+    assert eng.pool.shared_hits >= blocks_per_input
+    while eng.step():
+        pass
+    assert len(eng.scheduler.completed) == 2
+    assert m.alloc.n_live == 0             # drained: nothing stays live
+    eng.pool.check_invariants()
+
+
+def test_distinct_inputs_do_not_share():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    reqs = _requests(arch, 2, n_inputs=2, seed=5)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert eng.pool.shared_hits == 0
+    while eng.step():
+        pass
+    eng.pool.check_invariants()
+
+
+def test_retained_cross_blocks_revive_across_waves():
+    """Encoder blocks survive refcount 0 on the retained LRU and are
+    revived copy-free when the same input returns in a later wave."""
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    wave1 = _requests(arch, 3, n_inputs=1, seed=9)
+    eng.run(wave1)                         # drains: refcounts hit 0
+    hits_before = eng.pool.retained_hits
+    wave2 = _requests(arch, 3, n_inputs=1, seed=9)   # same frames stream
+    eng.run(wave2)
+    assert eng.pool.retained_hits > hits_before
+    assert eng._step._cache_size() == 1    # revival never retraces
+    eng.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# batch-1 latency mode: token-identical, compiled once
+# ---------------------------------------------------------------------------
+
+def test_run_one_matches_pooled_engine_bitwise():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    pooled = _requests(arch, 5, n_inputs=2, seed=7)
+    eng.run(pooled)
+    solo = _requests(arch, 5, n_inputs=2, seed=7)    # byte-identical
+    for r in solo:
+        eng.run_one(r)
+    for p, s in zip(pooled, solo):
+        np.testing.assert_array_equal(np.asarray(p.generated),
+                                      np.asarray(s.generated))
+    assert eng._lat_step._cache_size() == 1
+    assert eng._step._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# validation: the family contract is explicit, not emergent
+# ---------------------------------------------------------------------------
+
+def test_encdec_requires_paged_cache():
+    arch, params = setup_arch(ARCH)
+    with pytest.raises(ValueError, match="cache='paged'"):
+        _engine(arch, params, cache="dense")
+
+
+def test_encdec_rejects_scoring_task_and_decoder_only_features():
+    arch, params = setup_arch(ARCH)
+    with pytest.raises(ValueError, match="bert arch"):
+        _engine(arch, params, task="score")
+    with pytest.raises(ValueError, match="decoder-only"):
+        _engine(arch, params, chunk_budget=8)
+    with pytest.raises(ValueError, match="decoder-only"):
+        _engine(arch, params, spec_draft=(arch, params))
+
+
+def test_submit_requires_frames_of_the_configured_length():
+    arch, params = setup_arch(ARCH)
+    eng = _engine(arch, params)
+    with pytest.raises(ValueError, match="frames"):
+        eng.submit(Request(prompt=np.arange(5, 9, dtype=np.int32),
+                           max_new_tokens=2))
+    bad = np.zeros((arch.cfg.n_frames + 1, arch.cfg.d_model), np.float32)
+    with pytest.raises(ValueError, match="frames"):
+        eng.submit(Request(prompt=np.arange(5, 9, dtype=np.int32),
+                           max_new_tokens=2, frames=bad))

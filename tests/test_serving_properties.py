@@ -12,6 +12,8 @@ import pytest
 hypothesis = pytest.importorskip(
     "hypothesis", reason="optional test extra (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                 invariant, rule)
 
 from repro.precision.loss_scale import (DynamicLossScale, StaticLossScale,
                                         unscale_grads)
@@ -309,6 +311,120 @@ def test_block_table_map_lazy_grow_preempt_retained_lru(data, max_batch,
     assert m.alloc.n_live == 0
     assert m.alloc.n_free + m.alloc.n_retained == n_blocks - 1   # no leaks
     assert m.n_retained <= retain_limit
+
+
+# --------------------------------------------------------------------------
+# ReplicaRouter sticky bounded-LRU affinity map (serving/router.py)
+# --------------------------------------------------------------------------
+
+class _StubRouterSched:
+    """No-jax engine stub: just the scheduler surface _depth reads."""
+
+    def __init__(self):
+        self.queued, self.active, self.completed = 0, {}, []
+
+    @property
+    def has_work(self):
+        return bool(self.queued or self.active)
+
+
+class _StubRouterReplica:
+    def __init__(self):
+        self.scheduler = _StubRouterSched()
+
+    def submit(self, req):
+        self.scheduler.queued += 1
+
+
+class RouterAffinityMachine(RuleBasedStateMachine):
+    """The sticky bounded-LRU map's state machine, mirrored against a
+    pure-python model. Invariants (checked after EVERY rule):
+
+      * the map never exceeds its bound, and overflow evicts exactly
+        the least-recently-USED key (OrderedDict equality is
+        order-sensitive, so the mirror pins the LRU order too);
+      * sticky beats depth: a mapped key routes to its bound replica
+        no matter how lopsided the fleet's outstanding work is;
+      * an unseen (or evicted-and-returning) key binds to the replica
+        with the LEAST outstanding work at decision time;
+      * replica drain never orphans keys: every binding remains a
+        valid replica index and keeps routing — a stale binding costs
+        a warm start, never an error.
+    """
+
+    N_REPLICAS = 3
+    MAX_KEYS = 3
+    BLOCK = 8
+
+    @initialize()
+    def setup(self):
+        import collections
+        from repro.serving import ReplicaRouter, Request
+        self.Request = Request
+        self.rt = ReplicaRouter(
+            [_StubRouterReplica() for _ in range(self.N_REPLICAS)],
+            policy="prefix", block_size=self.BLOCK,
+            max_keys=self.MAX_KEYS)
+        self.model = collections.OrderedDict()   # key -> replica
+        self.prompts = {}                        # prefix id -> prompt
+
+    def _prompt(self, pid):
+        if pid not in self.prompts:
+            # distinct leading blocks: each pid is its own affinity key
+            self.prompts[pid] = np.full(self.BLOCK, 5 + pid,
+                                        dtype=np.int32)
+        return self.prompts[pid]
+
+    def _least_depth(self):
+        return min(range(self.N_REPLICAS),
+                   key=lambda i: (self.rt.replicas[i].scheduler.queued
+                                  + len(self.rt.replicas[i]
+                                        .scheduler.active), i))
+
+    @rule(pid=st.integers(0, 7), load=st.booleans())
+    def route(self, pid, load):
+        from repro.serving import prefix_route_key
+        prompt = self._prompt(pid)
+        key = prefix_route_key(prompt, self.BLOCK)
+        sticky = self.model.get(key)
+        expect = sticky if sticky is not None else self._least_depth()
+        home = self.rt.route(self.Request(prompt=prompt))
+        assert home == expect, (
+            "sticky-beats-depth / least-depth bind violated",
+            pid, home, expect)
+        if sticky is not None:
+            self.model.move_to_end(key)
+        else:
+            self.model[key] = home
+            if len(self.model) > self.MAX_KEYS:
+                self.model.popitem(last=False)   # LRU eviction
+        if load:       # routed requests usually become outstanding work
+            self.rt.replicas[home].submit(None)
+
+    @rule(i=st.integers(0, N_REPLICAS - 1), n=st.integers(1, 5))
+    def add_load(self, i, n):
+        self.rt.replicas[i].scheduler.queued += n
+
+    @rule(i=st.integers(0, N_REPLICAS - 1))
+    def drain_replica(self, i):
+        """Replica finishes everything: keys bound to it must survive
+        (sticky by design — they are bindings, not work references)."""
+        sched = self.rt.replicas[i].scheduler
+        sched.queued, sched.active = 0, {}
+
+    @invariant()
+    def map_mirrors_model_and_respects_bound(self):
+        if not hasattr(self, "rt"):
+            return
+        assert len(self.rt._affinity) <= self.MAX_KEYS
+        assert self.rt._affinity == self.model   # content AND LRU order
+        assert all(0 <= i < self.N_REPLICAS
+                   for i in self.rt._affinity.values()), "orphan binding"
+
+
+RouterAffinityMachine.TestCase.settings = settings(
+    max_examples=40, stateful_step_count=30, deadline=None)
+TestRouterAffinityMachine = RouterAffinityMachine.TestCase
 
 
 # --------------------------------------------------------------------------
