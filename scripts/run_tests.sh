@@ -12,6 +12,9 @@
 #                                   # simulated host devices (sets XLA_FLAGS)
 #   scripts/run_tests.sh --bert     # BERT scoring/embedding family suite
 #   scripts/run_tests.sh --encdec   # encoder-decoder family / cross-arena
+#   scripts/run_tests.sh --kernels  # Pallas kernel suite + bench smoke
+#                                   # (kernel_throughput --iters 1), so a
+#                                   # kernel regression fails fast
 #   scripts/run_tests.sh --docs     # smoke-check docs/README code fences
 #   scripts/run_tests.sh --durations-report [out.json]
 #                                   # tier-1 run that also writes per-suite
@@ -59,6 +62,11 @@ fi
 if [[ "${1:-}" == "--encdec" ]]; then
   shift
   exec python -m pytest -x -q -m "encdec" "$@"
+fi
+if [[ "${1:-}" == "--kernels" ]]; then
+  shift
+  python -m pytest -x -q -m "kernels" "$@"
+  exec python -m benchmarks.kernel_throughput --iters 1
 fi
 if [[ "${1:-}" == "--docs" ]]; then
   shift

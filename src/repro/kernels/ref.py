@@ -144,3 +144,51 @@ def paged_attention_ref(q, k_arena, v_arena, pos_arena, tables, q_pos, *,
     live = jnp.any(ok, axis=2)                 # (B, S): row has a valid key
     out = jnp.where(live[:, :, None, None], out, 0.0)
     return out[:, 0] if squeeze else out
+
+
+def paged_attention_fused_ref(q, k_new, v_new, k_arena, v_arena, pos_arena,
+                              tables, q_pos, cursor, *, scale,
+                              causal: bool = True,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None):
+    """Scatter-then-attend oracle for `paged_attention_fused`: the
+    oracle CARRIES THE WRITE, so arena mutation is part of the pinned
+    contract rather than a side effect the tests could miss.
+
+    Mirrors the XLA decode branch's scatter exactly — row s of slot b
+    lands at logical ring row r = (cursor[b] + s) % ring_len, i.e.
+    arena[tables[b, r // block_size], r % block_size]; rows with
+    q_pos < 0 are routed to null row (0, 0) just like the XLA branch —
+    EXCEPT that the null block is then restored: the fused kernel never
+    writes new bytes into block 0 (a slot with no valid rows copies the
+    streamed null block through unchanged), so the oracle's arenas match
+    the kernel's bit-for-bit on EVERY block, null included. Attention
+    then runs `paged_attention_ref` on the post-scatter arenas.
+
+    Returns (out, k_arena, v_arena, pos_arena).
+    """
+    squeeze = q.ndim == 3
+    if squeeze:
+        q_pos_2d = q_pos[:, None]
+        k_new_4d, v_new_4d = k_new[:, None], v_new[:, None]
+    else:
+        q_pos_2d, k_new_4d, v_new_4d = q_pos, k_new, v_new
+    B, S = q_pos_2d.shape
+    bs = k_arena.shape[1]
+    ring = tables.shape[1] * bs
+    r = jax.lax.rem(cursor[:, None].astype(jnp.int32)
+                    + jnp.arange(S, dtype=jnp.int32), ring)
+    blk = jnp.take_along_axis(tables, r // bs, axis=1)
+    off = jax.lax.rem(r, bs)
+    valid = q_pos_2d >= 0
+    blk = jnp.where(valid, blk, 0)
+    off = jnp.where(valid, off, 0)
+    k2 = k_arena.at[blk, off].set(k_new_4d.astype(k_arena.dtype))
+    v2 = v_arena.at[blk, off].set(v_new_4d.astype(v_arena.dtype))
+    p2 = pos_arena.at[blk, off].set(q_pos_2d.astype(pos_arena.dtype))
+    k2 = k2.at[0].set(k_arena[0])              # null block is immutable
+    v2 = v2.at[0].set(v_arena[0])
+    p2 = p2.at[0].set(pos_arena[0])
+    out = paged_attention_ref(q, k2, v2, p2, tables, q_pos, scale=scale,
+                              causal=causal, window=window, softcap=softcap)
+    return out, k2, v2, p2

@@ -79,6 +79,31 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def op_counts(hlo_text: str, kinds=("scatter",)) -> Dict[str, int]:
+    """Count ops of the named kinds in an HLO or StableHLO dump.
+
+    Matches both spellings — HLO `scatter(...)` and StableHLO
+    `"stablehlo.scatter"(...)` — while the kind must START the op name,
+    so "scatter" does NOT match reduce-scatter / reduce_scatter and
+    "gather" does not match all-gather. Used to pin fusion claims
+    structurally: the fused paged-attention decode step must lower with
+    ZERO arena scatters where the XLA branch lowers three
+    (tests/test_paged_cache.py). NB count on the PRE-optimization
+    lowering for backend-portable results: the CPU backend's scatter
+    expander rewrites scatter into while loops during optimization.
+    """
+    counts = {k: 0 for k in kinds}
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(%?[\w.\-\"]+)\s*=\s*(.*)$", line.strip())
+        if not m:
+            continue
+        rhs = m.group(2)
+        for k in kinds:
+            if re.search(rf'(?:^|[^\w.\-])(?:\w+\.)?{k}"?\(', rhs):
+                counts[k] += 1
+    return counts
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
                    coll_bytes_total: float, n_chips: int) -> Dict[str, float]:
     """Roofline seconds. Inputs are GLOBAL totals; divide by chip count.

@@ -78,6 +78,7 @@ PAGED_ONLY_FLAGS = (
     ("--replicas", lambda a: a.replicas != 1),
     ("--route-policy", lambda a: a.route_policy is not None),
     ("--attn-kernel paged", lambda a: a.attn_kernel == "paged"),
+    ("--interpret", lambda a: a.interpret),
 )
 
 # Flags of the continuous engine's scheduler/traffic loop: valid with
@@ -108,6 +109,10 @@ def flag_errors(args) -> list:
             errs.append(
                 f"{' '.join(bad)}: only apply to the continuous "
                 f"engine's scheduler (--engine continuous)")
+    if paged and args.interpret and args.attn_kernel != "paged":
+        errs.append(
+            "--interpret: only applies to the Pallas kernel path "
+            "(--attn-kernel paged)")
     return errs
 
 
@@ -198,6 +203,12 @@ def build_parser():
                          "kernel (token-identical; interpret mode off-TPU; "
                          "requires --cache paged). Default: adopt the "
                          "arch config (usually 'xla')")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force Pallas interpret mode for --attn-kernel "
+                         "paged: the escape hatch for arena layouts that "
+                         "fail real-TPU tile alignment (block_size / "
+                         "head_dim off the 8/16 x 128 tile grid). Off-TPU "
+                         "interpret is already the default")
     ap.add_argument("--chunk-budget", type=int, default=None,
                     help="per-step token budget for chunked-prefill "
                          "admission: prompts prefill chunk by chunk in "
@@ -345,6 +356,7 @@ def main():
                 block_size=args.block_size,
                 slots_budget=args.slots_budget or None,
                 sampler=args.sampler, attn_kernel=args.attn_kernel,
+                kernel_interpret=True if args.interpret else None,
                 growth=args.growth or "lazy",
                 sched_policy=args.sched_policy,
                 slo_ms=args.slo_ms, preempt=args.preempt,

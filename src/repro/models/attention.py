@@ -51,6 +51,11 @@ class AttnConfig:
     # inside the fused Pallas kernel (kernels/paged_attention_kernel.py).
     # Only the paged serving branch reads this; token output is identical.
     decode_kernel: str = "xla"
+    # Pallas interpret-mode override for the paged kernel: None = auto
+    # (interpret off-TPU, compiled on TPU); True forces interpret — the
+    # escape hatch (serve.py --interpret) for arena layouts that fail
+    # TPU tile alignment (kernels/paged_attention_kernel.py).
+    kernel_interpret: Optional[bool] = None
 
 
 def attn_init(rng, cfg: AttnConfig, *, cross: bool = False, dtype=jnp.float32):
@@ -192,16 +197,49 @@ def attn_apply(
         tbl = cache["table"]                       # (B, max_blocks)
         bsz = cache["k"].shape[1]
         ring_len = tbl.shape[1] * bsz
-        r = jax.lax.rem(idx[:, None] + jnp.arange(S, dtype=jnp.int32),
-                        ring_len)                  # (B, S) logical rows
-        blk = jnp.take_along_axis(tbl, r // bsz, axis=1)
-        off = jax.lax.rem(r, bsz)
         k_new = maybe_constrain(k.astype(cache["k"].dtype),
                                 "data", None, None, "model")
         v_new = maybe_constrain(v.astype(cache["v"].dtype),
                                 "data", None, None, "model")
         q_pos = (positions if positions.ndim == 2
                  else jnp.broadcast_to(positions, (B, S))).astype(jnp.int32)
+        q = maybe_constrain(q, "data", None, None, "model")
+        if cfg.decode_kernel == "paged":
+            # Fused Pallas path: the block table rides into the kernel as
+            # a scalar-prefetch operand, K/V blocks stream HBM->VMEM
+            # directly — no (B, ring_len, kv, hd) materialization — and
+            # the K/V/pos scatter happens in the kernel EPILOGUE: arenas
+            # are aliased in/out and come back updated, so the three XLA
+            # arena round-trips below never exist on this path. Token
+            # output matches the XLA gather below to fp32 summation-order
+            # tolerance (both accumulate in fp32); the returned arenas
+            # match the XLA scatter bit-for-bit on every data block (the
+            # fused kernel never writes the null block — invalid rows
+            # write NOTHING instead of null row 0; both keep the null
+            # block's positions -1, so attention cannot see the
+            # difference). See kernels/paged_attention_kernel.py.
+            if kv_valid_len is not None:
+                raise NotImplementedError(
+                    "kv_valid_len is unsupported on the paged kernel path")
+            from repro.kernels.paged_attention_kernel import (
+                paged_attention_fused)
+            out, k_arena, v_arena, pos_arena = paged_attention_fused(
+                q, k_new, v_new, cache["k"], cache["v"], cache["pos"],
+                tbl, q_pos, idx,
+                scale=scale, causal=cfg.causal, window=cfg.sliding_window,
+                softcap=cfg.logit_softcap, interpret=cfg.kernel_interpret)
+            new_cache = {"k": k_arena, "v": v_arena, "pos": pos_arena,
+                         "index": idx + S}
+            out = out.astype(compute_dtype)
+            out = maybe_constrain(out, "data", None, None, "model")
+            out = out.reshape(B, S, h * hd)
+            return dense_apply(p["wo"], out, compute_dtype), new_cache
+        if cfg.decode_kernel != "xla":
+            raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
+        r = jax.lax.rem(idx[:, None] + jnp.arange(S, dtype=jnp.int32),
+                        ring_len)                  # (B, S) logical rows
+        blk = jnp.take_along_axis(tbl, r // bsz, axis=1)
+        off = jax.lax.rem(r, bsz)
         # Rows with a negative feed position (inactive slots; the padding
         # rows of a budget-truncated verify block) are routed to the null
         # block BY THE SCATTER, not just by their table being empty: a
@@ -217,26 +255,6 @@ def attn_apply(
         pos_arena = cache["pos"].at[blk, off].set(q_pos)
         new_cache = {"k": k_arena, "v": v_arena, "pos": pos_arena,
                      "index": idx + S}
-        q = maybe_constrain(q, "data", None, None, "model")
-        if cfg.decode_kernel == "paged":
-            # Fused Pallas path: the block table rides into the kernel as
-            # a scalar-prefetch operand and K/V blocks stream HBM->VMEM
-            # directly — no (B, ring_len, kv, hd) materialization. Token
-            # output matches the XLA gather below to fp32 summation-order
-            # tolerance (both accumulate in fp32; see kernel module doc).
-            if kv_valid_len is not None:
-                raise NotImplementedError(
-                    "kv_valid_len is unsupported on the paged kernel path")
-            from repro.kernels.paged_attention_kernel import paged_attention
-            out = paged_attention(
-                q, k_arena, v_arena, pos_arena, tbl, q_pos,
-                scale=scale, causal=cfg.causal, window=cfg.sliding_window,
-                softcap=cfg.logit_softcap).astype(compute_dtype)
-            out = maybe_constrain(out, "data", None, None, "model")
-            out = out.reshape(B, S, h * hd)
-            return dense_apply(p["wo"], out, compute_dtype), new_cache
-        if cfg.decode_kernel != "xla":
-            raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
         # block-table gather: (B, max_blocks, bsz, ...) -> (B, ring_len, ...)
         k = k_arena[tbl].reshape(B, ring_len, kv, hd).astype(compute_dtype)
         v = v_arena[tbl].reshape(B, ring_len, kv, hd).astype(compute_dtype)

@@ -60,6 +60,7 @@ class DecoderConfig:
     final_softcap: Optional[float] = None      # gemma2: 30.0
     post_block_norm: bool = False              # gemma2 pre+post norms
     attn_kernel: str = "xla"                   # paged decode: "xla" | "paged"
+    kernel_interpret: Optional[bool] = None    # Pallas interpret override
 
     # ffn
     activation: str = "silu"
@@ -105,7 +106,8 @@ class DecoderConfig:
             rope_theta=self.rope_theta, causal=True,
             sliding_window=self.sliding_window if local else None,
             logit_softcap=self.attn_softcap,
-            decode_kernel=self.attn_kernel)
+            decode_kernel=self.attn_kernel,
+            kernel_interpret=self.kernel_interpret)
 
     def moe_cfg(self) -> moe_lib.MoeConfig:
         return moe_lib.MoeConfig(

@@ -399,6 +399,26 @@ class PagedCachePool:
         self.cache = full
         self._mamba_slots = tuple(si for si, e in enumerate(layout)
                                   if e is None)
+        # Kernel-layout validation happens at POOL CONSTRUCTION, not at
+        # first decode: on real TPU a (block_size, head_dim) that misses
+        # the (8/16, 128) tile grid or blows the VMEM scratch budget
+        # raises here with the fix spelled out (ensure_kernel_fit), while
+        # off-TPU — or with the --interpret escape hatch — the same
+        # problems are recorded as advisory (tile_problems) because the
+        # interpret-mode kernel executes any layout. S is sized for the
+        # widest launch this pool will feed: the spec-verify query block
+        # (row_margin == spec_k - 1).
+        self.tile_problems: list = []
+        if attn_kernel == "paged":
+            from repro.kernels.paged_attention_kernel import ensure_kernel_fit
+            cfg = arch.cfg
+            arena_dtype = next(
+                s["k"].dtype for si, s in enumerate(full["slots"])
+                if si not in self._mamba_slots)
+            self.tile_problems = ensure_kernel_fit(
+                block_size, cfg.resolved_head_dim, cfg.n_heads,
+                cfg.n_kv_heads, arena_dtype, S=row_margin + 1,
+                interpret=getattr(cfg, "kernel_interpret", None))
         if self.mesh is None:
             self._insert_arena = _const(jax.jit(_arena_insert,
                                                 donate_argnums=0))

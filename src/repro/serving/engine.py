@@ -403,6 +403,7 @@ class ContinuousEngine:
                  slots_budget: Optional[int] = None,
                  share_prefix: bool = True, sampler=None,
                  attn_kernel: Optional[str] = None,
+                 kernel_interpret: Optional[bool] = None,
                  growth: str = "lazy", sched_policy="fifo",
                  slo_ms: Optional[float] = None, preempt: bool = True,
                  retain_blocks: Optional[int] = None, watermark: int = 0,
@@ -427,6 +428,11 @@ class ContinuousEngine:
             (kernels/paged_attention_kernel.py). Token-identical output;
             requires cache="paged". None adopts arch.cfg.attn_kernel
             (same convention as PagedCachePool).
+        kernel_interpret: Pallas interpret-mode override for
+            attn_kernel="paged" (serve.py --interpret): True forces
+            interpret mode — the escape hatch for arena layouts that
+            fail real-TPU tile alignment. None = auto (interpret
+            off-TPU, compiled on TPU). Requires attn_kernel="paged".
         growth: "lazy" (default) allocates decode blocks on demand and
             preempts on exhaustion; "eager" reserves whole chains at
             admission (the PR 3 contract — decode can never fail). Only
@@ -522,6 +528,10 @@ class ContinuousEngine:
         if attn_kernel == "paged" and cache != "paged":
             raise ValueError("attn_kernel='paged' requires cache='paged' "
                              "(the dense pool has no block tables)")
+        if kernel_interpret is not None and attn_kernel != "paged":
+            raise ValueError(
+                "kernel_interpret only applies to attn_kernel='paged' "
+                "(the XLA gather path has no Pallas kernel to interpret)")
         self.spec = spec_draft is not None
         if self.spec:
             if spec_k < 2:
@@ -547,10 +557,12 @@ class ContinuousEngine:
         self.spec_k = spec_k if self.spec else 1
         self.arch, self.params = apply_serving_policy(arch, params, policy)
         if (arch.kind == "decoder"
-                and attn_kernel != self.arch.cfg.attn_kernel):
+                and (attn_kernel != self.arch.cfg.attn_kernel
+                     or kernel_interpret != self.arch.cfg.kernel_interpret)):
             self.arch = dataclasses.replace(
                 self.arch, cfg=dataclasses.replace(
-                    self.arch.cfg, attn_kernel=attn_kernel))
+                    self.arch.cfg, attn_kernel=attn_kernel,
+                    kernel_interpret=kernel_interpret))
         # Live mesh: params shard per the distributed param rules, the
         # pool (and every jitted step below) per cache_pspec. Prefill and
         # chunk forwards need no explicit specs — sharded params

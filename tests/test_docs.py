@@ -130,6 +130,37 @@ def test_serving_doc_covers_speculative_decoding():
         assert flag in readme, f"README flag table lost {flag}"
 
 
+def test_kernels_doc_covers_epilogue_fusion():
+    """The scatter-in-epilogue rewrite of docs/kernels.md must keep its
+    anchors: the fused section with the aliasing rules (flattened-input
+    indices counting scalar-prefetch operands), the flush-map and
+    null-block contracts, the oracle-carries-the-write rationale, the
+    tile-padding table, and the autotuner section with a runnable
+    fence pointing at the checked-in tuned table; the README keeps the
+    `--interpret` flag row and the machine-readable bench artifact."""
+    path = ROOT / "docs" / "kernels.md"
+    kernels = path.read_text()
+    for anchor in ("## Scatter in the epilogue",
+                   "input_output_aliases",
+                   "The flush map",
+                   "Why the oracle carries the write",
+                   "Tile padding",
+                   "## The block/grid autotuner",
+                   "paged_attn_tuned.json",
+                   "BENCH_kernels.json"):
+        assert anchor in kernels, f"kernels.md lost its '{anchor}' anchor"
+    sect = kernels.split("## The block/grid autotuner", 1)[1]
+    sect = sect.split("## How", 1)[0]
+    assert any(code in sect for _, code in _fences(path, "bash")), (
+        "autotuner section lost its bash example")
+    assert (ROOT / "src/repro/configs/paged_attn_tuned.json").exists(), (
+        "checked-in tuned table missing")
+    readme = (ROOT / "README.md").read_text()
+    assert "--interpret" in readme, "README flag table lost --interpret"
+    assert "BENCH_kernels.json" in readme, (
+        "README lost the machine-readable kernel-bench artifact")
+
+
 def test_serving_doc_covers_sharded_router():
     """The live-sharded engine + multi-replica router section must keep
     its anchors: the exactness envelope (data mesh any policy; model

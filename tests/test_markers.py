@@ -38,7 +38,7 @@ EXPECTED_MODULE_MARKERS = {
     "test_exactness_envelope.py": {"serving", "sharded"},
     "test_fused_integration.py": set(),
     "test_hlo_cost.py": set(),
-    "test_kernels.py": set(),
+    "test_kernels.py": {"kernels"},
     "test_markers.py": set(),
     "test_metrics_and_launchers.py": set(),
     "test_models.py": set(),

@@ -88,6 +88,9 @@ _FLAG_ARGV = {
     "--replicas": ["--replicas", "2"],
     "--route-policy": ["--route-policy", "rr"],
     "--attn-kernel paged": ["--attn-kernel", "paged"],
+    # bare --interpret also fails the attn-kernel cross-check, so the
+    # clean-parse half of the matrix needs the kernel path enabled
+    "--interpret": ["--interpret", "--attn-kernel", "paged"],
     "--sched-policy": ["--sched-policy", "arrival-deadline"],
     "--slo-ms": ["--slo-ms", "100"],
     "--no-preempt": ["--no-preempt"],

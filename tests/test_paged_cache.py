@@ -20,6 +20,7 @@ The load-bearing claims, each asserted here (tier-1 unless marked slow):
     / head_dim-over-model and never model-shard integer bookkeeping.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -348,6 +349,75 @@ def test_attn_kernel_validation():
                          attn_kernel="mosaic")
     with pytest.raises(ValueError):
         PagedCachePool(arch, 2, MAX_LEN, block_size=8, attn_kernel="nope")
+    # the interpret escape hatch only exists on the Pallas kernel path
+    with pytest.raises(ValueError, match="kernel_interpret"):
+        ContinuousEngine(arch, params, max_batch=2, max_len=MAX_LEN,
+                         attn_kernel="xla", kernel_interpret=True)
+    # tile/VMEM validation runs at pool construction: off-TPU the test
+    # shapes (head_dim off the 128-lane grid) are ADVISORY, not fatal —
+    # the interpret-mode kernel executes any layout
+    pool = PagedCachePool(arch, 2, MAX_LEN, block_size=8,
+                          attn_kernel="paged")
+    assert isinstance(pool.tile_problems, list)
+    assert PagedCachePool(arch, 2, MAX_LEN, block_size=8,
+                          attn_kernel="xla").tile_problems == []
+
+
+def test_fused_kernel_lowers_zero_arena_scatters():
+    """Structural pin of the epilogue fusion: the decode step under
+    decode_kernel='paged' lowers with ZERO scatter ops — the K/V/pos
+    writes live inside the kernel against the ALIASED arenas — where the
+    XLA branch lowers (at least) the three arena scatters the fusion
+    removed. Counted in the pre-optimization lowering via
+    launch/hlo_analysis.op_counts (the CPU backend's optimizer expands
+    scatter into while loops, so the optimized text is not portable)."""
+    from repro.launch.hlo_analysis import op_counts
+    from repro.models.attention import AttnConfig, attn_apply, attn_init
+    rng = np.random.default_rng(0)
+    B, bs, nb, n_blocks = 2, 8, 3, 8
+    x = jnp.asarray(rng.normal(size=(B, 1, 16)), jnp.float32)
+    positions = jnp.zeros((B, 1), jnp.int32)
+    cache = {
+        "k": jnp.zeros((n_blocks, bs, 1, 8)),
+        "v": jnp.zeros((n_blocks, bs, 1, 8)),
+        "pos": jnp.full((n_blocks, bs), -1, jnp.int32),
+        "table": jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32),
+        "index": jnp.zeros((B,), jnp.int32),
+    }
+    counts = {}
+    for kern in ("xla", "paged"):
+        cfg = AttnConfig(d_model=16, n_heads=2, n_kv_heads=1, head_dim=8,
+                         decode_kernel=kern)
+        p = attn_init(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(lambda x, cache, p=p, cfg=cfg: attn_apply(
+            p, cfg, x, positions=positions, cache=cache))
+        hlo = step.lower(x, cache).as_text()
+        counts[kern] = op_counts(hlo, ("scatter",))["scatter"]
+    assert counts["xla"] >= 3, counts          # k, v, pos arena scatters
+    assert counts["paged"] == 0, counts        # the epilogue carries them
+
+
+def test_fused_and_xla_engines_agree_on_arena_bytes():
+    """Beyond token equality: after identical workloads the two kernel
+    paths leave BIT-IDENTICAL K/V/pos bytes in every DATA block of every
+    attention arena (same admission order -> same allocator decisions ->
+    same destinations; selection-only epilogue writes). The null block is
+    the one legal divergence: the XLA scatter parks invalid rows' K/V in
+    null row 0 where the fused kernel writes nothing — both keep its
+    positions -1, so attention cannot observe the difference."""
+    (ex, _), (ep, _) = _run_kernel_pair("gemma2-2b", None)
+    for si in ex.pool.maps:
+        a = ex.pool.cache["slots"][si]
+        b = ep.pool.cache["slots"][si]
+        np.testing.assert_array_equal(
+            np.asarray(a["pos"]), np.asarray(b["pos"]),
+            err_msg=f"slot-type {si} pos arenas diverged")
+        for part in ("k", "v"):
+            # arena layout (layers, blocks, bs, ...); skip only the null
+            # block (block 0), where the XLA scatter parks invalid rows
+            np.testing.assert_array_equal(
+                np.asarray(a[part][:, 1:]), np.asarray(b[part][:, 1:]),
+                err_msg=f"slot-type {si} {part} data blocks diverged")
 
 
 # --------------------------------------------------------------------------

@@ -249,3 +249,59 @@ def test_spec_validation_errors():
     hybrid, hparams = setup_arch("jamba-1.5-large-398b")
     with pytest.raises(ValueError, match="attention-only"):
         spec_engine(hybrid, hparams, (hybrid, hparams))
+
+
+def test_spec_fused_kernel_reject_churn_matches_and_arenas_agree():
+    """Reject churn on the scatter-in-epilogue kernel: a reject-heavy
+    draft makes most rounds roll the cursor back past rows the FUSED
+    verify step just wrote into the aliased arenas. Tokens must match
+    the XLA-kernel speculative engine bit-exactly and the verify step
+    must still trace once. Arena contract across the two kernel paths
+    (arena layout is (layers, blocks, block_size, ...); block 0 is the
+    null block):
+
+      * pos arenas are bit-identical EVERYWHERE — rollback invalidation
+        is a host-side scatter shared by both paths, and the fused
+        epilogue's position writes are selection-only;
+      * layer-0 K/V data blocks are bit-identical — layer-0 projections
+        see identical token embeddings, so any epilogue ADDRESSING bug
+        (wrong block/offset/wrap) shows up here bit-exactly;
+      * deeper layers' VALID rows agree to roundoff only — their K/V
+        embed the previous layer's attention output, where the fused
+        online-softmax and the XLA gather differ by summation order
+        (the exact bit-equality claim for fused vs scatter-then-kernel
+        under churn is test_kernels.py's rollback_churn differential);
+      * the null block's K/V may diverge (the XLA scatter parks
+        rejected/padding rows there; the fused kernel writes nothing)
+        but its positions stay -1 on both, so attention cannot see it."""
+    arch, params = setup_arch("qwen2.5-14b")
+    a = make_requests(arch, SSPEC, prefix=16)
+    ex = spec_engine(arch, params, draft_of(arch), policy="fp32",
+                     attn_kernel="xla")
+    ex.run_batch(a)
+    b = make_requests(arch, SSPEC, prefix=16)
+    ep = spec_engine(arch, params, draft_of(arch), policy="fp32",
+                     attn_kernel="paged")
+    ep.run_batch(b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.generated, rb.generated)
+    assert ep.spec_rounds > 0 and ep.drafted_tokens > ep.accepted_tokens
+    assert ep._verify._cache_size() == 1
+    assert ep._draft_step._cache_size() == 1
+    for si in ep.pool.maps:
+        xa = ex.pool.cache["slots"][si]
+        pa = ep.pool.cache["slots"][si]
+        np.testing.assert_array_equal(
+            np.asarray(xa["pos"]), np.asarray(pa["pos"]),
+            err_msg=f"slot-type {si} pos arenas diverged")
+        valid = np.asarray(xa["pos"]) >= 0          # (L, blocks, bs)
+        for part in ("k", "v"):
+            A, B = np.asarray(xa[part]), np.asarray(pa[part])
+            np.testing.assert_array_equal(
+                A[0, 1:], B[0, 1:],
+                err_msg=f"slot-type {si} layer-0 {part} blocks diverged")
+            np.testing.assert_allclose(
+                # one-ulp slack in the ARENA dtype (bf16: 2^-8 relative)
+                A[valid], B[valid], rtol=8e-3, atol=2e-4,
+                err_msg=f"slot-type {si} {part} valid rows diverged")
+    ep.pool.check_invariants()
